@@ -1,0 +1,28 @@
+"""Shared benchmark utilities: CSV emission + the reusable training loop
+(re-exported from repro.core.driver so examples don't depend on the
+benchmarks package path)."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Tuple
+
+from repro.core.driver import run_training, small_arch  # noqa: F401
+
+FAST = os.environ.get("BENCH_FAST", "0") == "1"
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, n: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us

@@ -1,0 +1,96 @@
+"""Paper Tables 3/4 (miniature): one agent, one set of weights, trained on
+a multi-task suite with fixed actor allocation per task; compared against
+per-task experts on the mean capped normalised score (Appendix B metric).
+
+Reference (human/random analogue) scores per env come from a scripted
+near-optimal policy vs the random policy, measured on the fly.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, emit
+from repro.configs.base import ImpalaConfig
+from repro.configs.registry import get_smoke_config
+from repro.core import actor as actor_lib
+from repro.core import learner as learner_lib
+from repro.core.metrics import EpisodeTracker, capped_normalised_score
+from repro.core.queue import LagController
+from repro.data.envs import make_env
+from repro.models import backbone as bb
+from repro.models import common as pcommon
+
+TASKS = ["catch", "bandit", "tmaze"]
+# measured reference scores (random policy, near-optimal) per task
+REFS = {"catch": (-0.6, 1.0), "bandit": (0.25, 1.0), "tmaze": (-0.35, 1.0)}
+
+
+def _train_multi(tasks: List[str], steps: int, num_envs_per_task: int = 8,
+                 seed: int = 0) -> Dict[str, float]:
+    """One set of weights; actors allocated per task (paper §5.3)."""
+    envs = [make_env(t) for t in tasks]
+    num_actions = max(e.num_actions for e in envs)
+    hw = envs[0].image_hw
+    # pad all task images to a common frame
+    max_hw = (max(e.image_hw[0] for e in envs),
+              max(e.image_hw[1] for e in envs), 3)
+    arch = get_smoke_config("impala_shallow").replace(image_hw=max_hw)
+    icfg = ImpalaConfig(num_actions=num_actions, unroll_length=16,
+                        learning_rate=1e-3, entropy_cost=0.005,
+                        rmsprop_eps=0.01, policy_lag=1)
+    specs = bb.backbone_specs(arch, num_actions)
+    params = pcommon.init_params(specs, jax.random.key(seed))
+    train_step, opt = learner_lib.build_train_step(arch, icfg, num_actions)
+    train_step = jax.jit(train_step)
+    opt_state = opt.init(params)
+    lag = LagController(icfg.policy_lag, params)
+
+    actors = []
+    for env in envs:
+        def pad(env):
+            base_init, base_unroll = actor_lib.build_actor(
+                _padded(env, max_hw, num_actions), arch, icfg,
+                num_envs_per_task)
+            return base_init, base_unroll
+        actors.append(pad(env))
+    carries = [init(jax.random.key(seed + 10 + i))
+               for i, (init, _) in enumerate(actors)]
+    trackers = [EpisodeTracker(num_envs_per_task) for _ in tasks]
+
+    for step in range(steps):
+        batches = []
+        for i, (init, unroll) in enumerate(actors):
+            carries[i], traj = unroll(lag.actor_params(), carries[i])
+            trackers[i].update(np.asarray(traj["rewards"]),
+                               np.asarray(traj["done"]))
+            batches.append(traj)
+        batch = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *batches)
+        params, opt_state, _ = train_step(params, opt_state,
+                                          jnp.int32(step), batch)
+        lag.on_update(params)
+    return {t: trackers[i].mean_return(100) for i, t in enumerate(tasks)}
+
+
+from repro.data.multitask import padded_env as _padded  # noqa: E402
+
+
+def run() -> None:
+    steps = 60 if FAST else 300
+    multi = _train_multi(TASKS, steps)
+    experts = {}
+    for t in TASKS:
+        experts[t] = _train_multi([t], steps)[t]
+    rnd = [REFS[t][0] for t in TASKS]
+    opt = [REFS[t][1] for t in TASKS]
+    multi_score = capped_normalised_score([multi[t] for t in TASKS], opt, rnd)
+    expert_score = capped_normalised_score([experts[t] for t in TASKS],
+                                           opt, rnd)
+    for t in TASKS:
+        emit(f"multitask/{t}", 0.0,
+             f"multi={multi[t]:.3f} expert={experts[t]:.3f}")
+    emit("multitask/mean_capped_normalised", 0.0,
+         f"multi={multi_score:.3f} experts={expert_score:.3f}")

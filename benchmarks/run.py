@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+#   Table 1  -> benchmarks.throughput   (coupled vs decoupled FPS)
+#   Table 2  -> benchmarks.corrections  (V-trace ablation +/- replay)
+#   Fig. 4   -> benchmarks.stability    (hyperparameter robustness)
+#   Fig. E.1 -> benchmarks.lag_sweep    (controlled policy lag)
+#   Table 3/4-> benchmarks.multitask    (multi-task vs experts, capped score)
+#   §3.1     -> benchmarks.vtrace_bench (learner V-trace microbench)
+#   §Roofline-> python -m repro.roofline.table (reads results/dryrun)
+#
+# Set BENCH_FAST=1 for a quick pass.
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", nargs="*", default=None,
+                   help="subset: throughput corrections stability "
+                        "lag_sweep multitask vtrace")
+    args = p.parse_args()
+    from benchmarks import (corrections, lag_sweep, multitask, stability,
+                            throughput, vtrace_bench)
+    suites = {
+        "vtrace": vtrace_bench.run,
+        "throughput": throughput.run,
+        "corrections": corrections.run,
+        "stability": stability.run,
+        "lag_sweep": lag_sweep.run,
+        "multitask": multitask.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name not in args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED: {failed}", flush=True)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

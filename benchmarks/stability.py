@@ -1,0 +1,34 @@
+"""Paper Figure 4 (bottom row): robustness across hyperparameter
+combinations. Sweep (learning rate x entropy cost) combinations for
+V-trace vs no-correction under lag; report returns sorted high-to-low.
+A flatter sorted curve = more robust (the paper's claim for IMPALA)."""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from benchmarks.common import FAST, emit, run_training
+from repro.configs.base import ImpalaConfig
+
+LRS = [5e-3, 2e-3, 5e-4]
+ENTS = [0.01, 0.003, 0.0003]
+
+
+def run() -> None:
+    steps = 100 if FAST else 250
+    for mode in ("vtrace", "none"):
+        finals = []
+        for lr, ent in itertools.product(LRS, ENTS):
+            icfg = ImpalaConfig(num_actions=4, unroll_length=16,
+                                learning_rate=lr, entropy_cost=ent,
+                                rmsprop_eps=0.01, policy_lag=8,
+                                correction=mode)
+            tracker, _ = run_training("bandit", icfg, num_envs=16,
+                                      steps=steps, seed=11)
+            finals.append(tracker.mean_return(200))
+        finals = sorted(finals, reverse=True)
+        emit(f"stability/bandit/{mode}", 0.0,
+             "sorted_returns=" + "|".join(f"{x:.2f}" for x in finals))
+        emit(f"stability/bandit/{mode}/area", 0.0,
+             f"mean={np.mean(finals):.3f} top3={np.mean(finals[:3]):.3f}")

@@ -1,0 +1,79 @@
+"""Paper Table 1: throughput (frames/sec) of coupled vs decoupled
+pipelines on two tasks — 'catch' (cheap, fixed-length; task-1 analogue)
+and 'chase' (variable-length episodes; task-2 analogue).
+
+Variants mirror Figure 2:
+  a2c_sync_step   act 1 step, learn nothing until batch step done, policy
+                  applied per env step in lockstep with learning barrier
+  a2c_sync_traj   unroll n steps with the CURRENT params, learn, repeat
+                  (batched A2C, sync trajectories)
+  impala          unroll with STALE params (queue + lag) so acting is
+                  decoupled from the learner's update cycle
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import FAST, emit, small_arch
+from repro.configs.base import ImpalaConfig
+from repro.core import actor as actor_lib
+from repro.core import learner as learner_lib
+from repro.core.queue import LagController
+from repro.data.envs import make_env
+from repro.models import backbone as bb
+from repro.models import common as pcommon
+
+
+def _measure(env_name: str, variant: str, num_envs: int = 32,
+             unroll: int = 20, iters: int = 20) -> float:
+    env = make_env(env_name)
+    arch = small_arch(env)
+    icfg = ImpalaConfig(num_actions=env.num_actions,
+                        unroll_length=1 if variant == "a2c_sync_step"
+                        else unroll,
+                        policy_lag=0 if variant.startswith("a2c") else 2)
+    specs = bb.backbone_specs(arch, env.num_actions)
+    params = pcommon.init_params(specs, jax.random.key(0))
+    init_fn, unroll_fn = actor_lib.build_actor(env, arch, icfg, num_envs)
+    train_step, opt = learner_lib.build_train_step(arch, icfg,
+                                                   env.num_actions)
+    train_step = jax.jit(train_step)
+    opt_state = opt.init(params)
+    carry = init_fn(jax.random.key(1))
+    lag = LagController(icfg.policy_lag, params)
+
+    steps_per_iter = unroll if variant == "a2c_sync_step" else 1
+    # warmup/compile
+    carry, traj = unroll_fn(lag.actor_params(), carry)
+    params, opt_state, _ = train_step(params, opt_state, jnp.int32(0), traj)
+    jax.block_until_ready(params)
+
+    frames = 0
+    t0 = time.perf_counter()
+    for it in range(iters):
+        for _ in range(steps_per_iter):
+            carry, traj = unroll_fn(lag.actor_params(), carry)
+            params, opt_state, _ = train_step(params, opt_state,
+                                              jnp.int32(it), traj)
+            lag.on_update(params)
+            frames += num_envs * icfg.unroll_length
+    jax.block_until_ready(params)
+    dt = time.perf_counter() - t0
+    return frames / dt
+
+
+def run() -> None:
+    iters = 5 if FAST else 20
+    for env_name in ("catch", "chase"):
+        fps = {}
+        for variant in ("a2c_sync_step", "a2c_sync_traj", "impala"):
+            fps[variant] = _measure(env_name, variant, iters=iters)
+            emit(f"throughput/{env_name}/{variant}",
+                 1e6 / max(fps[variant], 1e-9),
+                 f"fps={fps[variant]:.0f}")
+        emit(f"throughput/{env_name}/impala_speedup_vs_sync_step", 0.0,
+             f"x{fps['impala'] / max(fps['a2c_sync_step'], 1e-9):.2f}")

@@ -1,0 +1,37 @@
+"""V-trace microbenchmark: scan vs Pallas(interpret) vs O(T^2) reference at
+the paper's learner shapes (unroll n=100, batch 32) and at train_4k scale."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import vtrace as vt
+
+
+def _args(b, t, key=0):
+    ks = jax.random.split(jax.random.key(key), 5)
+    return (jax.random.normal(ks[0], (b, t)) * 0.3,
+            jnp.full((b, t), 0.99),
+            jax.random.normal(ks[1], (b, t)),
+            jax.random.normal(ks[2], (b, t)),
+            jax.random.normal(ks[3], (b,)))
+
+
+def run() -> None:
+    for (b, t, tag) in [(32, 100, "paper_n100_b32"),
+                        (256, 1024, "train1k_b256")]:
+        args = _args(b, t)
+        scan = jax.jit(lambda *a: vt.vtrace_scan(*a).vs)
+        us = timeit(lambda: jax.block_until_ready(scan(*args)), n=20)
+        emit(f"vtrace/{tag}/scan", us, f"tokens_per_s={b*t/us*1e6:.0f}")
+        from repro.kernels import ops
+        pal = lambda: jax.block_until_ready(
+            ops.vtrace(*args, impl="pallas")[0])
+        us_p = timeit(pal, n=3)
+        emit(f"vtrace/{tag}/pallas_interpret", us_p,
+             "interpret-mode (CPU correctness path, not TPU speed)")
+    args = _args(8, 64)
+    ref = jax.jit(lambda *a: vt.vtrace_reference(*a).vs)
+    us_r = timeit(lambda: jax.block_until_ready(ref(*args)), n=5)
+    emit("vtrace/ref_T64_b8/reference_quadratic", us_r, "oracle")

@@ -1,0 +1,99 @@
+"""Multi-task IMPALA with Population Based Training (paper §5.3 + App. F):
+a population of agents, each one-set-of-weights across a task suite, with
+PBT exploit/explore on (entropy cost, learning rate, RMSProp eps) and the
+mean capped human-normalised score as fitness.
+
+  PYTHONPATH=src python examples/multitask_pbt.py [--pop 4] [--rounds 6]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ImpalaConfig
+from repro.configs.registry import get_smoke_config
+from repro.core import actor as actor_lib
+from repro.core import learner as learner_lib
+from repro.core.metrics import EpisodeTracker, capped_normalised_score
+from repro.core.pbt import PBTController
+from repro.core.queue import LagController
+from repro.data.envs import make_env
+from repro.models import backbone as bb
+from repro.models import common
+
+TASKS = ["catch", "bandit"]
+REFS = {"catch": (-0.6, 1.0), "bandit": (0.25, 1.0)}
+
+
+def build_member(arch, num_actions, hypers, seed):
+    cfg = ImpalaConfig(num_actions=num_actions, unroll_length=16,
+                       learning_rate=hypers["learning_rate"],
+                       entropy_cost=hypers["entropy_cost"],
+                       rmsprop_eps=hypers["rmsprop_eps"], policy_lag=1)
+    train_step, opt = learner_lib.build_train_step(arch, cfg, num_actions)
+    return cfg, jax.jit(train_step), opt
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--pop", type=int, default=4)
+    p.add_argument("--rounds", type=int, default=6)
+    p.add_argument("--steps-per-round", type=int, default=40)
+    args = p.parse_args()
+
+    envs = {t: make_env(t) for t in TASKS}
+    num_actions = max(e.num_actions for e in envs.values())
+    hw = (max(e.image_hw[0] for e in envs.values()),
+          max(e.image_hw[1] for e in envs.values()), 3)
+    # shared-frame wrapper
+    from repro.data.multitask import padded_env
+    envs = {t: padded_env(e, hw, num_actions) for t, e in envs.items()}
+    arch = get_smoke_config("impala-shallow").replace(image_hw=hw)
+    specs = bb.backbone_specs(arch, num_actions)
+
+    pbt = PBTController(pop_size=args.pop, seed=0)
+    weights = [common.init_params(specs, jax.random.key(i))
+               for i in range(args.pop)]
+    opt_states = [None] * args.pop
+
+    for rnd in range(args.rounds):
+        for i in range(args.pop):
+            cfg, train_step, opt = build_member(arch, num_actions,
+                                                pbt.members[i].hypers, i)
+            if opt_states[i] is None:
+                opt_states[i] = opt.init(weights[i])
+            params = weights[i]
+            scores = []
+            for t, env in envs.items():
+                init_fn, unroll = actor_lib.build_actor(env, arch, cfg, 8)
+                carry = init_fn(jax.random.key(100 * rnd + i))
+                lag = LagController(cfg.policy_lag, params)
+                tracker = EpisodeTracker(8)
+                for step in range(args.steps_per_round):
+                    carry, traj = unroll(lag.actor_params(), carry)
+                    tracker.update(np.asarray(traj["rewards"]),
+                                   np.asarray(traj["done"]))
+                    params, opt_states[i], _ = train_step(
+                        params, opt_states[i], jnp.int32(step), traj)
+                    lag.on_update(params)
+                scores.append(tracker.mean_return(100))
+            weights[i] = params
+            fitness = capped_normalised_score(
+                scores, [REFS[t][1] for t in TASKS],
+                [REFS[t][0] for t in TASKS])
+            pbt.report_fitness(i, fitness)
+        # PBT evolution step
+        for i in range(args.pop):
+            new_h, copied = pbt.exploit_explore(i, rnd, weights)
+            tag = " (copied)" if copied else ""
+            print(f"round {rnd} member {i}: fitness="
+                  f"{pbt.members[i].fitness:.3f} "
+                  f"lr={new_h['learning_rate']:.2e} "
+                  f"ent={new_h['entropy_cost']:.2e}{tag}")
+    best = pbt.best()
+    print(f"\nbest member {best}: fitness {pbt.members[best].fitness:.3f}")
+
+
+if __name__ == "__main__":
+    main()

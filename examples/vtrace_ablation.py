@@ -1,0 +1,40 @@
+"""Reproduce the paper's Table 2 effect at CPU scale: the four off-policy
+correction variants under policy lag, with and without replay.
+
+  PYTHONPATH=src python examples/vtrace_ablation.py [--steps 400] [--lag 6]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.base import ImpalaConfig
+from repro.core.driver import run_training
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=400)
+    p.add_argument("--lag", type=int, default=6)
+    p.add_argument("--env", default="catch")
+    args = p.parse_args()
+
+    print(f"env={args.env} policy_lag={args.lag} steps={args.steps}")
+    print(f"{'variant':<14s} {'no-replay':>10s} {'replay':>10s}")
+    for mode in ("vtrace", "onestep_is", "eps", "none"):
+        row = []
+        for replay in (False, True):
+            cfg = ImpalaConfig(
+                num_actions=3, unroll_length=20, learning_rate=6e-4,
+                entropy_cost=0.003, rmsprop_eps=0.01, policy_lag=args.lag,
+                correction=mode, replay_fraction=0.5 if replay else 0.0,
+                replay_capacity=256)
+            tracker, _ = run_training(args.env, cfg, num_envs=32,
+                                      steps=args.steps, seed=7)
+            row.append(tracker.mean_return(200))
+        print(f"{mode:<14s} {row[0]:>10.3f} {row[1]:>10.3f}")
+    print("\nExpected qualitative ordering (paper Table 2): "
+          "vtrace >= onestep_is > eps/none, gap widening with replay.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Checkpointing: param/opt-state pytrees -> .npz + JSON treedef.
+
+No orbax on this box; this writes a flat npz of leaves plus a structure
+manifest, supports atomic save (tmp + rename), latest-symlink, and
+restores onto an existing abstract structure (so restored leaves can be
+device_put with the right shardings by the caller).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(directory: str, step: int, tree: PyTree,
+         extra: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "keys": sorted(leaves),
+                "extra": extra or {}}
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **leaves)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(directory: str, like: PyTree,
+            step: Optional[int] = None) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (values ignored)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    paths, treedef = flat
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape,
+                                                    np.shape(leaf))
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(jax.tree.structure(like), leaves)
+    return tree, step

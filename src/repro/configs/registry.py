@@ -1,0 +1,67 @@
+"""Architecture config registry: ``get_config(name)`` / ``list_configs()``.
+
+Each assigned architecture lives in its own module defining ``CONFIG`` (the
+exact assigned shape) and ``smoke_config()`` (a reduced variant for CPU
+smoke tests: <=2 layers, d_model <= 512, <= 4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+
+_ARCH_MODULES = [
+    "recurrentgemma_2b",
+    "granite_moe_1b_a400m",
+    "whisper_small",
+    "mamba2_1_3b",
+    "stablelm_1_6b",
+    "gemma_7b",
+    "qwen1_5_4b",
+    "llama_3_2_vision_11b",
+    "mistral_nemo_12b",
+    "olmoe_1b_7b",
+    "impala_shallow",
+    "impala_deep",
+]
+
+_ALIASES = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "whisper-small": "whisper_small",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "gemma-7b": "gemma_7b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "impala-shallow": "impala_shallow",
+    "impala-deep": "impala_deep",
+}
+
+ASSIGNED = _ARCH_MODULES[:10]
+
+
+def _module(name: str):
+    mod = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    if mod not in _ARCH_MODULES:
+        raise KeyError(f"unknown architecture {name!r}; known: {list_configs()}")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _module(name).smoke_config()
+
+
+def list_configs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in _ARCH_MODULES}

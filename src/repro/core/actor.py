@@ -1,0 +1,164 @@
+"""The IMPALA actor: forward-only policy inference against vectorized
+environments, emitting trajectories of (x_t, a_t, r_t, mu(a_t|x_t)) plus
+the initial recurrent state (paper §3).
+
+The actor's params are *stale* (k learner updates behind) — the driver
+controls the lag, which V-trace corrects on the learner. One ``unroll``
+call = one n-step trajectory batch, jitted end-to-end (the TPU/CPU
+analogue of the paper's dynamic-batched actor inference).
+
+Two agent kinds:
+  * impala_cnn — conv torso + LSTM; recurrent state carried across unrolls
+    and shipped with the trajectory (exactly the paper).
+  * token backbones — per-step `apply_decode` with a KV/recurrent cache;
+    the cache is reset at each unroll boundary (context = unroll).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ImpalaConfig
+from repro.data.envs import Env
+from repro.models import backbone as bb
+from repro.models import lstm as lstm_lib
+
+PyTree = Any
+
+
+class ActorCarry(NamedTuple):
+    env_state: PyTree
+    rng: jax.Array
+    obs_token: jax.Array       # (B,)
+    obs_image: jax.Array       # (B, H, W, C)
+    last_action: jax.Array     # (B,)
+    last_reward: jax.Array     # (B,)
+    done: jax.Array            # (B,)
+    lstm_state: PyTree         # ((B,W),(B,W)) or None-like zeros
+
+
+def build_actor(env: Env, arch_cfg: ArchConfig, cfg: ImpalaConfig,
+                num_envs: int):
+    """Returns (init_fn, unroll_fn).
+
+    init_fn(key) -> ActorCarry
+    unroll_fn(params, carry) -> (carry, trajectory dict)  [jitted]
+    """
+    num_actions = env.num_actions
+    t_len = cfg.unroll_length
+    is_cnn = arch_cfg.family == "impala_cnn"
+
+    def init_fn(key) -> ActorCarry:
+        keys = jax.random.split(key, num_envs + 1)
+        env_state = jax.vmap(env.reset)(keys[1:])
+        ts = jax.vmap(env.observe)(env_state)
+        lstm_state = lstm_lib.lstm_zero_state(num_envs, arch_cfg.lstm_width)
+        return ActorCarry(env_state, keys[0], ts.obs_token, ts.obs_image,
+                          jnp.zeros((num_envs,), jnp.int32),
+                          jnp.zeros((num_envs,), jnp.float32),
+                          jnp.zeros((num_envs,), bool),
+                          lstm_state)
+
+    def policy_step_cnn(params, carry: ActorCarry):
+        batch = {
+            "image": carry.obs_image[:, None],
+            "last_action": carry.last_action[:, None],
+            "last_reward": carry.last_reward[:, None],
+            "done": carry.done[:, None],
+            "lstm_state": carry.lstm_state,
+        }
+        out = bb.apply_train(params, batch, arch_cfg, num_actions)
+        return out.policy_logits[:, 0], out.cache  # cache = new lstm state
+
+    def sample(key, logits):
+        return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+    if is_cnn:
+        def unroll(params, carry: ActorCarry):
+            initial_lstm = carry.lstm_state
+
+            def step(c: ActorCarry, _):
+                rng, k_act, k_env = jax.random.split(c.rng, 3)
+                logits, lstm_state = policy_step_cnn(params, c)
+                action = sample(k_act, logits)
+                logp = jax.nn.log_softmax(logits)[
+                    jnp.arange(num_envs), action]
+                env_keys = jax.random.split(k_env, num_envs)
+                env_state, ts = jax.vmap(env.step)(c.env_state, action,
+                                                   env_keys)
+                out = {"obs_token": c.obs_token, "obs_image": c.obs_image,
+                       "last_action": c.last_action,
+                       "last_reward": c.last_reward, "done_in": c.done,
+                       "action": action, "reward": ts.reward,
+                       "done": ts.done, "behaviour_logprob": logp}
+                nc = ActorCarry(env_state, rng, ts.obs_token, ts.obs_image,
+                                action, ts.reward, ts.done, lstm_state)
+                return nc, out
+
+            carry2, traj = jax.lax.scan(step, carry, None, length=t_len)
+            traj = jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), traj)
+            traj = _finalize(traj, carry2, initial_lstm)
+            return carry2, traj
+    else:
+        cache_len = t_len + 1
+
+        def unroll(params, carry: ActorCarry):
+            cache = bb.cache_init(num_envs, cache_len, arch_cfg)
+
+            def step(state, i):
+                c, cache = state
+                rng, k_act, k_env = jax.random.split(c.rng, 3)
+                out = bb.apply_decode(params, c.obs_token[:, None], cache,
+                                      i.astype(jnp.int32), arch_cfg,
+                                      num_actions)
+                logits = out.policy_logits[:, 0]
+                action = sample(k_act, logits)
+                logp = jax.nn.log_softmax(logits)[
+                    jnp.arange(num_envs), action]
+                env_keys = jax.random.split(k_env, num_envs)
+                env_state, ts = jax.vmap(env.step)(c.env_state, action,
+                                                   env_keys)
+                outp = {"obs_token": c.obs_token,
+                        "last_action": c.last_action,
+                        "last_reward": c.last_reward, "done_in": c.done,
+                        "action": action, "reward": ts.reward,
+                        "done": ts.done, "behaviour_logprob": logp}
+                nc = ActorCarry(env_state, rng, ts.obs_token, c.obs_image,
+                                action, ts.reward, ts.done, c.lstm_state)
+                return (nc, out.cache), outp
+
+            (carry2, _), traj = jax.lax.scan(step, (carry, cache),
+                                             jnp.arange(t_len))
+            traj = jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1), traj)
+            traj = _finalize(traj, carry2, None)
+            return carry2, traj
+
+    def _finalize(traj: Dict, carry2: ActorCarry, initial_lstm):
+        """Append bootstrap observation x_{n+1} and package."""
+        out = {
+            "actions": traj["action"],
+            "rewards": traj["reward"],
+            "discounts": cfg.discount * (1.0 -
+                                         traj["done"].astype(jnp.float32)),
+            "behaviour_logprob": traj["behaviour_logprob"],
+            "done": traj["done"],
+        }
+        if is_cnn:
+            out["obs_image"] = jnp.concatenate(
+                [traj["obs_image"], carry2.obs_image[:, None]], axis=1)
+            out["last_action"] = jnp.concatenate(
+                [traj["last_action"], carry2.last_action[:, None]], axis=1)
+            out["last_reward"] = jnp.concatenate(
+                [traj["last_reward"], carry2.last_reward[:, None]], axis=1)
+            out["done_in"] = jnp.concatenate(
+                [traj["done_in"], carry2.done[:, None]], axis=1)
+            out["lstm_state"] = initial_lstm
+        else:
+            out["obs_token"] = jnp.concatenate(
+                [traj["obs_token"], carry2.obs_token[:, None]], axis=1)
+        return out
+
+    return init_fn, jax.jit(unroll)

@@ -1,0 +1,84 @@
+"""The four off-policy correction variants compared in paper §5.2.2:
+
+  1. 'none'       — no correction (on-policy n-step Bellman targets and
+                    plain advantages, even though the data is off-policy).
+  2. 'eps'        — like 'none', but log pi is computed as log(pi + eps)
+                    in the policy-gradient loss (GA3C-style stabilizer).
+  3. 'onestep_is' — no correction of V targets; the policy gradient
+                    advantage is multiplied by the 1-step truncated IS
+                    weight rho_s ("V-trace without traces").
+  4. 'vtrace'     — full V-trace (Eq. 1).
+
+Each returns (vs, pg_advantages) as (B, T) stop-gradient arrays.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ImpalaConfig
+from repro.core import vtrace as vtrace_lib
+
+
+def nstep_returns(discounts, rewards, values, bootstrap_value):
+    """On-policy n-step Bellman targets (Eq. 2): reverse scan of
+    G_s = r_s + gamma_s G_{s+1}, G_n = bootstrap."""
+    def body(acc, xs):
+        r, d = xs
+        acc = r + d * acc
+        return acc, acc
+
+    xs = (jnp.moveaxis(rewards.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(discounts.astype(jnp.float32), 1, 0))
+    _, gs = jax.lax.scan(body, bootstrap_value.astype(jnp.float32), xs,
+                         reverse=True)
+    del values
+    return jnp.moveaxis(gs, 0, 1)
+
+
+def compute_correction(cfg: ImpalaConfig, behaviour_logprob, target_logits,
+                       actions, discounts, rewards, values, bootstrap_value,
+                       impl: str = "scan") -> Tuple[jax.Array, jax.Array]:
+    """Dispatch on cfg.correction. Returns (vs, pg_advantages)."""
+    mode = cfg.correction
+    if mode == "vtrace":
+        ret = vtrace_lib.vtrace_from_logits(
+            behaviour_logprob, target_logits, actions, discounts, rewards,
+            values, bootstrap_value, rho_bar=cfg.rho_bar, c_bar=cfg.c_bar,
+            lambda_=cfg.lambda_, impl=impl)
+        pg_adv = ret.pg_advantages
+        if getattr(cfg, "pg_q_estimate", "vtrace") == "baseline_v":
+            # Appendix E.3 variant: q_s = r_s + gamma V(x_{s+1}) — uses no
+            # information from the current rollout beyond one step (worse
+            # in the paper's Figs. E.3/E.4; kept for the ablation).
+            logp = vtrace_lib.action_log_probs(target_logits, actions)
+            rho = jnp.exp(logp - behaviour_logprob)
+            if cfg.rho_bar is not None:
+                rho = jnp.minimum(cfg.rho_bar, rho)
+            v_tp1 = jnp.concatenate(
+                [values[:, 1:].astype(jnp.float32),
+                 bootstrap_value.astype(jnp.float32)[:, None]], axis=1)
+            pg_adv = rho * (rewards.astype(jnp.float32) +
+                            discounts.astype(jnp.float32) * v_tp1 -
+                            values.astype(jnp.float32))
+            pg_adv = jax.lax.stop_gradient(pg_adv)
+        return ret.vs, pg_adv
+
+    vs = nstep_returns(discounts, rewards, values, bootstrap_value)
+    vs_tp1 = jnp.concatenate(
+        [vs[:, 1:], bootstrap_value.astype(jnp.float32)[:, None]], axis=1)
+    adv = (rewards.astype(jnp.float32) + discounts.astype(jnp.float32) *
+           vs_tp1 - values.astype(jnp.float32))
+    if mode == "onestep_is":
+        logp = vtrace_lib.action_log_probs(target_logits, actions)
+        rho = jnp.exp(logp - behaviour_logprob)
+        if cfg.rho_bar is not None:
+            rho = jnp.minimum(cfg.rho_bar, rho)
+        adv = rho * adv
+    elif mode in ("none", "eps"):
+        pass  # 'eps' only changes the log-prob inside the loss
+    else:
+        raise ValueError(mode)
+    return jax.lax.stop_gradient(vs), jax.lax.stop_gradient(adv)

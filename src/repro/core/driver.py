@@ -1,0 +1,58 @@
+"""Reusable CPU training loop: the IMPALA pipeline (actors -> queue with
+policy lag -> V-trace learner, optional replay) over a named env. Used by
+benchmarks, examples, and tests."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ImpalaConfig
+from repro.configs.registry import get_smoke_config
+from repro.core import actor as actor_lib
+from repro.core import learner as learner_lib
+from repro.core.metrics import EpisodeTracker
+from repro.core.queue import LagController
+from repro.core.replay import ReplayBuffer, mix_batches
+from repro.data.envs import make_env
+from repro.models import backbone as bb
+from repro.models import common as pcommon
+
+
+def small_arch(env) -> ArchConfig:
+    return get_smoke_config("impala_shallow").replace(image_hw=env.image_hw)
+
+
+def run_training(env_name: str, icfg: ImpalaConfig, num_envs: int,
+                 steps: int, seed: int = 0,
+                 arch: Optional[ArchConfig] = None
+                 ) -> Tuple[EpisodeTracker, Dict]:
+    env = make_env(env_name)
+    arch = arch or small_arch(env)
+    specs = bb.backbone_specs(arch, env.num_actions)
+    params = pcommon.init_params(specs, jax.random.key(seed))
+    init_fn, unroll = actor_lib.build_actor(env, arch, icfg, num_envs)
+    train_step, opt = learner_lib.build_train_step(arch, icfg,
+                                                   env.num_actions)
+    train_step = jax.jit(train_step)
+    opt_state = opt.init(params)
+    carry = init_fn(jax.random.key(seed + 1))
+    lag = LagController(icfg.policy_lag, params)
+    buf = ReplayBuffer(icfg.replay_capacity, np.random.default_rng(seed))
+    tracker = EpisodeTracker(num_envs)
+    metrics: Dict = {}
+    for step in range(steps):
+        carry, traj = unroll(lag.actor_params(), carry)
+        tracker.update(np.asarray(traj["rewards"]),
+                       np.asarray(traj["done"]))
+        batch = traj
+        if icfg.replay_fraction > 0:
+            buf.add_batch(traj)
+            rep = buf.sample(num_envs)
+            batch = mix_batches(traj, rep, icfg.replay_fraction)
+        params, opt_state, metrics = train_step(params, opt_state,
+                                                jnp.int32(step), batch)
+        lag.on_update(params)
+    return tracker, metrics

@@ -1,0 +1,85 @@
+"""V-trace actor-critic losses (paper §4.2).
+
+Total = pg_loss + baseline_cost * baseline_loss + entropy_cost * entropy_loss,
+*summed* over batch and time (paper Table D.1 note: "the loss is summed
+across the batch and time dimensions").
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ImpalaConfig
+from repro.core import corrections, vtrace as vtrace_lib
+
+
+def reward_clip(rewards: jax.Array, mode: str) -> jax.Array:
+    if mode == "abs_one":
+        return jnp.clip(rewards, -1.0, 1.0)
+    if mode == "soft_asymmetric":
+        # Optimistic Asymmetric Clipping (Fig. D.1):
+        # 0.3 * min(tanh(r), 0) + 5.0 * max(tanh(r), 0)
+        t = jnp.tanh(rewards)
+        return 0.3 * jnp.minimum(t, 0.0) + 5.0 * jnp.maximum(t, 0.0)
+    if mode == "none":
+        return rewards
+    raise ValueError(mode)
+
+
+def policy_gradient_loss(logits, actions, advantages, eps: float = 0.0):
+    """-(sum) adv * log pi(a|x); advantages are already stop-gradient."""
+    if eps:
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        logp_all = jnp.log(probs + eps)
+        logp = jnp.take_along_axis(logp_all, actions[..., None], axis=-1)[..., 0]
+    else:
+        logp = vtrace_lib.action_log_probs(logits, actions)
+    return -jnp.sum(jax.lax.stop_gradient(advantages) * logp)
+
+
+def baseline_loss(values, vs):
+    """0.5 * sum (v_s - V(x_s))^2."""
+    return 0.5 * jnp.sum(jnp.square(jax.lax.stop_gradient(vs) -
+                                    values.astype(jnp.float32)))
+
+
+def entropy_loss(logits):
+    """Negative entropy summed (so that adding it *with positive coef*
+    maximizes entropy): sum_s sum_a pi log pi."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    return jnp.sum(p * logp)
+
+
+def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
+                impl: str = "scan") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """The full IMPALA learner loss on a batch of trajectories.
+
+    batch: actions (B,T) int32, rewards (B,T) f32, discounts (B,T) f32,
+           behaviour_logprob (B,T) f32.
+    target_logits: (B,T,A) f32; values: (B,T) f32 — note the trained
+    values cover steps 0..T-1 and the *bootstrap* V(x_T) must be provided
+    as batch['bootstrap_value'] (B,), produced by evaluating the learner
+    network on x_T (we evaluate on T+1 steps and split outside).
+    """
+    rewards = reward_clip(batch["rewards"], cfg.reward_clip)
+    vs, pg_adv = corrections.compute_correction(
+        cfg, batch["behaviour_logprob"], target_logits, batch["actions"],
+        batch["discounts"], rewards, values, batch["bootstrap_value"],
+        impl=impl)
+    eps = cfg.eps_correction if cfg.correction == "eps" else 0.0
+    pg = policy_gradient_loss(target_logits, batch["actions"], pg_adv, eps)
+    bl = baseline_loss(values, vs)
+    ent = entropy_loss(target_logits)
+    total = pg + cfg.baseline_cost * bl + cfg.entropy_cost * ent
+    metrics = {
+        "loss/total": total,
+        "loss/pg": pg,
+        "loss/baseline": bl,
+        "loss/entropy": ent,
+        "vtrace/mean_vs": jnp.mean(vs),
+        "vtrace/mean_pg_adv": jnp.mean(pg_adv),
+    }
+    return total, metrics

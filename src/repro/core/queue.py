@@ -1,0 +1,51 @@
+"""Host-side trajectory queue between actors and learner (paper Fig. 1).
+
+In the paper, actors on many machines push trajectories into a queue that
+the learner drains. Here the queue is an in-process ring buffer carrying
+jax pytrees, plus ``LagController`` — a deterministic stand-in for the
+asynchrony: it holds the learner's parameter history and serves actors
+the parameters from ``lag`` updates ago, making the off-policy gap of
+Fig. E.1 an explicit, reproducible quantity.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Any, Deque, List, Optional
+
+import jax
+
+PyTree = Any
+
+
+class TrajectoryQueue:
+    def __init__(self, capacity: int = 16):
+        self._q: Deque[PyTree] = collections.deque(maxlen=capacity)
+        self.dropped = 0
+        self.pushed = 0
+
+    def put(self, traj: PyTree) -> None:
+        if len(self._q) == self._q.maxlen:
+            self.dropped += 1
+        self._q.append(traj)
+        self.pushed += 1
+
+    def get(self) -> Optional[PyTree]:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class LagController:
+    """Serves actor parameters k learner-updates behind (policy lag)."""
+
+    def __init__(self, lag: int, params: PyTree):
+        self.lag = max(0, lag)
+        self._hist: Deque[PyTree] = collections.deque(maxlen=self.lag + 1)
+        self._hist.append(params)
+
+    def on_update(self, params: PyTree) -> None:
+        self._hist.append(params)
+
+    def actor_params(self) -> PyTree:
+        return self._hist[0]

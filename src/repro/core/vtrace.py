@@ -1,0 +1,145 @@
+"""V-trace (paper §4, Eq. 1) — the off-policy actor-critic correction.
+
+    v_s = V(x_s) + sum_{t=s}^{s+n-1} gamma^{t-s} (prod_{i=s}^{t-1} c_i) delta_t V
+    delta_t V = rho_t (r_t + gamma V(x_{t+1}) - V(x_t))
+    rho_t = min(rho_bar, pi(a_t|x_t)/mu(a_t|x_t)),  c_i = lambda * min(c_bar, ...)
+
+Computed via the recursion of Remark 1:
+    v_s - V(x_s) = delta_s V + gamma_s c_s (v_{s+1} - V(x_{s+1}))
+
+All tensors are batch-major (B, T); ``bootstrap_value`` is V(x_{s+n}) (B,).
+Three implementations:
+  * ``vtrace_reference``  — O(T^2) literal Eq. (1), the test oracle;
+  * ``vtrace_scan``       — reverse ``lax.scan`` (production CPU/TPU path);
+  * ``impl='pallas'``     — the Pallas TPU kernel in ``repro.kernels``.
+
+Gradients must not flow through the targets: callers receive
+``stop_gradient``-ed ``vs``/``pg_advantages`` (paper §4.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class VTraceReturns:
+    vs: jax.Array              # (B, T) V-trace value targets
+    pg_advantages: jax.Array   # (B, T) rho_s (r_s + gamma v_{s+1} - V(x_s))
+
+
+def _clipped_weights(log_rhos, rho_bar, c_bar, lambda_):
+    rhos = jnp.exp(log_rhos)
+    rho_t = jnp.minimum(rho_bar, rhos) if rho_bar is not None else rhos
+    c_t = jnp.minimum(c_bar, rhos) if c_bar is not None else rhos
+    return rho_t, lambda_ * c_t
+
+
+def vtrace_scan(log_rhos, discounts, rewards, values, bootstrap_value,
+                rho_bar: Optional[float] = 1.0, c_bar: Optional[float] = 1.0,
+                lambda_: float = 1.0) -> VTraceReturns:
+    """Reverse-scan V-trace. All (B, T) except bootstrap_value (B,)."""
+    log_rhos = log_rhos.astype(jnp.float32)
+    discounts = discounts.astype(jnp.float32)
+    rewards = rewards.astype(jnp.float32)
+    values = values.astype(jnp.float32)
+    bootstrap_value = bootstrap_value.astype(jnp.float32)
+
+    rho_t, c_t = _clipped_weights(log_rhos, rho_bar, c_bar, lambda_)
+    values_tp1 = jnp.concatenate(
+        [values[:, 1:], bootstrap_value[:, None]], axis=1)
+    deltas = rho_t * (rewards + discounts * values_tp1 - values)
+
+    def body(acc, xs):
+        delta, disc, c = xs
+        acc = delta + disc * c * acc
+        return acc, acc
+
+    xs = (jnp.moveaxis(deltas, 1, 0), jnp.moveaxis(discounts, 1, 0),
+          jnp.moveaxis(c_t, 1, 0))
+    _, accs = jax.lax.scan(body, jnp.zeros_like(bootstrap_value), xs,
+                           reverse=True)
+    vs_minus_v = jnp.moveaxis(accs, 0, 1)
+    vs = values + vs_minus_v
+
+    vs_tp1 = jnp.concatenate([vs[:, 1:], bootstrap_value[:, None]], axis=1)
+    # pg uses its own (possibly different) clipping; paper uses rho_bar too
+    pg_adv = rho_t * (rewards + discounts * vs_tp1 - values)
+    return VTraceReturns(jax.lax.stop_gradient(vs),
+                         jax.lax.stop_gradient(pg_adv))
+
+
+def vtrace_reference(log_rhos, discounts, rewards, values, bootstrap_value,
+                     rho_bar: Optional[float] = 1.0,
+                     c_bar: Optional[float] = 1.0,
+                     lambda_: float = 1.0) -> VTraceReturns:
+    """Literal O(T^2) Eq. (1) — used as the oracle in tests."""
+    log_rhos = jnp.asarray(log_rhos, jnp.float32)
+    b, t = log_rhos.shape
+    rho_t, c_t = _clipped_weights(log_rhos, rho_bar, c_bar, lambda_)
+    values = jnp.asarray(values, jnp.float32)
+    rewards = jnp.asarray(rewards, jnp.float32)
+    discounts = jnp.asarray(discounts, jnp.float32)
+    values_tp1 = jnp.concatenate(
+        [values[:, 1:], jnp.asarray(bootstrap_value, jnp.float32)[:, None]],
+        axis=1)
+    deltas = rho_t * (rewards + discounts * values_tp1 - values)
+
+    vs = []
+    for s in range(t):
+        # direct product form: sum_t gamma^{t-s} (prod c_i) delta_t
+        total = jnp.zeros((b,), jnp.float32)
+        coef = jnp.ones((b,), jnp.float32)
+        for u in range(s, t):
+            total = total + coef * deltas[:, u]
+            coef = coef * discounts[:, u] * c_t[:, u]
+        vs.append(values[:, s] + total)
+    vs = jnp.stack(vs, axis=1)
+    vs_tp1 = jnp.concatenate(
+        [vs[:, 1:], jnp.asarray(bootstrap_value, jnp.float32)[:, None]], axis=1)
+    pg_adv = rho_t * (rewards + discounts * vs_tp1 - values)
+    return VTraceReturns(vs, pg_adv)
+
+
+def vtrace(log_rhos, discounts, rewards, values, bootstrap_value,
+           rho_bar: Optional[float] = 1.0, c_bar: Optional[float] = 1.0,
+           lambda_: float = 1.0, impl: str = "scan") -> VTraceReturns:
+    """Dispatching entry point. impl: 'scan' | 'pallas' | 'reference'."""
+    if impl == "scan":
+        return vtrace_scan(log_rhos, discounts, rewards, values,
+                           bootstrap_value, rho_bar, c_bar, lambda_)
+    if impl == "reference":
+        return vtrace_reference(log_rhos, discounts, rewards, values,
+                                bootstrap_value, rho_bar, c_bar, lambda_)
+    if impl == "pallas":
+        from repro.kernels import ops
+        vs, pg = ops.vtrace(log_rhos, discounts, rewards, values,
+                            bootstrap_value, rho_bar=rho_bar, c_bar=c_bar,
+                            lambda_=lambda_)
+        return VTraceReturns(jax.lax.stop_gradient(vs),
+                             jax.lax.stop_gradient(pg))
+    raise ValueError(impl)
+
+
+def vtrace_from_logits(behaviour_logprob, target_logits, actions, discounts,
+                       rewards, values, bootstrap_value,
+                       rho_bar: Optional[float] = 1.0,
+                       c_bar: Optional[float] = 1.0,
+                       lambda_: float = 1.0,
+                       impl: str = "scan") -> VTraceReturns:
+    """Compute log importance ratios from the learner's logits and the
+    behaviour log-probability shipped in the trajectory (the actor sends
+    mu(a_t|x_t) with each trajectory — paper §3)."""
+    target_logprob = action_log_probs(target_logits, actions)
+    log_rhos = target_logprob - behaviour_logprob
+    return vtrace(log_rhos, discounts, rewards, values, bootstrap_value,
+                  rho_bar, c_bar, lambda_, impl=impl)
+
+
+def action_log_probs(logits, actions):
+    """logits (B,T,A) f32, actions (B,T) int32 -> (B,T) log pi(a|x)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, actions[..., None], axis=-1)[..., 0]

@@ -1,0 +1,283 @@
+"""Pure-JAX environments (the data substrate — everything vmappable/jittable).
+
+Five tasks echoing the paper's DMLab suite at CPU scale:
+  catch        reactive control (ball + paddle)
+  rooms        navigation + collection ('rooms_collect_good_objects'-like)
+  tmaze        memory (cue at start, decision at the end — needs the LSTM)
+  chase        pursuit of a scripted bot, variable-length episodes
+               (throughput Table 1 'task 2' analogue)
+  bandit       contextual bandit (pure credit assignment)
+
+API: each env is an ``Env`` with ``reset(key) -> state`` and
+``step(state, action, key) -> (state, TimeStep)``; episodes auto-reset and
+signal boundaries through ``done``. Observations come in two forms: a
+token id (LLM backbones) and a rendered uint8 image (the paper's conv
+agents).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class TimeStep(NamedTuple):
+    obs_token: jax.Array    # () int32
+    obs_image: jax.Array    # (H, W, 3) uint8
+    reward: jax.Array       # () f32
+    done: jax.Array         # () bool  (episode ended at this transition)
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    name: str
+    num_actions: int
+    vocab_size: int
+    image_hw: Tuple[int, int, int]
+    reset: Callable[[jax.Array], PyTree]
+    step: Callable[[PyTree, jax.Array, jax.Array], Tuple[PyTree, TimeStep]]
+    observe: Callable[[PyTree], TimeStep]
+
+
+def _blank_image(hw):
+    return jnp.zeros(hw, jnp.uint8)
+
+
+def _paint(img, r, c, channel, value=255):
+    return img.at[r, c, channel].set(value)
+
+
+# ---------------------------------------------------------------------------
+# catch
+
+
+def make_catch(rows: int = 10, cols: int = 5) -> Env:
+    hw = (rows, cols, 3)
+
+    class S(NamedTuple):
+        ball_r: jax.Array
+        ball_c: jax.Array
+        paddle: jax.Array
+        t: jax.Array
+
+    def _obs(s: S, reward=0.0, done=False) -> TimeStep:
+        token = (s.ball_r * cols + s.ball_c) * cols + s.paddle
+        img = _blank_image(hw)
+        img = _paint(img, s.ball_r, s.ball_c, 0)
+        img = _paint(img, rows - 1, s.paddle, 1)
+        return TimeStep(token.astype(jnp.int32), img,
+                        jnp.float32(reward), jnp.asarray(done))
+
+    def reset(key):
+        return S(jnp.int32(0), jax.random.randint(key, (), 0, cols),
+                 jnp.int32(cols // 2), jnp.int32(0))
+
+    def step(s: S, action, key):
+        paddle = jnp.clip(s.paddle + action - 1, 0, cols - 1)
+        ball_r = s.ball_r + 1
+        done = ball_r >= rows - 1
+        reward = jnp.where(done,
+                           jnp.where(paddle == s.ball_c, 1.0, -1.0), 0.0)
+        nxt = S(ball_r, s.ball_c, paddle, s.t + 1)
+        fresh = reset(key)
+        nxt = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        ts = _obs(nxt, reward, done)
+        return nxt, ts
+
+    return Env("catch", 3, rows * cols * cols, hw, reset, step,
+               lambda s: _obs(s))
+
+
+# ---------------------------------------------------------------------------
+# rooms (gridworld collection)
+
+
+def make_rooms(n: int = 7, num_objects: int = 4, horizon: int = 80) -> Env:
+    hw = (n, n, 3)
+
+    class S(NamedTuple):
+        pos: jax.Array          # (2,) int32
+        objects: jax.Array      # (num_objects, 2) int32
+        alive: jax.Array        # (num_objects,) bool
+        t: jax.Array
+
+    def _obs(s: S, reward=0.0, done=False) -> TimeStep:
+        ncol = jnp.sum(~s.alive)
+        token = (s.pos[0] * n + s.pos[1]) + n * n * ncol
+        img = _blank_image(hw)
+        img = img.at[s.pos[0], s.pos[1], 1].set(255)
+        img = img.at[s.objects[:, 0], s.objects[:, 1], 0].set(
+            jnp.where(s.alive, 255, 0).astype(jnp.uint8))
+        return TimeStep(token.astype(jnp.int32), img,
+                        jnp.float32(reward), jnp.asarray(done))
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.randint(k1, (2,), 0, n)
+        objects = jax.random.randint(k2, (num_objects, 2), 0, n)
+        return S(pos, objects, jnp.ones((num_objects,), bool), jnp.int32(0))
+
+    moves = jnp.array([[-1, 0], [1, 0], [0, -1], [0, 1], [0, 0]])
+
+    def step(s: S, action, key):
+        pos = jnp.clip(s.pos + moves[action], 0, n - 1)
+        hit = s.alive & jnp.all(s.objects == pos[None], axis=1)
+        reward = jnp.sum(hit).astype(jnp.float32)
+        alive = s.alive & ~hit
+        t = s.t + 1
+        done = (t >= horizon) | ~jnp.any(alive)
+        nxt = S(pos, s.objects, alive, t)
+        fresh = reset(key)
+        nxt = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return nxt, _obs(nxt, reward, done)
+
+    return Env("rooms", 5, n * n * (num_objects + 1), hw, reset, step,
+               lambda s: _obs(s))
+
+
+# ---------------------------------------------------------------------------
+# tmaze (memory)
+
+
+def make_tmaze(length: int = 10) -> Env:
+    hw = (3, length + 1, 3)
+
+    class S(NamedTuple):
+        pos: jax.Array
+        cue: jax.Array   # 0/1
+        t: jax.Array
+
+    def _obs(s: S, reward=0.0, done=False) -> TimeStep:
+        show_cue = s.pos == 0
+        token = s.pos * 3 + jnp.where(show_cue, s.cue + 1, 0)
+        img = _blank_image(hw)
+        img = img.at[1, s.pos, 1].set(255)
+        img = img.at[0, 0, 2].set(
+            jnp.where(show_cue, (s.cue + 1) * 100, 0).astype(jnp.uint8))
+        return TimeStep(token.astype(jnp.int32), img,
+                        jnp.float32(reward), jnp.asarray(done))
+
+    def reset(key):
+        return S(jnp.int32(0), jax.random.randint(key, (), 0, 2), jnp.int32(0))
+
+    def step(s: S, action, key):
+        at_end = s.pos >= length - 1
+        # actions: 0 forward, 1 up (choose), 2 down (choose)
+        choosing = at_end & (action > 0)
+        correct = (action - 1) == s.cue
+        reward = jnp.where(choosing, jnp.where(correct, 1.0, -1.0), 0.0)
+        pos = jnp.clip(s.pos + (action == 0), 0, length - 1)
+        t = s.t + 1
+        done = choosing | (t >= 3 * length)
+        nxt = S(pos, s.cue, t)
+        fresh = reset(key)
+        nxt = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return nxt, _obs(nxt, reward, done)
+
+    return Env("tmaze", 3, (length + 1) * 3, hw, reset, step,
+               lambda s: _obs(s))
+
+
+# ---------------------------------------------------------------------------
+# chase (variable-length pursuit; scripted bot)
+
+
+def make_chase(n: int = 9, horizon: int = 120) -> Env:
+    hw = (n, n, 3)
+
+    class S(NamedTuple):
+        agent: jax.Array
+        bot: jax.Array
+        t: jax.Array
+        caught: jax.Array
+
+    def _obs(s: S, reward=0.0, done=False) -> TimeStep:
+        token = (s.agent[0] * n + s.agent[1]) * n * n + (s.bot[0] * n + s.bot[1])
+        img = _blank_image(hw)
+        img = img.at[s.agent[0], s.agent[1], 1].set(255)
+        img = img.at[s.bot[0], s.bot[1], 0].set(255)
+        return TimeStep(token.astype(jnp.int32), img,
+                        jnp.float32(reward), jnp.asarray(done))
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        return S(jax.random.randint(k1, (2,), 0, n),
+                 jax.random.randint(k2, (2,), 0, n),
+                 jnp.int32(0), jnp.int32(0))
+
+    moves = jnp.array([[-1, 0], [1, 0], [0, -1], [0, 1], [0, 0]])
+
+    def step(s: S, action, key):
+        agent = jnp.clip(s.agent + moves[action], 0, n - 1)
+        # bot runs away along the axis of largest distance gain
+        delta = jnp.sign(s.bot - agent)
+        delta = jnp.where(delta == 0,
+                          jax.random.randint(key, (2,), -1, 2), delta)
+        bot = jnp.clip(s.bot + delta, 0, n - 1)
+        tagged = jnp.all(agent == bot)
+        reward = jnp.where(tagged, 1.0, -0.01)
+        caught = s.caught + tagged
+        t = s.t + 1
+        # variable-length episodes: ends on 3 tags or horizon
+        done = (caught >= 3) | (t >= horizon)
+        nxt = S(agent, bot, t, caught)
+        fresh = reset(jax.random.fold_in(key, 1))
+        nxt = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return nxt, _obs(nxt, reward, done)
+
+    return Env("chase", 5, n * n * n * n, hw, reset, step, lambda s: _obs(s))
+
+
+# ---------------------------------------------------------------------------
+# bandit (contextual)
+
+
+def make_bandit(num_contexts: int = 16, num_actions: int = 4) -> Env:
+    hw = (4, 4, 3)
+
+    class S(NamedTuple):
+        ctx: jax.Array
+
+    def _obs(s: S, reward=0.0, done=False) -> TimeStep:
+        img = _blank_image(hw)
+        img = img.at[s.ctx // 4, s.ctx % 4, 2].set(255)
+        return TimeStep(s.ctx.astype(jnp.int32), img,
+                        jnp.float32(reward), jnp.asarray(done))
+
+    def reset(key):
+        return S(jax.random.randint(key, (), 0, num_contexts))
+
+    def step(s: S, action, key):
+        reward = jnp.where(action == (s.ctx % num_actions), 1.0, 0.0)
+        nxt = reset(key)
+        return nxt, _obs(nxt, reward, True)
+
+    return Env("bandit", num_actions, num_contexts, hw, reset, step,
+               lambda s: _obs(s))
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+ENV_MAKERS = {
+    "catch": make_catch,
+    "rooms": make_rooms,
+    "tmaze": make_tmaze,
+    "chase": make_chase,
+    "bandit": make_bandit,
+}
+
+
+def make_env(name: str, **kw) -> Env:
+    return ENV_MAKERS[name](**kw)
+
+
+def make_suite(names=("catch", "rooms", "tmaze", "chase", "bandit")):
+    """A multi-task suite with a shared (max) action/vocab space."""
+    envs = [make_env(n) for n in names]
+    return envs

@@ -1,0 +1,37 @@
+"""Multi-task suite utilities (paper §5.3): wrap heterogeneous envs to a
+shared observation frame + action space so one agent (one set of weights)
+can be trained across tasks with per-task actor allocation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.envs import Env, TimeStep
+
+
+def common_frame(envs: Sequence[Env]) -> Tuple[Tuple[int, int, int], int]:
+    hw = (max(e.image_hw[0] for e in envs),
+          max(e.image_hw[1] for e in envs), 3)
+    num_actions = max(e.num_actions for e in envs)
+    return hw, num_actions
+
+
+def padded_env(env: Env, max_hw, num_actions: int) -> Env:
+    """Pad images to a common frame; clamp out-of-range actions."""
+
+    def fix_ts(ts: TimeStep) -> TimeStep:
+        img = jnp.zeros(max_hw, jnp.uint8)
+        img = jax.lax.dynamic_update_slice(img, ts.obs_image, (0, 0, 0))
+        return TimeStep(ts.obs_token, img, ts.reward, ts.done)
+
+    def step(s, a, key):
+        a = jnp.minimum(a, env.num_actions - 1)
+        s, ts = env.step(s, a, key)
+        return s, fix_ts(ts)
+
+    return dataclasses.replace(
+        env, num_actions=num_actions, image_hw=max_hw, step=step,
+        observe=lambda s: fix_ts(env.observe(s)))

@@ -1,0 +1,90 @@
+"""Pallas TPU flash-decode kernel: one query token per sequence against a
+long KV cache, GQA-aware — the IMPALA actor's per-step inference hot spot
+(``serve_step`` with a 32k/500k context).
+
+Layout: q (B, K, G, D) (query heads grouped under their kv head);
+k/v (B, S, K, D); additive bias (B, S) (0 valid / -inf masked).
+Grid = (B, K, S chunks); S chunks iterate fastest with the online-softmax
+running (max, sum, acc) state in VMEM scratch. Output is rescaled and
+written on every chunk step (the final chunk's write is the result), so
+no extra epilogue pass is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_S_CHUNK = 1024
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float):
+    sj = pl.program_id(2)
+
+    @pl.when(sj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                      # (G, D)
+    k = k_ref[0, :, 0, :]                # (S_chunk, D)
+    v = v_ref[0, :, 0, :]                # (S_chunk, D)
+    bias = bias_ref[0, :]                # (S_chunk,)
+
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    s = s + bias[None, :]                # (G, S_chunk)
+    m_prev = m_ref[0]                    # (G,) stored as (1, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[0] * corr + jnp.sum(p, axis=-1)
+    acc = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v.astype(jnp.float32))
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    acc_ref[...] = acc
+    o_ref[0, 0] = (acc / jnp.maximum(l_new, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, bias, s_chunk: int = DEFAULT_S_CHUNK,
+                            interpret: bool = True):
+    """q: (B, H, D); k/v: (B, S, K, D); bias: (B, S). Returns (B, H, D)."""
+    b, h, d = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5
+    s_chunk = min(s_chunk, s)
+    sp = (-s) % s_chunk
+    if sp:
+        k = jnp.pad(k, ((0, 0), (0, sp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, sp)), constant_values=NEG_INF)
+    ss = s + sp
+    ns = ss // s_chunk
+    qg = q.reshape(b, kh, g, d)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale),
+        grid=(b, kh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, sj: (i, j, 0, 0)),
+            pl.BlockSpec((1, s_chunk, 1, d), lambda i, j, sj: (i, sj, j, 0)),
+            pl.BlockSpec((1, s_chunk, 1, d), lambda i, j, sj: (i, sj, j, 0)),
+            pl.BlockSpec((1, s_chunk), lambda i, j, sj: (i, sj)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, sj: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, g), jnp.float32),
+            pltpu.VMEM((1, g), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, bias)
+    return out.reshape(b, h, d)

@@ -1,0 +1,124 @@
+"""Pallas TPU flash-attention forward (prefill/training attention).
+
+GQA-aware causal attention with optional sliding window — the compute hot
+spot of ``prefill_32k``. Grid = (B, H, q blocks, kv blocks); kv blocks
+iterate fastest with the online-softmax running state (m, l, acc) in VMEM
+scratch. Fully-masked kv blocks (beyond the causal frontier or outside
+the window) are skipped with ``pl.when``, so causal work is ~S^2/2 and
+windowed work is O(S*W) — unlike the masked-dense jnp path, nothing is
+computed then thrown away.
+
+Layout: q (B, T, H, D); k/v (B, S, K, D); blocks (q_blk, D) x (kv_blk, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_Q_BLOCK = 256
+DEFAULT_KV_BLOCK = 256
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, q_blk: int, kv_blk: int, causal: bool,
+                  window: int, t: int, s: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_blk
+    kv_start = ki * kv_blk
+    # block-level skip: kv block entirely after the causal frontier, or
+    # entirely before the window
+    live = jnp.bool_(True)
+    if causal:
+        live &= kv_start <= q_start + q_blk - 1
+    if window:
+        live &= kv_start + kv_blk - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :]                  # (q_blk, D)
+        k = k_ref[0, :, 0, :]                  # (kv_blk, D)
+        v = v_ref[0, :, 0, :]
+        sc = jnp.dot(q.astype(jnp.float32),
+                     k.astype(jnp.float32).T) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (q_blk, kv_blk), 0)
+        k_pos = kv_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_blk, kv_blk), 1)
+        mask = k_pos < s                        # padded keys
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        sc = jnp.where(mask, sc, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None] +
+                        jnp.dot(p, v.astype(jnp.float32)))
+        m_ref[...] = m_new
+
+    o_ref[0, :, 0, :] = (acc_ref[...] /
+                         jnp.maximum(l_ref[...], 1e-30)[:, None]
+                         ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           q_block: int = DEFAULT_Q_BLOCK,
+                           kv_block: int = DEFAULT_KV_BLOCK,
+                           interpret: bool = True):
+    """q: (B,T,H,D); k/v: (B,S,K,D) with H % K == 0. Returns (B,T,H,D)."""
+    b, t, h, d = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = d ** -0.5
+    q_block = min(q_block, t)
+    kv_block = min(kv_block, s)
+    tp = (-t) % q_block
+    sp = (-s) % kv_block
+    if tp:
+        q = jnp.pad(q, ((0, 0), (0, tp), (0, 0), (0, 0)))
+    if sp:
+        k = jnp.pad(k, ((0, 0), (0, sp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp), (0, 0), (0, 0)))
+    nq = (t + tp) // q_block
+    nk = (s + sp) // kv_block
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, q_blk=q_block,
+                          kv_blk=kv_block, causal=causal, window=window,
+                          t=t, s=s),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, 1, d),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, kv_block, 1, d),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, kv_block, 1, d),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, 1, d),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t + tp, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :t]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel for the diagonal linear recurrence
+``h_t = a_t * h_{t-1} + b_t`` — the sequential core shared by the RG-LRU
+(recurrentgemma) and the Mamba-2 cross-chunk state pass.
+
+Layout: (T, N) float32 with the channel dimension on lanes. Grid =
+(N blocks, T chunks); T chunks iterate fastest (sequential on TPU) with
+the running state carried in VMEM scratch, so HBM traffic is exactly one
+read of (a, b) and one write of h — the recurrence never leaves VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_T_CHUNK = 256
+DEFAULT_N_BLOCK = 512
+
+
+def _scan_kernel(a_ref, b_ref, h0_ref, h_ref, carry_ref, *, t_chunk: int):
+    tj = pl.program_id(1)
+
+    @pl.when(tj == 0)
+    def _init():
+        carry_ref[...] = h0_ref[...]
+
+    def body(s, h):
+        h = a_ref[s, :] * h + b_ref[s, :]
+        h_ref[s, :] = h
+        return h
+
+    carry_ref[0, :] = jax.lax.fori_loop(0, t_chunk, body, carry_ref[0, :])
+
+
+def linear_scan_pallas(a, b, h0=None,
+                       t_chunk: int = DEFAULT_T_CHUNK,
+                       n_block: int = DEFAULT_N_BLOCK,
+                       interpret: bool = True):
+    """a, b: (T, N) f32; h0: (N,) or None. Returns h (T, N)."""
+    t, n = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((n,), jnp.float32)
+    t_chunk = min(t_chunk, t)
+    n_block = min(n_block, n)
+    tp = (-t) % t_chunk
+    npad = (-n) % n_block
+    if tp or npad:
+        a = jnp.pad(a, ((0, tp), (0, npad)), constant_values=1.0)
+        b = jnp.pad(b, ((0, tp), (0, npad)))
+        h0 = jnp.pad(h0, (0, npad))
+    tt, nn = t + tp, n + npad
+    nt, nb = tt // t_chunk, nn // n_block
+
+    h = pl.pallas_call(
+        functools.partial(_scan_kernel, t_chunk=t_chunk),
+        grid=(nb, nt),
+        in_specs=[
+            pl.BlockSpec((t_chunk, n_block), lambda i, j: (j, i)),
+            pl.BlockSpec((t_chunk, n_block), lambda i, j: (j, i)),
+            pl.BlockSpec((1, n_block), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((t_chunk, n_block), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((tt, nn), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, n_block), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0[None, :])
+    return h[:t, :n]

@@ -1,0 +1,88 @@
+"""Jit'd dispatching wrappers over the Pallas kernels.
+
+``impl='auto'`` selects the Pallas kernel on TPU backends and the pure-jnp
+reference elsewhere (this container is CPU-only, where the kernels run in
+interpret mode — used for validation, not speed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import vtrace as vtrace_k
+from repro.kernels import linear_scan as linear_scan_k
+from repro.kernels import decode_attention as decode_k
+from repro.kernels import flash_attention as flash_k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def vtrace(log_rhos, discounts, rewards, values, bootstrap_value,
+           rho_bar: Optional[float] = 1.0, c_bar: Optional[float] = 1.0,
+           lambda_: float = 1.0, impl: str = "auto"
+           ) -> Tuple[jax.Array, jax.Array]:
+    """Batch-major (B, T) inputs, like ``repro.core.vtrace``.
+
+    Returns (vs, pg_advantages) each (B, T) f32.
+    """
+    impl_r = _resolve(impl)
+    rhos = jnp.exp(log_rhos.astype(jnp.float32))
+    rho = jnp.minimum(rho_bar, rhos) if rho_bar is not None else rhos
+    c = lambda_ * (jnp.minimum(c_bar, rhos) if c_bar is not None else rhos)
+    v = values.astype(jnp.float32)
+    vtp1 = jnp.concatenate([v[:, 1:],
+                            bootstrap_value.astype(jnp.float32)[:, None]], 1)
+    args = tuple(x.T for x in (rho, c, discounts.astype(jnp.float32),
+                               rewards.astype(jnp.float32), v, vtp1))
+    if impl_r == "ref":
+        vs, pg = ref.vtrace_ref(*args)
+    else:
+        vs, pg = vtrace_k.vtrace_pallas(*args, interpret=not _on_tpu())
+    return vs.T, pg.T
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def linear_scan(a, b, h0=None, impl: str = "auto") -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t. a, b: (T, N) f32."""
+    impl_r = _resolve(impl)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if impl_r == "ref":
+        return ref.linear_scan_ref(a, b, h0)
+    return linear_scan_k.linear_scan_pallas(a, b, h0,
+                                            interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "causal", "window"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    impl: str = "auto") -> jax.Array:
+    """Prefill/training GQA attention. q (B,T,H,D), k/v (B,S,K,D)."""
+    impl_r = _resolve(impl)
+    if impl_r == "ref":
+        return ref.flash_attention_ref(q, k, v, causal, window)
+    return flash_k.flash_attention_pallas(q, k, v, causal=causal,
+                                          window=window,
+                                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def decode_attention(q, k, v, bias, impl: str = "auto") -> jax.Array:
+    """q (B,H,D), k/v (B,S,K,D), bias (B,S) additive. Returns (B,H,D)."""
+    impl_r = _resolve(impl)
+    if impl_r == "ref":
+        return ref.decode_attention_ref(q, k, v, bias)
+    return decode_k.decode_attention_pallas(q, k, v, bias,
+                                            interpret=not _on_tpu())

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def vtrace_ref(rho, c, discounts, rewards, values, values_tp1
+               ) -> Tuple[jax.Array, jax.Array]:
+    """All inputs (T, B) float32 (time-major, matching the kernel layout).
+
+    acc_s = delta_s + disc_s * c_s * acc_{s+1};  vs_s = v_s + acc_s
+    pg_adv_s = rho_s * (r_s + disc_s * (v_tp1_s + acc_{s+1}) - v_s)
+    Returns (vs, pg_adv), each (T, B).
+    """
+    t = rho.shape[0]
+    acc = jnp.zeros_like(rho[0])
+    vs = []
+    pg = []
+    for s in reversed(range(t)):
+        pg_s = rho[s] * (rewards[s] + discounts[s] * (values_tp1[s] + acc)
+                         - values[s])
+        delta = rho[s] * (rewards[s] + discounts[s] * values_tp1[s] - values[s])
+        acc = delta + discounts[s] * c[s] * acc
+        vs.append(values[s] + acc)
+        pg.append(pg_s)
+    vs = jnp.stack(vs[::-1], axis=0)
+    pg = jnp.stack(pg[::-1], axis=0)
+    return vs, pg
+
+
+def linear_scan_ref(a, b, h0: Optional[jax.Array] = None) -> jax.Array:
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (T, N) float32; h0: (N,) or None (zeros). Returns h (T, N).
+    """
+    if h0 is None:
+        h0 = jnp.zeros_like(a[0])
+
+    def body(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    _, hs = jax.lax.scan(body, h0, (a, b))
+    return hs
+
+
+def flash_attention_ref(q, k, v, causal: bool = True,
+                        window: int = 0) -> jax.Array:
+    """Full (masked-dense) GQA attention oracle for the flash kernel.
+
+    q: (B,T,H,D); k/v: (B,S,K,D). Softmax in f32."""
+    b, t, h, d = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, t, kh, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, t, h, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, bias) -> jax.Array:
+    """Single-token GQA attention against a KV cache.
+
+    q: (B, H, D); k, v: (B, S, K, D); bias: (B, S) additive (0 or -inf).
+    Returns (B, H, D). Softmax in f32.
+    """
+    b, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    scores = scores + bias[:, None, None, :]
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh, record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the dry-run needs 512 placeholder host devices. Smoke tests and
+benchmarks import other modules and see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k \
+      [--multi-pod] [--out results/dryrun] [--rules baseline]
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+
+def run_pair(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str, rules_name: str = "baseline",
+             vtrace_impl: str = "scan",
+             moe_impl: str = "shard_map_a2a",
+             mixed_precision: bool = False,
+             remat_off: bool = False) -> dict:
+    from repro.configs.base import INPUT_SHAPES
+    from repro.configs.registry import get_config
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import HW, make_production_mesh
+    from repro.roofline import analysis
+    from repro.sharding.rules import Rules
+    from repro.sharding import profiles
+
+    shape = INPUT_SHAPES[shape_name]
+    arch = get_config(arch_name)
+    used_name = arch_name
+    if shape_name == "long_500k" and arch_name == "mistral-nemo-12b":
+        from repro.configs.mistral_nemo_12b import swa_variant
+        arch = swa_variant()
+        used_name = arch.name
+    # unroll layers so cost_analysis FLOPs/bytes are honest (a lax.scan
+    # while-body is counted once regardless of trip count)
+    arch = arch.replace(scan_layers=False)
+    if arch.moe is not None and moe_impl:
+        import dataclasses as _dc
+        arch = arch.replace(moe=_dc.replace(arch.moe, dispatch_impl=moe_impl))
+    if remat_off:
+        arch = arch.replace(remat=False)
+
+    tag = rules_name
+    if arch.moe is not None and moe_impl == "dense_einsum":
+        tag = rules_name + "+densemoe"
+    if mixed_precision:
+        tag = tag + "+mp"
+    if remat_off:
+        tag = tag + "+noremat"
+    rec = {
+        "arch": arch_name, "arch_used": used_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "rules": tag, "moe_impl": moe_impl if arch.moe else None,
+        "status": "pending",
+    }
+    ok, why = steps_lib.pair_supported(arch, shape)
+    if not ok:
+        rec["status"] = "skip"
+        rec["reason"] = why
+        return _finish(rec, out_dir)
+
+    t0 = time.time()
+    try:
+        if rules_name == "tp2d":
+            from repro.launch.mesh import make_mesh_2d_tp
+            mesh = make_mesh_2d_tp(multi_pod=multi_pod)
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        rules = Rules(mesh, profiles.get_profile(rules_name, arch, shape))
+        lowered, meta = steps_lib.lower_pair(
+            arch, shape, mesh, rules, vtrace_impl=vtrace_impl,
+            mixed_precision=mixed_precision)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from repro.roofline import memory_model, flops_model
+        mem_model = memory_model.estimate(arch, shape, rules)
+        a_flops, a_bytes = flops_model.step_cost(arch, shape, n_devices=(
+            512 if multi_pod else 256))
+        n_dev = 512 if multi_pod else 256
+        mf = analysis.model_flops(arch, meta["params"], shape,
+                                  per_device=True, n_devices=n_dev)
+        roof = analysis.analyse(cost, hlo, HW, model_flops=mf)
+        rec.update({
+            "status": "ok",
+            "n_params": meta["params"],
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_bytes": (mem.argument_size_in_bytes +
+                                        mem.output_size_in_bytes +
+                                        mem.temp_size_in_bytes -
+                                        mem.alias_size_in_bytes),
+            },
+            # analytic per-device TPU HBM model (CPU temp accounting is a
+            # parallel-scheduler upper bound; see roofline/memory_model.py)
+            "memory_model": mem_model,
+            "cost": {
+                "flops_per_device": roof.flops_per_device,
+                "bytes_per_device": roof.bytes_per_device,
+            },
+            "collectives": roof.collectives,
+            # hlo_* terms come from cost_analysis (blind to inner chunk
+            # scans); analytic_* from roofline/flops_model.py. The table
+            # uses analytic flops/bytes + HLO collectives.
+            "analytic": {
+                "flops_per_device": a_flops,
+                "bytes_per_device": a_bytes,
+                "compute_s": a_flops / HW["peak_flops_bf16"],
+                "memory_s": a_bytes / HW["hbm_bw"],
+            },
+            "roofline": {
+                "hlo_compute_s": roof.compute_s,
+                "hlo_memory_s": roof.memory_s,
+                "compute_s": a_flops / HW["peak_flops_bf16"],
+                "memory_s": a_bytes / HW["hbm_bw"],
+                "collective_s": roof.collective_s,
+                "bottleneck": max(
+                    {"compute": a_flops / HW["peak_flops_bf16"],
+                     "memory": a_bytes / HW["hbm_bw"],
+                     "collective": roof.collective_s}.items(),
+                    key=lambda kv: kv[1])[0],
+                "model_flops_per_device": mf,
+                "useful_flops_ratio": mf / max(a_flops, 1.0),
+            },
+            "hlo_bytes": len(hlo),
+        })
+    except Exception as e:  # noqa: BLE001 — record failures, don't crash sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _finish(rec, out_dir)
+
+
+def _finish(rec: dict, out_dir: str) -> dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        pod = "pod2" if rec["mesh"].startswith("2x") else "pod1"
+        name = f"{rec['arch']}_{rec['shape']}_{pod}_{rec['rules']}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1)
+    line = (f"[{rec['status']:5s}] {rec['arch']:24s} {rec['shape']:12s} "
+            f"{rec['mesh']:8s} rules={rec['rules']}")
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        line += (f" compile={rec['compile_s']:.0f}s "
+                 f"compute={r['compute_s']*1e3:.2f}ms "
+                 f"memory={r['memory_s']*1e3:.2f}ms "
+                 f"coll={r['collective_s']*1e3:.2f}ms "
+                 f"-> {r['bottleneck']}")
+    elif rec["status"] == "error":
+        line += " " + rec["error"][:160]
+    print(line, flush=True)
+    return rec
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=False)
+    p.add_argument("--shape", required=False)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--rules", default="baseline")
+    p.add_argument("--vtrace-impl", default="scan")
+    p.add_argument("--moe-impl", default="shard_map_a2a",
+                   choices=["shard_map_a2a", "dense_einsum"])
+    p.add_argument("--mixed-precision", action="store_true")
+    p.add_argument("--remat-off", action="store_true")
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args()
+    if args.list:
+        from repro.configs.base import INPUT_SHAPES
+        from repro.configs.registry import ASSIGNED
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                print(a.replace("_", "-"), s)
+        return 0
+    rec = run_pair(args.arch, args.shape, args.multi_pod, args.out,
+                   args.rules, args.vtrace_impl, args.moe_impl,
+                   args.mixed_precision, args.remat_off)
+    return 0 if rec["status"] in ("ok", "skip") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — only ``launch/dryrun.py`` sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before init.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import MeshConfig
+from repro.sharding.rules import Rules
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_2d_tp(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """§Perf variant: split the 16-way model axis into 4x4 so head counts
+    divisible by 4 (qwen 20H, recurrentgemma/whisper) shard on model_a
+    while ffn/vocab use the full 16 = model_a x model_b."""
+    shape = (2, 16, 4, 4) if multi_pod else (16, 4, 4)
+    axes = (("pod", "data", "model_a", "model_b") if multi_pod
+            else ("data", "model_a", "model_b"))
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(cfg: MeshConfig) -> jax.sharding.Mesh:
+    return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def make_rules(mesh: jax.sharding.Mesh, overrides=None) -> Rules:
+    return Rules(mesh, overrides)
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s per chip
+    "hbm_bw": 819e9,             # B/s per chip
+    "ici_bw": 50e9,              # B/s per link
+}

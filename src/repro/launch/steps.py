@@ -1,0 +1,239 @@
+"""Step builders + abstract input specs for every (arch x input-shape).
+
+These produce the jitted, sharded step functions used both by real
+training/serving drivers and by the 512-device dry-run (which lowers and
+compiles them from ShapeDtypeStructs — no allocation).
+
+Step kinds (DESIGN.md §4):
+  train_4k     -> train_step    (V-trace actor-critic update)
+  prefill_32k  -> prefill_step  (actor context ingestion, builds cache)
+  decode_32k   -> serve_step    (ONE action with a seq_len cache)
+  long_500k    -> serve_step    (sub-quadratic archs only)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ImpalaConfig, InputShape
+from repro.core import learner as learner_lib
+from repro.models import backbone as bb
+from repro.models import common
+from repro.optim import optimizer as opt_lib
+from repro.sharding.rules import Rules, use_rules
+
+PyTree = Any
+
+NUM_ACTIONS = 18  # full Atari action set (paper §5.3.2)
+
+
+# ---------------------------------------------------------------------------
+# Applicability
+
+
+def decode_cache_len(arch: ArchConfig, seq_len: int) -> int:
+    """Context a decode step actually has to hold."""
+    if arch.sliding_window:
+        return min(arch.sliding_window, seq_len)
+    return seq_len
+
+
+def pair_supported(arch: ArchConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Is (arch, shape) runnable? long_500k needs sub-quadratic context."""
+    if shape.name != "long_500k":
+        return True, ""
+    if arch.family in ("ssm", "hybrid"):
+        return True, ""
+    if arch.sliding_window:
+        return True, ""
+    return False, ("full quadratic attention cannot hold a 524288-token KV "
+                   "cache; runnable only for SSM/hybrid/sliding-window "
+                   "variants (DESIGN.md §Arch-applicability)")
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+
+
+def _stub_inputs(arch: ArchConfig, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    dtype = jnp.dtype(arch.dtype)
+    if arch.family == "audio":
+        return {"enc_embed": jax.ShapeDtypeStruct(
+            (batch, arch.encoder_seq_len, arch.d_model), dtype)}
+    if arch.family == "vlm":
+        return {"image_embed": jax.ShapeDtypeStruct(
+            (batch, arch.encoder_seq_len, arch.d_model), dtype)}
+    return {}
+
+
+def input_specs(arch: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this step."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "train":
+        t = s - 1  # s observations, s-1 transitions
+        specs = {
+            "obs_token": jax.ShapeDtypeStruct((b, s), i32),
+            "actions": jax.ShapeDtypeStruct((b, t), i32),
+            "rewards": jax.ShapeDtypeStruct((b, t), f32),
+            "discounts": jax.ShapeDtypeStruct((b, t), f32),
+            "behaviour_logprob": jax.ShapeDtypeStruct((b, t), f32),
+        }
+        specs.update(_stub_inputs(arch, b))
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        specs.update(_stub_inputs(arch, b))
+        return specs
+    if shape.kind == "decode":
+        specs = {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache_index": jax.ShapeDtypeStruct((), i32),
+            "rng": jax.ShapeDtypeStruct((2,), jnp.uint32),
+            "cache": bb.cache_abstract(b, decode_cache_len(arch, s), arch),
+        }
+        return specs
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Sharding resolution
+
+
+def batch_logical_axes(arch: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    stub = {"enc_embed": ("batch", None, None),
+            "image_embed": ("batch", None, None)}
+    if shape.kind == "train":
+        ax = {
+            "obs_token": ("batch", None),
+            "actions": ("batch", None),
+            "rewards": ("batch", None),
+            "discounts": ("batch", None),
+            "behaviour_logprob": ("batch", None),
+        }
+    elif shape.kind == "prefill":
+        ax = {"tokens": ("batch", None)}
+    else:
+        ax = {
+            "token": ("batch", None),
+            "cache_index": (),
+            "rng": (None,),
+            "cache": bb.cache_logical_axes(arch),
+        }
+    for k in ("enc_embed", "image_embed"):
+        if k in input_specs(arch, shape):
+            ax[k] = stub[k]
+    return ax
+
+
+def tree_shardings(abstract: PyTree, axes: PyTree, rules: Rules) -> PyTree:
+    def leaf(sd, ax):
+        return rules.sharding(ax, sd.shape)
+    return jax.tree.map(leaf, abstract, axes,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+
+
+def make_impala_config(arch: ArchConfig, vtrace_impl: str = "scan"
+                       ) -> ImpalaConfig:
+    return ImpalaConfig(num_actions=NUM_ACTIONS, learning_rate=6e-4)
+
+
+def build_steps(arch: ArchConfig, rules: Rules, vtrace_impl: str = "scan",
+                mixed_precision: bool = False):
+    """Returns dict of pure step fns closed over configs + rules."""
+    icfg = make_impala_config(arch)
+    train_step_raw, optimizer = learner_lib.build_train_step(
+        arch, icfg, NUM_ACTIONS, vtrace_impl=vtrace_impl,
+        mixed_precision=mixed_precision)
+
+    def train_step(params, opt_state, step, batch):
+        with use_rules(rules):
+            return train_step_raw(params, opt_state, step, batch)
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            out = bb.apply_prefill(params, batch, arch, NUM_ACTIONS)
+        return {"policy_logits": out.policy_logits, "values": out.values,
+                "cache": out.cache}
+
+    def serve_step(params, token, cache, cache_index, rng):
+        with use_rules(rules):
+            out = bb.apply_decode(params, token, cache, cache_index, arch,
+                                  NUM_ACTIONS)
+        logits = out.policy_logits[:, 0]
+        action = jax.random.categorical(jax.random.wrap_key_data(rng),
+                                        logits, axis=-1)
+        logp = jax.nn.log_softmax(logits)
+        blp = jnp.take_along_axis(logp, action[:, None], axis=-1)[:, 0]
+        return {"action": action.astype(jnp.int32),
+                "behaviour_logprob": blp,
+                "value": out.values[:, 0], "cache": out.cache}
+
+    return {"train": train_step, "prefill": prefill_step,
+            "serve": serve_step, "optimizer": optimizer, "icfg": icfg}
+
+
+# ---------------------------------------------------------------------------
+# Lowering for the dry-run
+
+
+def lower_pair(arch: ArchConfig, shape: InputShape, mesh, rules: Rules,
+               vtrace_impl: str = "scan", donate: bool = True,
+               mixed_precision: bool = False):
+    """Lower (not run) the right step for (arch, shape) on mesh.
+
+    Returns (lowered, meta dict)."""
+    steps = build_steps(arch, rules, vtrace_impl, mixed_precision)
+    specs = bb.backbone_specs(arch, NUM_ACTIONS)
+    abstract_params = common.abstract_params(specs)
+    if mixed_precision:
+        # live params are bf16 leaves; the f32 master sits in opt_state
+        abstract_params = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct(sd.shape, jnp.bfloat16)
+            if jnp.issubdtype(sd.dtype, jnp.floating) else sd,
+            abstract_params)
+    param_sh = common.param_shardings(specs, rules)
+    batch_abs = input_specs(arch, shape)
+    batch_ax = batch_logical_axes(arch, shape)
+    batch_sh = tree_shardings(batch_abs, batch_ax, rules)
+    n_params = common.param_count(specs)
+    meta = {"params": n_params}
+
+    with mesh:
+        if shape.kind == "train":
+            opt_specs = learner_lib.opt_state_specs(specs, steps["icfg"],
+                                                    mixed_precision)
+            abstract_opt = common.abstract_params(opt_specs)
+            opt_sh = common.param_shardings(opt_specs, rules)
+            step_sh = NamedSharding(mesh, P())
+            fn = jax.jit(
+                steps["train"],
+                in_shardings=(param_sh, opt_sh, step_sh, batch_sh),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(abstract_params, abstract_opt,
+                               jax.ShapeDtypeStruct((), jnp.int32),
+                               batch_abs)
+        elif shape.kind == "prefill":
+            fn = jax.jit(steps["prefill"],
+                         in_shardings=(param_sh, batch_sh))
+            lowered = fn.lower(abstract_params, batch_abs)
+        else:
+            fn = jax.jit(
+                steps["serve"],
+                in_shardings=(param_sh, batch_sh["token"],
+                              batch_sh["cache"], batch_sh["cache_index"],
+                              batch_sh["rng"]),
+                donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(abstract_params, batch_abs["token"],
+                               batch_abs["cache"], batch_abs["cache_index"],
+                               batch_abs["rng"])
+    return lowered, meta

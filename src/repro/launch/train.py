@@ -1,0 +1,121 @@
+"""Training driver: the IMPALA loop (actors -> queue -> V-trace learner)
+with checkpointing, replay, policy lag, and optional multi-task suites.
+
+CPU-scale entry point (real envs, real learning):
+  PYTHONPATH=src python -m repro.launch.train --arch impala-shallow \
+      --env catch --steps 500 --num-envs 32
+
+The production mesh path for the assigned architectures is exercised by
+``repro.launch.dryrun`` (compile-only on this CPU-only box).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="impala-shallow")
+    p.add_argument("--env", default="catch")
+    p.add_argument("--steps", type=int, default=500)
+    p.add_argument("--num-envs", type=int, default=32)
+    p.add_argument("--unroll", type=int, default=20)
+    p.add_argument("--lr", type=float, default=6e-4)
+    p.add_argument("--entropy-cost", type=float, default=0.003)
+    p.add_argument("--rmsprop-eps", type=float, default=0.01)
+    p.add_argument("--policy-lag", type=int, default=1)
+    p.add_argument("--correction", default="vtrace",
+                   choices=["vtrace", "onestep_is", "eps", "none"])
+    p.add_argument("--replay-fraction", type=float, default=0.0)
+    p.add_argument("--reward-clip", default="abs_one")
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced smoke config of --arch")
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=200)
+    p.add_argument("--log-every", type=int, default=25)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    from repro.configs.base import ImpalaConfig
+    from repro.configs.registry import get_config, get_smoke_config
+    from repro.core import actor as actor_lib
+    from repro.core import learner as learner_lib
+    from repro.core.metrics import EpisodeTracker
+    from repro.core.queue import LagController, TrajectoryQueue
+    from repro.core.replay import ReplayBuffer, mix_batches
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.data.envs import make_env
+    from repro.models import backbone as bb
+    from repro.models import common
+
+    env = make_env(args.env)
+    arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if arch.family == "impala_cnn":
+        arch = arch.replace(image_hw=env.image_hw)
+    elif arch.vocab_size < env.vocab_size:
+        arch = arch.replace(vocab_size=env.vocab_size)
+    icfg = ImpalaConfig(
+        num_actions=env.num_actions, unroll_length=args.unroll,
+        learning_rate=args.lr, entropy_cost=args.entropy_cost,
+        rmsprop_eps=args.rmsprop_eps, policy_lag=args.policy_lag,
+        correction=args.correction, replay_fraction=args.replay_fraction,
+        reward_clip=args.reward_clip, seed=args.seed)
+
+    specs = bb.backbone_specs(arch, env.num_actions)
+    params = common.init_params(specs, jax.random.key(args.seed))
+    print(f"arch={arch.name} params={common.param_count(specs):,} "
+          f"env={env.name} actions={env.num_actions}")
+
+    init_fn, unroll = actor_lib.build_actor(env, arch, icfg, args.num_envs)
+    train_step, opt = learner_lib.build_train_step(arch, icfg,
+                                                   env.num_actions)
+    train_step = jax.jit(train_step)
+    opt_state = opt.init(params)
+    start_step = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        params, start_step = ckpt.restore(args.ckpt_dir, params)
+        print(f"restored checkpoint at step {start_step}")
+
+    carry = init_fn(jax.random.key(args.seed + 1))
+    lag = LagController(icfg.policy_lag, params)
+    queue = TrajectoryQueue(capacity=8)
+    buf = ReplayBuffer(icfg.replay_capacity)
+    tracker = EpisodeTracker(args.num_envs)
+    frames = 0
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        carry, traj = unroll(lag.actor_params(), carry)
+        queue.put(traj)
+        tracker.update(np.asarray(traj["rewards"]), np.asarray(traj["done"]))
+        batch = queue.get()
+        if icfg.replay_fraction > 0:
+            buf.add_batch(batch)
+            rep = buf.sample(args.num_envs)
+            batch = mix_batches(batch, rep, icfg.replay_fraction)
+        params, opt_state, metrics = train_step(params, opt_state,
+                                                jnp.int32(step), batch)
+        lag.on_update(params)
+        frames += args.num_envs * args.unroll
+        if (step + 1) % args.log_every == 0:
+            fps = frames / (time.time() - t0)
+            print(f"step {step+1:6d} return(100)={tracker.mean_return():7.3f} "
+                  f"loss={float(metrics['loss/total']):10.2f} "
+                  f"entropy={-float(metrics['loss/entropy']):8.1f} "
+                  f"fps={fps:7.0f} episodes={len(tracker.completed)}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, params)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, params)
+    print(f"final return(100) = {tracker.mean_return():.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

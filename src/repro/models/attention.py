@@ -1,0 +1,297 @@
+"""Attention: MHA/GQA/MQA with RoPE, sliding windows, chunked online-softmax
+for long sequences, cross-attention, and KV-cache decode.
+
+Layouts:
+  activations  (B, T, d_model)
+  q            (B, T, H, Dh)
+  k/v          (B, T, K, Dh)          K = num_kv_heads, group G = H // K
+  kv cache     (B, S_cache, K, Dh)    ring buffer when sliding window
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import Spec, dense, dense_specs, rope
+from repro.sharding.rules import lc
+
+NEG_INF = -1e30
+
+# Dense (materialized-scores) attention is used up to this many kv positions;
+# beyond it the chunked online-softmax path keeps memory bounded.
+DENSE_SEQ_THRESHOLD = 4096
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Specs
+
+
+def attention_specs(cfg: ArchConfig, cross: bool = False) -> Dict[str, Dict[str, Spec]]:
+    d, h, k, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    bias = cfg.qkv_bias
+    return {
+        "q": dense_specs((d,), (h, dh), ("embed",), ("heads", "head_dim"), bias=bias),
+        "k": dense_specs((d,), (k, dh), ("embed",), ("kv_heads", "head_dim"), bias=bias),
+        "v": dense_specs((d,), (k, dh), ("embed",), ("kv_heads", "head_dim"), bias=bias),
+        "o": dense_specs((h, dh), (d,), ("heads", "head_dim"), ("embed",)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention math
+
+
+def _dense_attention(q, k, v, mask, scale):
+    """q:(B,Tq,H,D) k/v:(B,Tk,K,D) mask:(B,1,1,Tq,Tk) or broadcastable."""
+    b, tq, h, d = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, tq, kh, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, tq, h, d)
+
+
+def _chunked_causal_attention(q, k, v, q_positions, kv_positions, scale,
+                              window: int = 0,
+                              q_chunk: int = Q_CHUNK, kv_chunk: int = KV_CHUNK):
+    """Online-softmax attention, O(q_chunk * kv_chunk) live scores.
+
+    Causal w.r.t. absolute positions; optional sliding window.
+    q:(B,Tq,H,D)  k/v:(B,Tk,K,D)  *_positions:(B,T*) absolute indices.
+    """
+    b, tq, h, d = q.shape
+    tk = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, tk)
+    # pad to multiples
+    def pad_to(x, mult, axis):
+        rem = (-x.shape[axis]) % mult
+        if rem == 0:
+            return x
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (0, rem)
+        return jnp.pad(x, pads)
+
+    qp = pad_to(q, q_chunk, 1)
+    qpos = pad_to(q_positions, q_chunk, 1)
+    kp = pad_to(k, kv_chunk, 1)
+    vp = pad_to(v, kv_chunk, 1)
+    kpos = pad_to(kv_positions + 1, kv_chunk, 1) - 1  # padded keys -> pos -1
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+
+    qp = qp.reshape(b, nq, q_chunk, kh, g, d)
+    kp = kp.reshape(b, nk, kv_chunk, kh, d)
+    vp = vp.reshape(b, nk, kv_chunk, kh, d)
+    qpos = qpos.reshape(b, nq, q_chunk)
+    kpos = kpos.reshape(b, nk, kv_chunk)
+
+    def per_qchunk(qi, qc, qcpos):
+        # qc: (B, q_chunk, K, G, D); scan over kv chunks with online softmax
+        m0 = jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((b, q_chunk, kh, g, d), jnp.float32)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kc, vc, kcpos = inp  # (B, kv_chunk, K, D), ..., (B, kv_chunk)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc).astype(jnp.float32) * scale
+            valid = kcpos[:, None, None, None, :] <= qcpos[:, None, None, :, None]
+            valid &= kcpos[:, None, None, None, :] >= 0
+            if window:
+                valid &= kcpos[:, None, None, None, :] > (
+                    qcpos[:, None, None, :, None] - window)
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(qc.dtype), vc)
+            acc_new = acc * jnp.moveaxis(corr, 3, 1)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        kvs = (jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0),
+               jnp.moveaxis(kpos, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), kvs)
+        l = jnp.maximum(l, 1e-30)
+        out = acc / jnp.moveaxis(l, 3, 1)[..., None]
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(
+        lambda args: per_qchunk(*args),
+        (jnp.arange(nq), jnp.moveaxis(qp, 1, 0), jnp.moveaxis(qpos, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, h, d)
+    return out[:, :tq]
+
+
+# ---------------------------------------------------------------------------
+# Caches
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static description of a layer's KV cache."""
+    length: int          # S_cache (== window for sliding-window archs)
+    kv_heads: int
+    head_dim: int
+
+
+def init_cache_arrays(batch: int, spec: CacheSpec, dtype) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, spec.length, spec.kv_heads, spec.head_dim), dtype),
+        "v": jnp.zeros((batch, spec.length, spec.kv_heads, spec.head_dim), dtype),
+    }
+
+
+def cache_abstract(batch: int, spec: CacheSpec, dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    shape = (batch, spec.length, spec.kv_heads, spec.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Public apply
+
+
+def apply_attention(params, x, positions, cfg: ArchConfig, *,
+                    causal: bool = True,
+                    window: int = 0,
+                    mode: str = "train",
+                    cache: Optional[Dict[str, jax.Array]] = None,
+                    cache_index: Optional[jax.Array] = None,
+                    kv_x: Optional[jax.Array] = None,
+                    kv_positions: Optional[jax.Array] = None,
+                    use_rope: Optional[bool] = None,
+                    ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self- or cross-attention.
+
+    mode: 'train'/'prefill' (full sequence) or 'decode' (T==1, uses cache).
+    For cross-attention pass kv_x (encoder output); cache then holds the
+    projected encoder k/v ('decode' reuses them without recompute).
+    Returns (output (B,T,d_model), new_cache or None).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    dh = cfg.resolved_head_dim
+    scale = dh ** -0.5
+    use_rope = cfg.use_rope if use_rope is None else use_rope
+
+    q = dense(params["q"], x, dtype=dtype)
+    q = lc(q, ("batch", "seq", "heads", "head_dim"))
+    if use_rope and not (kv_x is not None):
+        q = rope(q, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_x is not None:
+        # cross-attention: keys/values from encoder output, no causal mask
+        k = dense(params["k"], kv_x, dtype=dtype)
+        v = dense(params["v"], kv_x, dtype=dtype)
+        k = lc(k, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        v = lc(v, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        b, tq = q.shape[0], q.shape[1]
+        mask = jnp.ones((b, 1, 1, tq, k.shape[1]), bool)
+        out = _dense_attention(q, k, v, mask, scale)
+    elif mode == "decode":
+        assert cache is not None and cache_index is not None
+        # x is (B, 1, d)
+        k_new = dense(params["k"], x, dtype=dtype)
+        v_new = dense(params["v"], x, dtype=dtype)
+        if use_rope:
+            k_new = rope(k_new, positions, cfg.rope_theta)
+        s_cache = cache["k"].shape[1]
+        slot = (cache_index % s_cache) if window else jnp.minimum(
+            cache_index, s_cache - 1)
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype),
+            (jnp.zeros((), jnp.int32), slot.astype(jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype),
+            (jnp.zeros((), jnp.int32), slot.astype(jnp.int32),
+             jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+        new_cache = {"k": k, "v": v}
+        k = lc(k, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        v = lc(v, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        # positions of cache slots
+        if window:
+            # ring buffer: slot i holds absolute position
+            #   p = idx - ((idx - i) mod S)  where idx = cache_index
+            slots = jnp.arange(s_cache)
+            kv_pos = cache_index - ((cache_index - slots) % s_cache)
+            valid = kv_pos >= jnp.maximum(cache_index - s_cache + 1, 0)
+        else:
+            kv_pos = jnp.arange(s_cache)
+            valid = kv_pos <= cache_index
+        if window:
+            valid &= kv_pos > (cache_index - window)
+        b = q.shape[0]
+        mask = jnp.broadcast_to(valid[None, None, None, None, :],
+                                (b, 1, 1, 1, s_cache))
+        out = _dense_attention(q, k, v, mask, scale)
+    else:
+        # train / prefill over the full sequence
+        k = dense(params["k"], x, dtype=dtype)
+        v = dense(params["v"], x, dtype=dtype)
+        if use_rope:
+            k = rope(k, positions, cfg.rope_theta)
+        k = lc(k, ("batch", "seq", "kv_heads", "head_dim"))
+        v = lc(v, ("batch", "seq", "kv_heads", "head_dim"))
+        b, t = x.shape[0], x.shape[1]
+        if mode == "prefill":
+            # keep (possibly windowed) kv for subsequent decode
+            s_cache = min(window, t) if window else t
+            new_cache = {"k": k[:, -s_cache:], "v": v[:, -s_cache:]}
+        if t <= DENSE_SEQ_THRESHOLD:
+            qpos = positions
+            kpos = positions
+            mask = kpos[:, None, None, None, :] <= qpos[:, None, None, :, None]
+            if window:
+                mask &= kpos[:, None, None, None, :] > (
+                    qpos[:, None, None, :, None] - window)
+            if not causal:
+                mask = jnp.ones_like(mask)
+            out = _dense_attention(q, k, v, mask, scale)
+        else:
+            if not causal:
+                # long bidirectional: fall back to chunked with no causal mask
+                # (not used by assigned archs; encoder seqs are short)
+                mask = jnp.ones((b, 1, 1, t, t), bool)
+                out = _dense_attention(q, k, v, mask, scale)
+            else:
+                out = _chunked_causal_attention(
+                    q, k, v, positions, positions, scale, window=window)
+
+    out = lc(out, ("batch", "seq", "heads", "head_dim"))
+    y = dense(params["o"], out, contract=2, dtype=dtype)
+    y = lc(y, ("batch", "seq", "embed"))
+    return y, new_cache
+
+
+def precompute_cross_cache(params, enc_out, cfg: ArchConfig):
+    """Project encoder output to k/v once for decode-time cross-attention."""
+    dtype = jnp.dtype(cfg.dtype)
+    k = dense(params["k"], enc_out, dtype=dtype)
+    v = dense(params["v"], enc_out, dtype=dtype)
+    return {"k": k, "v": v}
+
+
+def apply_cross_attention_cached(params, x, cross_cache, cfg: ArchConfig):
+    """Decode-time cross-attention against precomputed encoder k/v."""
+    dtype = jnp.dtype(cfg.dtype)
+    dh = cfg.resolved_head_dim
+    q = dense(params["q"], x, dtype=dtype)
+    k, v = cross_cache["k"], cross_cache["v"]
+    b, tq = q.shape[0], q.shape[1]
+    mask = jnp.ones((b, 1, 1, tq, k.shape[1]), bool)
+    out = _dense_attention(q, k, v, mask, dh ** -0.5)
+    return dense(params["o"], out, contract=2, dtype=dtype)

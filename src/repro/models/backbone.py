@@ -1,0 +1,282 @@
+"""Backbone assembly: embedding -> layer stack -> RL heads.
+
+Every backbone maps observations to ``AgentOutput(policy_logits, values)``.
+Three entry points mirror the IMPALA split:
+  apply_train    full (B, T) trajectory  -> logits/values per step (learner)
+  apply_prefill  full (B, T) context     -> logits at last step + cache (actor)
+  apply_decode   one step + cache        -> logits/values + new cache (actor)
+
+``family == 'impala_cnn'`` is the paper's own agent (conv torso folded over
+time + LSTM core), consuming pixel observations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import convnets, lstm as lstm_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.common import (Spec, dense, dense_specs, embed,
+                                 embedding_specs, make_norm)
+from repro.sharding.rules import lc
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AgentOutput:
+    policy_logits: jax.Array  # (B, T, A) float32
+    values: jax.Array         # (B, T)   float32
+    aux_loss: jax.Array       # scalar
+    cache: Optional[PyTree] = None
+
+
+# ---------------------------------------------------------------------------
+# Specs
+
+
+def head_specs(cfg: ArchConfig, num_actions: int) -> Dict:
+    d = cfg.d_model if cfg.family != "impala_cnn" else 256
+    norm_specs, _ = make_norm(cfg.norm, cfg.d_model)
+    specs = {
+        "policy": dense_specs((d,), (num_actions,), ("embed",), ("actions",),
+                              bias=True, scale=0.01),
+        "value": dense_specs((d,), (1,), ("embed",), (None,), bias=True,
+                             scale=0.01),
+    }
+    if cfg.family != "impala_cnn":
+        specs["final_norm"] = norm_specs
+    return specs
+
+
+def backbone_specs(cfg: ArchConfig, num_actions: int) -> Dict:
+    if cfg.family == "impala_cnn":
+        torso = (convnets.shallow_specs(cfg.image_hw)
+                 if cfg.impala_net == "shallow"
+                 else convnets.deep_specs(cfg.image_hw))
+        specs: Dict = {"torso": torso}
+        if cfg.use_lstm:
+            specs["lstm"] = lstm_lib.lstm_specs(256 + num_actions + 1,
+                                                cfg.lstm_width)
+            specs["post_lstm"] = dense_specs(
+                (cfg.lstm_width,), (256,), (None,), ("embed",), bias=True)
+        specs.update(head_specs(cfg, num_actions))
+        return specs
+
+    specs = {
+        "embed": embedding_specs(cfg.vocab_size, cfg.d_model),
+        "stack": tfm.group_specs(cfg),
+    }
+    if cfg.encoder_layers:
+        specs["encoder"] = tfm.encoder_specs(cfg)
+    specs.update(head_specs(cfg, num_actions))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Heads
+
+
+def _apply_heads(params, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    if "final_norm" in params:
+        _, norm = make_norm(cfg.norm, cfg.d_model)
+        x = norm(params["final_norm"], x)
+    logits = dense(params["policy"], x).astype(jnp.float32)
+    values = dense(params["value"], x).astype(jnp.float32)[..., 0]
+    return logits, values
+
+
+# ---------------------------------------------------------------------------
+# Cross-modal context (stub frontends)
+
+
+def _cross_ctx(params, batch: Dict, cfg: ArchConfig, dtype):
+    if cfg.family == "audio":
+        enc_in = batch["enc_embed"].astype(dtype)
+        return tfm.apply_encoder(params["encoder"], enc_in, cfg)
+    if cfg.family == "vlm":
+        return batch["image_embed"].astype(dtype)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Sequence-model paths
+
+
+def apply_train(params, batch: Dict, cfg: ArchConfig,
+                num_actions: int) -> AgentOutput:
+    if cfg.family == "impala_cnn":
+        return _impala_net_apply(params, batch, cfg, num_actions, mode="train")
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = embed(params["embed"], tokens, dtype)
+    x = lc(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    cross = _cross_ctx(params, batch, cfg, dtype)
+    x, _, aux = tfm.apply_stack(params["stack"], x, positions, cfg,
+                                mode="train", cross_ctx=cross)
+    logits, values = _apply_heads(params, x, cfg)
+    return AgentOutput(logits, values, aux)
+
+
+def apply_prefill(params, batch: Dict, cfg: ArchConfig,
+                  num_actions: int) -> AgentOutput:
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    x = embed(params["embed"], tokens, dtype)
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    cross = _cross_ctx(params, batch, cfg, dtype)
+    x, caches, aux = tfm.apply_stack(params["stack"], x, positions, cfg,
+                                     mode="prefill", cross_ctx=cross)
+    logits, values = _apply_heads(params, x[:, -1:], cfg)
+    return AgentOutput(logits, values, aux, cache=caches)
+
+
+def apply_decode(params, token: jax.Array, cache: PyTree,
+                 cache_index: jax.Array, cfg: ArchConfig,
+                 num_actions: int,
+                 batch: Optional[Dict] = None) -> AgentOutput:
+    """token: (B, 1) int32; cache_index: scalar int32 (absolute position)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b = token.shape[0]
+    x = embed(params["embed"], token, dtype)
+    positions = jnp.broadcast_to(cache_index[None, None], (b, 1)).astype(jnp.int32)
+    # cross context comes from cache (prefill stored projected enc k/v);
+    # for dry-run decode without prefill, allow fresh ctx via batch
+    cross = None
+    if batch is not None and cfg.family in ("audio", "vlm"):
+        cross = _cross_ctx(params, batch, cfg, dtype)
+    x, new_caches, aux = tfm.apply_stack(
+        params["stack"], x, positions, cfg, mode="decode",
+        caches=cache, cache_index=cache_index, cross_ctx=cross)
+    logits, values = _apply_heads(params, x, cfg)
+    return AgentOutput(logits, values, aux, cache=new_caches)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+
+
+def _block_cache_abstract(kind: str, batch: int, length: int,
+                          cfg: ArchConfig, dtype):
+    dh = cfg.resolved_head_dim
+    if kind in ("attn", "moe"):
+        spec = attn_lib.CacheSpec(length, cfg.num_kv_heads, dh)
+        return {"kv": attn_lib.cache_abstract(batch, spec, dtype)}
+    if kind == "local":
+        window = (cfg.rglru.attention_window if cfg.rglru is not None
+                  else cfg.sliding_window)
+        spec = attn_lib.CacheSpec(min(window, length), cfg.num_kv_heads, dh)
+        return {"kv": attn_lib.cache_abstract(batch, spec, dtype)}
+    if kind == "recurrent":
+        return {"rglru": rglru_lib.rglru_state_abstract(batch, cfg, dtype)}
+    if kind == "ssm":
+        return {"ssm": ssm_lib.ssm_state_abstract(batch, cfg, dtype)}
+    if kind == "cross":
+        shape = (batch, cfg.encoder_seq_len, cfg.num_kv_heads, dh)
+        return {"cross_kv": {"k": jax.ShapeDtypeStruct(shape, dtype),
+                             "v": jax.ShapeDtypeStruct(shape, dtype)}}
+    if kind == "enc_dec":
+        spec = attn_lib.CacheSpec(length, cfg.num_kv_heads, dh)
+        shape = (batch, cfg.encoder_seq_len, cfg.num_kv_heads, dh)
+        return {"kv": attn_lib.cache_abstract(batch, spec, dtype),
+                "cross_kv": {"k": jax.ShapeDtypeStruct(shape, dtype),
+                             "v": jax.ShapeDtypeStruct(shape, dtype)}}
+    raise ValueError(kind)
+
+
+def _stack_abstract(tree: PyTree, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_abstract(batch: int, length: int, cfg: ArchConfig) -> PyTree:
+    """Abstract (ShapeDtypeStruct) decode cache for the full stack."""
+    dtype = jnp.dtype(cfg.dtype)
+    group, leftover = tfm.layer_plan(cfg)
+    n = tfm.num_groups(cfg)
+    one = {f"l{i}": _block_cache_abstract(k, batch, length, cfg, dtype)
+           for i, k in enumerate(group)}
+    out: Dict = {"scan": _stack_abstract(one, n)}
+    for i, k in enumerate(leftover):
+        out[f"tail{i}"] = _block_cache_abstract(k, batch, length, cfg, dtype)
+    return out
+
+
+def cache_init(batch: int, length: int, cfg: ArchConfig) -> PyTree:
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        cache_abstract(batch, length, cfg),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _block_cache_axes(kind: str, cfg: ArchConfig) -> PyTree:
+    kv = {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+          "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+    if kind in ("attn", "moe", "local"):
+        return {"kv": dict(kv)}
+    if kind == "recurrent":
+        return {"rglru": {"h": ("batch", "lru"),
+                          "conv": ("batch", None, "lru")}}
+    if kind == "ssm":
+        return {"ssm": {"ssm": ("batch", "ssm_heads", None, None),
+                        "conv": ("batch", None, "ff")}}
+    if kind == "cross":
+        return {"cross_kv": dict(kv)}
+    if kind == "enc_dec":
+        return {"kv": dict(kv), "cross_kv": dict(kv)}
+    raise ValueError(kind)
+
+
+def cache_logical_axes(cfg: ArchConfig) -> PyTree:
+    """Logical axes mirroring ``cache_abstract``'s structure."""
+    group, leftover = tfm.layer_plan(cfg)
+    one = {f"l{i}": _block_cache_axes(k, cfg) for i, k in enumerate(group)}
+    stacked = jax.tree.map(lambda ax: ("layers",) + tuple(ax), one,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    out: Dict = {"scan": stacked}
+    for i, k in enumerate(leftover):
+        out[f"tail{i}"] = _block_cache_axes(k, cfg)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The paper's conv(+LSTM) agent
+
+
+def _impala_net_apply(params, batch: Dict, cfg: ArchConfig, num_actions: int,
+                      *, mode: str) -> AgentOutput:
+    """batch: image (B,T,H,W,C) uint8, last_action (B,T) int32,
+    last_reward (B,T) f32, done (B,T) bool, lstm_state ((B,W),(B,W))."""
+    img = batch["image"]
+    b, t = img.shape[:2]
+    flat = img.reshape((b * t,) + img.shape[2:])
+    feats = (convnets.shallow_apply(params["torso"], flat)
+             if cfg.impala_net == "shallow"
+             else convnets.deep_apply(params["torso"], flat))
+    feats = feats.reshape(b, t, -1)
+    aux = jnp.zeros((), jnp.float32)
+    state = None
+    if cfg.use_lstm:
+        last_a = jax.nn.one_hot(batch["last_action"], num_actions,
+                                dtype=feats.dtype)
+        last_r = batch["last_reward"][..., None].astype(feats.dtype)
+        core_in = jnp.concatenate([feats, last_a, last_r], axis=-1)
+        lstm_state = batch.get("lstm_state")
+        if lstm_state is None:
+            lstm_state = lstm_lib.lstm_zero_state(b, cfg.lstm_width)
+        ys, state = lstm_lib.lstm_apply(params["lstm"], core_in, lstm_state,
+                                        done=batch.get("done"))
+        feats = jax.nn.relu(dense(params["post_lstm"], ys))
+    logits, values = _apply_heads(params, feats, cfg)
+    return AgentOutput(logits, values, aux, cache=state)

@@ -1,0 +1,214 @@
+"""Parameter-spec trees and common layers (from-scratch, no flax).
+
+A model is described by a *spec tree*: a nested dict whose leaves are
+``Spec(shape, logical, init, dtype)``. From the spec tree we derive
+  * concrete initialized parameters       (``init_params``)
+  * abstract ShapeDtypeStructs            (``abstract_params`` — dry-run,
+    never allocates)
+  * NamedShardings for pjit in_shardings  (``param_shardings``)
+
+Apply functions are plain functions over the params dict. Activations are
+annotated with logical sharding axes via ``repro.sharding.rules.lc``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import Rules, lc
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | uniform_scale
+    dtype: str = "float32"
+    scale: float = 1.0            # multiplier on the default init scale
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    # contraction dims are all but the last by convention
+    return int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+
+
+def _init_leaf(spec: Spec, key: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, dtype) * spec.scale).astype(dtype)
+    if spec.init == "normal":
+        std = spec.scale / math.sqrt(max(_fan_in(spec.shape), 1))
+        return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+    if spec.init == "uniform_scale":
+        lim = spec.scale * math.sqrt(3.0 / max(_fan_in(spec.shape), 1))
+        return jax.random.uniform(key, spec.shape, dtype, -lim, lim)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(specs: PyTree, key: jax.Array) -> PyTree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(specs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=_is_spec)
+
+
+def param_shardings(specs: PyTree, rules: Rules) -> PyTree:
+    return jax.tree.map(
+        lambda s: rules.sharding(s.logical, s.shape), specs, is_leaf=_is_spec)
+
+
+def param_count(specs: PyTree) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(
+        x.dtype, jnp.floating) else x, tree)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+
+
+def rmsnorm_specs(d: int, name_axis: str = "embed") -> Dict[str, Spec]:
+    return {"scale": Spec((d,), (name_axis,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_specs(d: int, name_axis: str = "embed") -> Dict[str, Spec]:
+    return {"scale": Spec((d,), (name_axis,), init="ones"),
+            "bias": Spec((d,), (name_axis,), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def make_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return rmsnorm_specs(d), rmsnorm
+    if kind == "layernorm":
+        return layernorm_specs(d), layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Dense (einsum) layers
+
+
+def dense_specs(in_shape: Sequence[int], out_shape: Sequence[int],
+                in_logical: Sequence[Optional[str]],
+                out_logical: Sequence[Optional[str]],
+                bias: bool = False, scale: float = 1.0) -> Dict[str, Spec]:
+    shape = tuple(in_shape) + tuple(out_shape)
+    logical = tuple(in_logical) + tuple(out_logical)
+    specs = {"kernel": Spec(shape, logical, init="normal", scale=scale)}
+    if bias:
+        specs["bias"] = Spec(tuple(out_shape), tuple(out_logical), init="zeros")
+    return specs
+
+
+def dense(params, x, contract: int = 1, dtype=None):
+    """Contract the trailing `contract` dims of x with leading dims of kernel."""
+    k = params["kernel"]
+    if dtype is not None:
+        k = k.astype(dtype)
+    n_out = k.ndim - contract
+    dn = (tuple(range(x.ndim - contract, x.ndim)), tuple(range(contract)))
+    y = jax.lax.dot_general(x, k, (dn, ((), ())))
+    if "bias" in params:
+        b = params["bias"]
+        if dtype is not None:
+            b = b.astype(dtype)
+        y = y + b
+    del n_out
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+
+
+def embedding_specs(vocab: int, d: int) -> Dict[str, Spec]:
+    return {"table": Spec((vocab, d), ("vocab", "embed"), init="embed", scale=0.02)}
+
+
+def embed(params, ids: jax.Array, dtype) -> jax.Array:
+    out = jnp.take(params["table"].astype(dtype), ids, axis=0)
+    return out
+
+
+def unembed(params, x: jax.Array, dtype) -> jax.Array:
+    return jnp.einsum("...d,vd->...v", x, params["table"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+
+
+def activation(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "tanh": jnp.tanh,
+    }[name]

@@ -1,0 +1,108 @@
+"""The paper's own agent torsos (Figure 3).
+
+Shallow: Conv 8x8/4 x16 -> Conv 4x4/2 x32 -> FC 256 (1.2M params w/ LSTM).
+Deep: 3 sections of [conv3x3 + maxpool/2 + 2 residual blocks (2x conv3x3)]
+with channels (16, 32, 32), then FC 256 (15 conv layers, 1.6M params).
+
+Inputs are (B, H, W, C) uint8 pixels in [0, 255].
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Spec, dense, dense_specs
+
+
+def _conv_spec(name: str, kh, kw, cin, cout) -> Dict[str, Spec]:
+    return {"kernel": Spec((kh, kw, cin, cout), (None, None, None, None),
+                           init="normal"),
+            "bias": Spec((cout,), (None,), init="zeros")}
+
+
+def _conv(params, x, stride: int, padding: str = "SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, params["kernel"].astype(x.dtype),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + params["bias"].astype(x.dtype)
+
+
+def _maxpool(x, window: int = 3, stride: int = 2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, window, window, 1),
+        (1, stride, stride, 1), "SAME")
+
+
+def _flat_dim(hw: Tuple[int, int, int], reductions: int, channels: int) -> int:
+    h, w, _ = hw
+    for _ in range(reductions):
+        h = math.ceil(h / 2)
+        w = math.ceil(w / 2)
+    return h * w * channels
+
+
+# ---------------------------------------------------------------------------
+# Shallow
+
+
+def shallow_specs(image_hw, d_out: int = 256) -> Dict:
+    h, w, c = image_hw
+    h2 = math.ceil(math.ceil((h - 4) / 4 + 1) / 2)  # valid-ish; use SAME: h/4 then /2
+    del h2
+    flat = _flat_dim(image_hw, 3, 32)  # strides 4 then 2 => /8 total
+    return {
+        "conv1": _conv_spec("conv1", 8, 8, c, 16),
+        "conv2": _conv_spec("conv2", 4, 4, 16, 32),
+        "fc": dense_specs((flat,), (d_out,), (None,), ("embed",), bias=True),
+    }
+
+
+def shallow_apply(params, img) -> jax.Array:
+    x = img.astype(jnp.float32) / 255.0
+    x = jax.nn.relu(_conv(params["conv1"], x, 4))
+    x = jax.nn.relu(_conv(params["conv2"], x, 2))
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(dense(params["fc"], x))
+
+
+# ---------------------------------------------------------------------------
+# Deep residual
+
+
+_DEEP_CHANNELS = (16, 32, 32)
+
+
+def deep_specs(image_hw, d_out: int = 256) -> Dict:
+    c_in = image_hw[2]
+    specs: Dict = {}
+    for s, ch in enumerate(_DEEP_CHANNELS):
+        sec: Dict = {"conv": _conv_spec(f"s{s}", 3, 3, c_in, ch)}
+        for b in range(2):
+            sec[f"res{b}a"] = _conv_spec(f"s{s}r{b}a", 3, 3, ch, ch)
+            sec[f"res{b}b"] = _conv_spec(f"s{s}r{b}b", 3, 3, ch, ch)
+        specs[f"section{s}"] = sec
+        c_in = ch
+    flat = _flat_dim(image_hw, len(_DEEP_CHANNELS), _DEEP_CHANNELS[-1])
+    specs["fc"] = dense_specs((flat,), (d_out,), (None,), ("embed",), bias=True)
+    return specs
+
+
+def deep_apply(params, img) -> jax.Array:
+    x = img.astype(jnp.float32) / 255.0
+    for s in range(len(_DEEP_CHANNELS)):
+        sec = params[f"section{s}"]
+        x = _conv(sec["conv"], x, 1)
+        x = _maxpool(x)
+        for b in range(2):
+            y = jax.nn.relu(x)
+            y = _conv(sec[f"res{b}a"], y, 1)
+            y = jax.nn.relu(y)
+            y = _conv(sec[f"res{b}b"], y, 1)
+            x = x + y
+    x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(dense(params["fc"], x))

@@ -1,0 +1,59 @@
+"""LSTM core used by the paper's own agent architectures (Fig. 3).
+
+The IMPALA learner folds time into batch everywhere except the LSTM; the
+LSTM itself runs under ``lax.scan`` over time, with the actor-provided
+initial state (the paper sends the initial LSTM state with each
+trajectory) and episode-boundary resets via the `done` flags.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Spec, dense, dense_specs
+
+
+def lstm_specs(d_in: int, width: int) -> Dict:
+    return {
+        "wx": dense_specs((d_in,), (4 * width,), ("embed",), (None,), bias=True),
+        "wh": dense_specs((width,), (4 * width,), (None,), (None,)),
+    }
+
+
+def lstm_step(params, carry, x):
+    """carry = (h, c) each (B, W); x (B, d_in)."""
+    h, c = carry
+    gates = dense(params["wx"], x) + dense(params["wh"], h)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h_new = jax.nn.sigmoid(o) * jnp.tanh(c_new)
+    return (h_new, c_new), h_new
+
+
+def lstm_apply(params, x, initial_state, done=None):
+    """x: (B, T, d_in); initial_state = (h0, c0) each (B, W).
+
+    done: optional (B, T) bool — resets state *before* consuming step t
+    (episode boundary handling for trajectories that span episodes).
+    Returns (outputs (B, T, W), final_state).
+    """
+    def body(carry, inp):
+        if done is None:
+            xt = inp
+        else:
+            xt, dt = inp
+            mask = (1.0 - dt.astype(jnp.float32))[:, None]
+            carry = (carry[0] * mask, carry[1] * mask)
+        return lstm_step(params, carry, xt)
+
+    xs = jnp.moveaxis(x, 1, 0)
+    inputs = xs if done is None else (xs, jnp.moveaxis(done, 1, 0))
+    final, ys = jax.lax.scan(body, initial_state, inputs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def lstm_zero_state(batch: int, width: int):
+    z = jnp.zeros((batch, width), jnp.float32)
+    return (z, z)

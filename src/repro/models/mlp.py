@@ -1,0 +1,41 @@
+"""Feed-forward blocks: plain MLP, GeGLU (gemma), SwiGLU (llama-family)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import Spec, dense, dense_specs
+from repro.sharding.rules import lc
+
+
+def mlp_specs(cfg: ArchConfig, d_ff: int = 0) -> Dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    gated = cfg.activation in ("geglu", "swiglu")
+    specs = {
+        "up": dense_specs((d,), (ff,), ("embed",), ("ff",)),
+        "down": dense_specs((ff,), (d,), ("ff",), ("embed",)),
+    }
+    if gated:
+        specs["gate"] = dense_specs((d,), (ff,), ("embed",), ("ff",))
+    return specs
+
+
+def apply_mlp(params, x, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    act = cfg.activation
+    up = dense(params["up"], x, dtype=dtype)
+    up = lc(up, ("batch", "seq", "ff"))
+    if act == "geglu":
+        h = common.activation("gelu")(dense(params["gate"], x, dtype=dtype)) * up
+    elif act == "swiglu":
+        h = common.activation("silu")(dense(params["gate"], x, dtype=dtype)) * up
+    else:
+        h = common.activation(act)(up)
+    h = lc(h, ("batch", "seq", "ff"))
+    y = dense(params["down"], h, dtype=dtype)
+    return lc(y, ("batch", "seq", "embed"))

@@ -1,0 +1,149 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a u_t + b_a)              recurrence gate
+    i_t = sigmoid(W_x u_t + b_x)              input gate
+    a_t = exp(c * r_t * log sigmoid(Lambda))  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The diagonal linear recurrence is the sequential hot spot targeted by
+``kernels/linear_scan.py``; the reference path uses a chunked scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Spec, dense, dense_specs
+from repro.models.ssm import _causal_conv
+from repro.sharding.rules import lc
+
+_C = 8.0
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def rglru_specs(cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    cw = cfg.rglru.conv_width
+    return {
+        # Griffin recurrent block: two input branches + output proj
+        "in_gate": dense_specs((d,), (w,), ("embed",), ("lru",)),   # gelu branch
+        "in_rec": dense_specs((d,), (w,), ("embed",), ("lru",)),    # recurrent branch
+        "conv": {"kernel": Spec((cw, w), ("conv", "lru"), init="normal"),
+                 "bias": Spec((w,), ("lru",), init="zeros")},
+        "gate_a": dense_specs((w,), (w,), ("lru",), (None,), bias=True),
+        "gate_x": dense_specs((w,), (w,), ("lru",), (None,), bias=True),
+        "lam": {"w": Spec((w,), ("lru",), init="normal")},
+        "out": dense_specs((w,), (d,), ("lru",), ("embed",)),
+    }
+
+
+def chunked_diag_scan(a, b, h0=None, chunk: int = 256):
+    """h_t = a_t * h_{t-1} + b_t over axis 1. a, b: (B, T, W) float32.
+
+    Sequential over chunks (bounded memory), associative within a chunk.
+    Returns (h (B,T,W), h_final (B,W)).
+    """
+    bsz, t, w = a.shape
+    pad = (-t) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // chunk
+    ac = jnp.moveaxis(a.reshape(bsz, nc, chunk, w), 1, 0)
+    bc = jnp.moveaxis(b.reshape(bsz, nc, chunk, w), 1, 0)
+    h_init = jnp.zeros((bsz, w), jnp.float32) if h0 is None else h0
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, inp):
+        ak, bk = inp
+        aa, bb = jax.lax.associative_scan(combine, (ak, bk), axis=1)
+        hk = aa * h[:, None, :] + bb
+        return hk[:, -1], hk
+
+    h_final, hs = jax.lax.scan(body, h_init, (ac, bc))
+    h = jnp.moveaxis(hs, 0, 1).reshape(bsz, nc * chunk, w)[:, :t]
+    return h, h_final
+
+
+def rglru_core(params, u, h0=None, chunk: int = 256):
+    """u: (B,T,W) -> (h (B,T,W) f32, h_final (B,W) f32)."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(params["gate_a"], u32))
+    i = jax.nn.sigmoid(dense(params["gate_x"], u32))
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"]["w"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u32)
+    return chunked_diag_scan(a, gated, h0, chunk)
+
+
+def rglru_core_step(params, u, h):
+    """u: (B,W), h: (B,W) -> (y, h')."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(params["gate_a"], u32))
+    i = jax.nn.sigmoid(dense(params["gate_x"], u32))
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"]["w"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u32)
+    return h_new, h_new
+
+
+def apply_rglru(params, x, cfg: ArchConfig, *, mode: str = "train",
+                state: Optional[Dict[str, jax.Array]] = None,
+                ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Griffin recurrent block. x: (B,T,d_model).
+
+    state = {'h': (B,W) f32, 'conv': (B, conv_width-1, W)}.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    w = _width(cfg)
+    bsz, t, _ = x.shape
+
+    gate_branch = jax.nn.gelu(dense(params["in_gate"], x, dtype=dtype))
+    rec = dense(params["in_rec"], x, dtype=dtype)
+    rec = lc(rec, ("batch", "seq", "lru"))
+
+    conv_state = state["conv"] if state is not None else None
+    rec, new_conv = _causal_conv(rec, params["conv"]["kernel"],
+                                 params["conv"]["bias"], conv_state)
+
+    if mode == "decode":
+        assert state is not None and t == 1
+        h_new, y = rglru_core_step(params, rec[:, 0], state["h"])
+        y = y[:, None]
+        new_state = {"h": h_new, "conv": new_conv}
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_final = rglru_core(params, rec)
+        if mode == "prefill":
+            cw = cfg.rglru.conv_width
+            conv_in = dense(params["in_rec"], x, dtype=dtype)
+            tail = conv_in[:, -(cw - 1):]
+            if tail.shape[1] < cw - 1:
+                tail = jnp.pad(tail, ((0, 0), (cw - 1 - tail.shape[1], 0), (0, 0)))
+            new_state = {"h": h_final, "conv": tail}
+        else:
+            new_state = None
+
+    y = y.astype(dtype) * gate_branch
+    y = lc(y, ("batch", "seq", "lru"))
+    out = dense(params["out"], y, dtype=dtype)
+    return lc(out, ("batch", "seq", "embed")), new_state
+
+
+def rglru_state_abstract(batch: int, cfg: ArchConfig, dtype):
+    w = _width(cfg)
+    cw = cfg.rglru.conv_width
+    return {"h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, cw - 1, w), dtype)}

@@ -1,0 +1,202 @@
+"""Mamba-2 (state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: within a chunk the quadratic "attention" form, across chunks
+a diagonal linear recurrence on the (H, P, N) state. The cross-chunk state
+pass is the sequential hot spot targeted by ``kernels/linear_scan.py``;
+the reference path below carries it through a ``lax.scan``.
+
+Layouts: x (B, T, H, P); B/C (B, T, N) (single group); state (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Spec, dense, dense_specs, rmsnorm, rmsnorm_specs
+from repro.sharding.rules import lc
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = s.num_heads or d_inner // s.head_dim
+    return d_inner, heads, s.head_dim, s.state_dim
+
+
+def ssm_specs(cfg: ArchConfig) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    conv_ch = d_inner + 2 * n  # conv over x, B, C as in mamba2
+    return {
+        "in_zx": dense_specs((d,), (2 * d_inner,), ("embed",), ("ff",)),
+        "in_bc": dense_specs((d,), (2 * n,), ("embed",), (None,)),
+        "in_dt": dense_specs((d,), (h,), ("embed",), ("ssm_heads",)),
+        "conv": {"kernel": Spec((s.conv_width, conv_ch), ("conv", "ff"),
+                                init="normal"),
+                 "bias": Spec((conv_ch,), ("ff",), init="zeros")},
+        "dt_bias": {"w": Spec((h,), ("ssm_heads",), init="zeros")},
+        "a_log": {"w": Spec((h,), ("ssm_heads",), init="ones")},
+        "d_skip": {"w": Spec((h,), ("ssm_heads",), init="ones")},
+        "out_norm": rmsnorm_specs(d_inner, "ff"),
+        "out": dense_specs((d_inner,), (d,), ("ff",), ("embed",)),
+    }
+
+
+def _causal_conv(x, kernel, bias, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x:(B,T,C) kernel:(W,C). If state (B,W-1,C) is
+    given, runs in streaming mode and returns (y, new_state)."""
+    w = kernel.shape[0]
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xin[:, -(w - 1):]
+    else:
+        xin = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+        new_state = None
+    y = sum(xin[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+            for i in range(w))
+    y = y + bias.astype(x.dtype)
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (B,T,H,P) f32; dt: (B,T,H) f32 (softplus'ed); a_log: (H,) (A = -exp);
+    b, c: (B,T,N) f32; d_skip: (H,).
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nc = tt // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))          # (H,) negative
+    log_a = dt * a                                    # (B,T,H) <= 0
+    xdt = x * dt[..., None]
+
+    # reshape to chunks, scan sequentially carrying state
+    def r(z):
+        return z.reshape((bsz, nc, chunk) + z.shape[2:])
+    xc, dtc, bc_, cc, lac = map(r, (xdt, dt, b, c, log_a))
+
+    state0 = (jnp.zeros((bsz, h, p, n), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+
+    def body(state, inp):
+        xk, bk, ck, lak = inp      # (B,L,H,P) (B,L,N) (B,L,N) (B,L,H)
+        cum = jnp.cumsum(lak, axis=1)                   # (B,L,H)
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) x_j
+        scores = jnp.einsum("bin,bjn->bij", ck, bk)     # (B,L,L)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,H)
+        l = xk.shape[1]
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        gamma = jnp.where(mask[None, :, :, None], jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, gamma, xk)
+        # inter-chunk: y_i += C_i . (exp(cum_i) * state)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", ck, state, jnp.exp(cum))
+        # state update: state' = exp(cum_L) state + sum_j exp(cum_L - cum_j) x_j B_j
+        seg = jnp.exp(cum[:, -1:, :] - cum)             # (B,L,H)
+        new_state = (jnp.exp(cum[:, -1])[:, :, None, None] * state
+                     + jnp.einsum("bjhp,bjn,bjh->bhpn", xk, bk, seg))
+        return new_state, y_intra + y_inter
+
+    final_state, yc = jax.lax.scan(body, state0,
+                                   tuple(jnp.moveaxis(z, 1, 0)
+                                         for z in (xc, bc_, cc, lac)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(bsz, tt, h, p)[:, :t]
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x[:, :t]
+    return y, final_state
+
+
+def ssd_step(state, x, dt, a_log, b, c, d_skip):
+    """Single decode step. x:(B,H,P) dt:(B,H) b/c:(B,N). Returns (y, state')."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    la = dt * a                                        # (B,H)
+    decay = jnp.exp(la)[:, :, None, None]
+    xdt = x * dt[..., None]
+    new_state = decay * state + jnp.einsum("bhp,bn->bhpn", xdt, b)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c)
+    y = y + d_skip[None, :, None] * x
+    return y, new_state
+
+
+def apply_ssm(params, x, cfg: ArchConfig, *, mode: str = "train",
+              state: Optional[Dict[str, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,T,d_model). state = {'ssm': (B,H,P,N), 'conv': (B,W-1,C)}."""
+    dtype = jnp.dtype(cfg.dtype)
+    s = cfg.ssm
+    d_inner, h, p, n = _dims(cfg)
+    bsz, t, _ = x.shape
+
+    zx = dense(params["in_zx"], x, dtype=dtype)
+    z, xi = zx[..., :d_inner], zx[..., d_inner:]
+    bc = dense(params["in_bc"], x, dtype=dtype)
+    dt_raw = dense(params["in_dt"], x, dtype=dtype)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"]["w"].astype(jnp.float32))
+
+    conv_in = jnp.concatenate([xi, bc], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv_state = _causal_conv(
+        conv_in, params["conv"]["kernel"], params["conv"]["bias"], conv_state)
+    xi = conv_out[..., :d_inner]
+    b_ = conv_out[..., d_inner:d_inner + n].astype(jnp.float32)
+    c_ = conv_out[..., d_inner + n:].astype(jnp.float32)
+
+    xh = xi.reshape(bsz, t, h, p).astype(jnp.float32)
+    xh = lc(xh, ("batch", "seq", "ssm_heads", None))
+
+    if mode == "decode":
+        assert state is not None and t == 1
+        y, new_ssm = ssd_step(state["ssm"].astype(jnp.float32),
+                              xh[:, 0], dt[:, 0], params["a_log"]["w"],
+                              b_[:, 0], c_[:, 0], params["d_skip"]["w"])
+        y = y[:, None]
+        new_state = {"ssm": new_ssm, "conv": new_conv_state}
+    else:
+        init = state["ssm"].astype(jnp.float32) if state is not None else None
+        y, final = ssd_chunked(xh, dt, params["a_log"]["w"], b_, c_,
+                               params["d_skip"]["w"], s.chunk_size, init)
+        new_state = ({"ssm": final, "conv": new_conv_state}
+                     if mode == "prefill" else None)
+        if mode == "prefill" and new_conv_state is None:
+            # build streaming conv state from the raw tail of the inputs
+            w = s.conv_width
+            tail = conv_in[:, -(w - 1):]
+            if tail.shape[1] < w - 1:
+                tail = jnp.pad(tail, ((0, 0), (w - 1 - tail.shape[1], 0), (0, 0)))
+            new_state["conv"] = tail
+
+    y = y.reshape(bsz, t, d_inner).astype(dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["out_norm"], y)
+    y = lc(y, ("batch", "seq", "ff"))
+    out = dense(params["out"], y, dtype=dtype)
+    return lc(out, ("batch", "seq", "embed")), new_state
+
+
+def ssm_state_abstract(batch: int, cfg: ArchConfig, dtype):
+    s = cfg.ssm
+    d_inner, h, p, n = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, h, p, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_state_init(batch: int, cfg: ArchConfig, dtype):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        ssm_state_abstract(batch, cfg, dtype),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

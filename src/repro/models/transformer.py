@@ -1,0 +1,330 @@
+"""Decoder stacks: block types, scan-over-layers, enc-dec and VLM wiring.
+
+A *block* is a temporal mixer + (optionally) an FFN with pre-norms:
+  attn       full causal self-attention + MLP
+  local      sliding-window self-attention + MLP
+  recurrent  RG-LRU + MLP (recurrentgemma)
+  ssm        Mamba-2 SSD (no separate FFN; d_ff = 0)
+  moe        full causal self-attention + MoE FFN
+  cross      cross-attention (VLM image layers) + MLP
+  enc_dec    self-attn + cross-attn + MLP (whisper decoder)
+  enc        bidirectional self-attention + MLP (whisper encoder)
+
+Layers are grouped into the minimal repeating pattern and scanned
+(`lax.scan`) over stacked parameters so the HLO stays compact for the
+512-device dry-run; `cfg.remat` wraps the scan body in jax.checkpoint.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import Spec, make_norm
+from repro.sharding.rules import lc
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+
+
+def layer_plan(cfg: ArchConfig) -> Tuple[List[str], List[str]]:
+    """Returns (scanned_kinds, leftover_kinds): the repeating group pattern
+    and the unrolled remainder."""
+    fam = cfg.family
+    if fam == "dense":
+        kinds = ["local" if cfg.sliding_window else "attn"]
+        return kinds, []
+    if fam == "moe":
+        return ["moe"], []
+    if fam == "ssm":
+        return ["ssm"], []
+    if fam == "hybrid":
+        pattern = ["recurrent" if p == "recurrent" else "local"
+                   for p in cfg.rglru.pattern]
+        n_groups = cfg.num_layers // len(pattern)
+        leftover = cfg.num_layers - n_groups * len(pattern)
+        return pattern, pattern[:leftover]
+    if fam == "vlm":
+        k = cfg.cross_attn_every
+        group = ["attn"] * (k - 1) + ["cross"]
+        assert cfg.num_layers % k == 0
+        return group, []
+    if fam == "audio":
+        return ["enc_dec"], []
+    raise ValueError(fam)
+
+
+def num_groups(cfg: ArchConfig) -> int:
+    group, leftover = layer_plan(cfg)
+    return (cfg.num_layers - len(leftover)) // len(group)
+
+
+# ---------------------------------------------------------------------------
+# Single block
+
+
+def block_specs(cfg: ArchConfig, kind: str) -> Dict:
+    d = cfg.d_model
+    norm_specs, _ = make_norm(cfg.norm, d)
+    specs: Dict = {"norm1": norm_specs}
+    if kind in ("attn", "local", "enc", "moe"):
+        specs["attn"] = attn_lib.attention_specs(cfg)
+        specs["norm2"] = norm_specs
+        specs["ffn"] = (moe_lib.moe_specs(cfg) if kind == "moe"
+                        else mlp_lib.mlp_specs(cfg))
+    elif kind == "recurrent":
+        specs["rglru"] = rglru_lib.rglru_specs(cfg)
+        specs["norm2"] = norm_specs
+        specs["ffn"] = mlp_lib.mlp_specs(cfg)
+    elif kind == "ssm":
+        specs["ssm"] = ssm_lib.ssm_specs(cfg)
+    elif kind == "cross":
+        specs["xattn"] = attn_lib.attention_specs(cfg)
+        specs["norm2"] = norm_specs
+        specs["ffn"] = mlp_lib.mlp_specs(cfg)
+    elif kind == "enc_dec":
+        specs["attn"] = attn_lib.attention_specs(cfg)
+        specs["normx"] = norm_specs
+        specs["xattn"] = attn_lib.attention_specs(cfg)
+        specs["norm2"] = norm_specs
+        specs["ffn"] = mlp_lib.mlp_specs(cfg)
+    else:
+        raise ValueError(kind)
+    return specs
+
+
+def apply_block(params, x, positions, cfg: ArchConfig, kind: str, *,
+                mode: str, cache: Optional[PyTree],
+                cross_ctx: Optional[jax.Array]):
+    """Returns (x, new_cache, aux_loss)."""
+    _, norm = make_norm(cfg.norm, cfg.d_model)
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: PyTree = None
+
+    def attn_cache():
+        return None if cache is None else cache
+
+    if kind in ("attn", "local", "enc", "moe"):
+        h = norm(params["norm1"], x)
+        window = cfg.sliding_window if kind == "local" else 0
+        if kind == "local" and cfg.rglru is not None:
+            window = cfg.rglru.attention_window
+        y, kv = attn_lib.apply_attention(
+            params["attn"], h, positions, cfg,
+            causal=(kind != "enc"), window=window, mode=mode,
+            cache=None if cache is None else cache.get("kv"),
+            cache_index=None if cache is None else cache.get("index"))
+        x = x + y
+        h = norm(params["norm2"], x)
+        if kind == "moe":
+            y, aux = moe_lib.apply_moe(params["ffn"], h, cfg)
+        else:
+            y = mlp_lib.apply_mlp(params["ffn"], h, cfg)
+        x = x + y
+        if kv is not None:
+            new_cache = {"kv": kv}
+    elif kind == "recurrent":
+        h = norm(params["norm1"], x)
+        y, st = rglru_lib.apply_rglru(
+            params["rglru"], h, cfg, mode=mode,
+            state=None if cache is None else cache.get("rglru"))
+        x = x + y
+        h = norm(params["norm2"], x)
+        x = x + mlp_lib.apply_mlp(params["ffn"], h, cfg)
+        if st is not None:
+            new_cache = {"rglru": st}
+    elif kind == "ssm":
+        h = norm(params["norm1"], x)
+        y, st = ssm_lib.apply_ssm(
+            params["ssm"], h, cfg, mode=mode,
+            state=None if cache is None else cache.get("ssm"))
+        x = x + y
+        if st is not None:
+            new_cache = {"ssm": st}
+    elif kind == "cross":
+        h = norm(params["norm1"], x)
+        if mode == "decode" and cache is not None and "cross_kv" in cache:
+            y = attn_lib.apply_cross_attention_cached(
+                params["xattn"], h, cache["cross_kv"], cfg)
+            new_cache = {"cross_kv": cache["cross_kv"]}
+        else:
+            assert cross_ctx is not None
+            y, _ = attn_lib.apply_attention(
+                params["xattn"], h, positions, cfg, kv_x=cross_ctx, mode=mode)
+            if mode == "prefill":
+                new_cache = {"cross_kv": attn_lib.precompute_cross_cache(
+                    params["xattn"], cross_ctx, cfg)}
+        x = x + y
+        h = norm(params["norm2"], x)
+        x = x + mlp_lib.apply_mlp(params["ffn"], h, cfg)
+    elif kind == "enc_dec":
+        h = norm(params["norm1"], x)
+        y, kv = attn_lib.apply_attention(
+            params["attn"], h, positions, cfg, causal=True, mode=mode,
+            cache=None if cache is None else cache.get("kv"),
+            cache_index=None if cache is None else cache.get("index"))
+        x = x + y
+        h = norm(params["normx"], x)
+        if mode == "decode" and cache is not None and "cross_kv" in cache:
+            y = attn_lib.apply_cross_attention_cached(
+                params["xattn"], h, cache["cross_kv"], cfg)
+        else:
+            assert cross_ctx is not None
+            y, _ = attn_lib.apply_attention(
+                params["xattn"], h, positions, cfg, kv_x=cross_ctx, mode=mode)
+        x = x + y
+        h = norm(params["norm2"], x)
+        x = x + mlp_lib.apply_mlp(params["ffn"], h, cfg)
+        nc = {}
+        if kv is not None:
+            nc["kv"] = kv
+        if mode == "prefill":
+            nc["cross_kv"] = attn_lib.precompute_cross_cache(
+                params["xattn"], cross_ctx, cfg)
+        elif mode == "decode" and cache is not None and "cross_kv" in cache:
+            nc["cross_kv"] = cache["cross_kv"]
+        new_cache = nc or None
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked scan over groups
+
+
+def stack_specs(specs: PyTree, n: int) -> PyTree:
+    def f(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, ("layers",) + s.logical,
+                    init=s.init, dtype=s.dtype, scale=s.scale)
+    return jax.tree.map(f, specs, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def group_specs(cfg: ArchConfig) -> Dict:
+    group, leftover = layer_plan(cfg)
+    n = num_groups(cfg)
+    one_group = {f"l{i}": block_specs(cfg, k) for i, k in enumerate(group)}
+    specs: Dict = {"scan": stack_specs(one_group, n)}
+    for i, k in enumerate(leftover):
+        specs[f"tail{i}"] = block_specs(cfg, k)
+    return specs
+
+
+def _cache_index_tree(cache):
+    return cache
+
+
+def apply_stack(params, x, positions, cfg: ArchConfig, *, mode: str,
+                caches: Optional[PyTree] = None,
+                cache_index: Optional[jax.Array] = None,
+                cross_ctx: Optional[jax.Array] = None):
+    """Run the full layer stack.
+
+    caches: {'scan': stacked-per-group cache pytree (leading dim = n_groups),
+             'tail<i>': per-layer cache} or None.
+    Returns (x, new_caches (same structure) or None, total_aux).
+    """
+    group, leftover = layer_plan(cfg)
+    total_aux = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, per_group):
+        h, auxc = carry
+        p, cache = per_group
+        new_caches = {}
+        for i, kind in enumerate(group):
+            c = None if cache is None else cache.get(f"l{i}")
+            if c is not None and cache_index is not None and "kv" in c:
+                c = dict(c, index=cache_index)
+            h, nc, aux = apply_block(p[f"l{i}"], h, positions, cfg, kind,
+                                     mode=mode, cache=c, cross_ctx=cross_ctx)
+            if nc is not None:
+                nc.pop("index", None)
+                new_caches[f"l{i}"] = nc
+            auxc = auxc + aux
+        return (h, auxc), (new_caches if new_caches else None)
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body)
+
+    scan_caches = None if caches is None else caches.get("scan")
+    if cfg.scan_layers:
+        (x, total_aux), new_scan_caches = jax.lax.scan(
+            body, (x, total_aux), (params["scan"], scan_caches))
+    else:
+        # unrolled: same stacked params/caches, python loop (dry-run mode —
+        # XLA cost_analysis counts a while body once, unrolling keeps the
+        # roofline FLOPs/bytes honest)
+        n = jax.tree.leaves(params["scan"])[0].shape[0]
+        collected = []
+        carry = (x, total_aux)
+        for gi in range(n):
+            p_g = jax.tree.map(lambda a: a[gi], params["scan"])
+            c_g = (None if scan_caches is None else
+                   jax.tree.map(lambda a: a[gi], scan_caches))
+            carry, nc = body(carry, (p_g, c_g))
+            collected.append(nc)
+        x, total_aux = carry
+        if collected and collected[0] is not None:
+            new_scan_caches = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *collected)
+        else:
+            new_scan_caches = None
+
+    new_caches: Dict = {}
+    if new_scan_caches is not None:
+        new_caches["scan"] = new_scan_caches
+    for i, kind in enumerate(leftover):
+        c = None if caches is None else caches.get(f"tail{i}")
+        if c is not None and cache_index is not None and "kv" in c:
+            c = dict(c, index=cache_index)
+        x, nc, aux = apply_block(params[f"tail{i}"], x, positions, cfg, kind,
+                                 mode=mode, cache=c, cross_ctx=cross_ctx)
+        if nc is not None:
+            nc.pop("index", None)
+            new_caches[f"tail{i}"] = nc
+        total_aux = total_aux + aux
+    return x, (new_caches if new_caches else None), total_aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper-style encoder (bidirectional)
+
+
+def encoder_specs(cfg: ArchConfig) -> Dict:
+    enc_cfg = cfg  # same dims
+    one = block_specs(enc_cfg, "enc")
+    return {"scan": stack_specs(one, cfg.encoder_layers)}
+
+
+def apply_encoder(params, embeds, cfg: ArchConfig):
+    """embeds: (B, T_enc, d) stub frontend output."""
+    b, t, _ = embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+
+    def body(h, p):
+        h, _, _ = apply_block(p, h, positions, cfg, "enc",
+                              mode="train", cache=None, cross_ctx=None)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, embeds, params["scan"])
+    else:
+        x = embeds
+        n = jax.tree.leaves(params["scan"])[0].shape[0]
+        for gi in range(n):
+            x, _ = body(x, jax.tree.map(lambda a: a[gi], params["scan"]))
+    return x

@@ -1,0 +1,101 @@
+"""From-scratch optimizer stack (no optax on this box).
+
+The paper's learner uses RMSProp (momentum 0, tunable epsilon, decay .99)
+with global-norm gradient clipping and an (optionally PBT-controlled /
+linearly annealed) learning rate. Implemented as composable transforms
+with explicit, shardable state pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    # update(grads, state, params, lr) -> (updates, new_state)
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], Tuple[PyTree, PyTree]]
+
+
+def rmsprop(decay: float = 0.99, eps: float = 0.1,
+            momentum: float = 0.0) -> Optimizer:
+    """TF-style RMSProp as used by the paper (Appendix D/G)."""
+
+    def init(params):
+        ms = jax.tree.map(jnp.zeros_like, params)
+        if momentum:
+            mom = jax.tree.map(jnp.zeros_like, params)
+            return {"ms": ms, "mom": mom}
+        return {"ms": ms}
+
+    def update(grads, state, params, lr):
+        del params
+        ms = jax.tree.map(lambda m, g: decay * m + (1 - decay) * g * g,
+                          state["ms"], grads)
+        scaled = jax.tree.map(lambda g, m: g * jax.lax.rsqrt(m + eps),
+                              grads, ms)
+        if momentum:
+            mom = jax.tree.map(lambda mo, s: momentum * mo + lr * s,
+                               state["mom"], scaled)
+            return (jax.tree.map(lambda m: -m, mom), {"ms": ms, "mom": mom})
+        return (jax.tree.map(lambda s: -lr * s, scaled), {"ms": ms})
+
+    return Optimizer(init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        del params
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state["v"], grads)
+        tf = t.astype(jnp.float32)
+        c1 = 1 - b1 ** tf
+        c2 = 1 - b2 ** tf
+        upd = jax.tree.map(
+            lambda m_, v_: -lr * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps), m, v)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) +
+                                      u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+def linear_schedule(init_value: float, end_value: float,
+                    steps: int) -> Callable[[jax.Array], jax.Array]:
+    """The paper anneals the learning rate linearly to 0 over training."""
+    if steps <= 0:
+        return lambda step: jnp.float32(init_value)
+
+    def fn(step):
+        frac = jnp.clip(step.astype(jnp.float32) / steps, 0.0, 1.0)
+        return jnp.float32(init_value + (end_value - init_value) * frac)
+
+    return fn

@@ -1,0 +1,126 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh), in seconds-per-step:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+``cost_analysis()`` on an SPMD-compiled executable reports per-device
+FLOPs/bytes. Collective bytes are not in cost_analysis: we parse the
+compiled HLO and sum the *result* shapes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute (result-size is the
+per-device data moved to first order; all-gather results count the full
+gathered size, which upper-bounds (n-1)/n ingress).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module.
+
+    '-done' ops are skipped (their '-start' counterpart carries the shape
+    in async pairs; counting both would double)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _LINE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        out[kind] += _shape_bytes(type_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    useful_flops_ratio: Optional[float] = None
+
+
+def analyse(cost: Dict[str, float], hlo_text: str, hw: Dict[str, float],
+            model_flops: Optional[float] = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    coll_total = float(sum(coll.values()))
+    compute_s = flops / hw["peak_flops_bf16"]
+    memory_s = byts / hw["hbm_bw"]
+    collective_s = coll_total / hw["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    ratio = None
+    if model_flops:
+        # model_flops is whole-step; cost flops are per-device
+        ratio = model_flops / max(flops, 1.0)
+    return Roofline(flops, byts, coll_total, coll, compute_s, memory_s,
+                    collective_s, bottleneck, model_flops, ratio)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6*N*D for training (dense), 6*N_active*D (MoE); 2*N per
+# decoded token.
+
+
+def _active_params(arch, n_params: int) -> int:
+    if arch.moe is None:
+        return n_params
+    m = arch.moe
+    # expert FFN params scale down by (top_k / E); router+attn+embed stay
+    gated = arch.activation in ("geglu", "swiglu")
+    per_expert = arch.d_model * arch.d_ff * (3 if gated else 2)
+    expert_params = arch.num_layers * m.num_experts * per_expert
+    active_expert = expert_params * m.num_experts_per_tok / m.num_experts
+    return n_params - expert_params + int(active_expert)
+
+
+def model_flops(arch, n_params: int, shape, per_device: bool,
+                n_devices: int) -> float:
+    n_active = _active_params(arch, n_params)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * shape.global_batch
+    return total / n_devices if per_device else total

@@ -1,0 +1,124 @@
+"""Analytic per-device TPU memory model for the dry-run "fits" proof.
+
+``compiled.memory_analysis().temp_size_in_bytes`` on the CPU backend is an
+upper bound under the CPU thunk scheduler (which schedules for parallelism,
+not liveness, and keeps many per-layer transients nominally live — we
+measured remat-on == remat-off temp on CPU). A TPU buffer assignment
+reuses sequential layers' buffers, so we additionally report this analytic
+model, which is what the per-device HBM actually has to hold:
+
+  persistent: param shards (f32) + optimizer state + (train) grad shards
+  activations (train): checkpointed block inputs (one (B_loc, T, d) bf16
+    per layer group) + the working set of ONE block's fwd+bwd
+  caches (decode/prefill): KV/state shards
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import backbone as bb
+from repro.models import common
+from repro.models import transformer as tfm
+from repro.sharding.rules import Rules
+
+
+def _shard_bytes(specs, rules: Rules) -> int:
+    total = 0
+    for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, common.Spec)):
+        spec = rules.spec(s.logical, s.shape)
+        size = int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        denom = 1
+        for dim, p in enumerate(spec):
+            if p is None:
+                continue
+            axes = (p,) if isinstance(p, str) else p
+            for a in axes:
+                denom *= rules.mesh.shape[a]
+        total += size // denom
+    return total
+
+
+def _batch_shards(rules: Rules) -> int:
+    n = 1
+    ax = rules.table.get("batch")
+    if ax:
+        axes = (ax,) if isinstance(ax, str) else ax
+        for a in axes:
+            n *= rules.mesh.shape[a]
+    return n
+
+
+def _model_shards(rules: Rules) -> int:
+    out = 1
+    for name, size in rules.mesh.shape.items():
+        if name not in ("data", "pod"):
+            out *= size
+    return out
+
+
+def estimate(arch: ArchConfig, shape: InputShape, rules: Rules,
+             num_actions: int = 18) -> Dict[str, float]:
+    specs = bb.backbone_specs(arch, num_actions)
+    p_bytes = _shard_bytes(specs, rules)            # f32 params per device
+    b_loc = max(shape.global_batch // _batch_shards(rules), 1)
+    d = arch.d_model
+    act = 2  # bf16
+    out: Dict[str, float] = {"params": float(p_bytes)}
+
+    if shape.kind == "train":
+        t = shape.seq_len
+        out["opt_state"] = float(p_bytes)           # rmsprop ms
+        out["grads"] = float(p_bytes)
+        n_blocks = arch.num_layers
+        # checkpointed residuals: block input per layer
+        out["residuals"] = float(n_blocks * b_loc * t * d * act)
+        # one block's live working set (dominated by attention scores f32
+        # chunk or MoE dispatch buffers), sharded over model where possible
+        h_loc = max(arch.num_heads // _model_shards(rules), 1) \
+            if arch.num_heads else 1
+        qc = min(t, 4096)
+        attn_ws = b_loc * h_loc * qc * min(t, 4096) * 4
+        ff_loc = max(arch.d_ff // _model_shards(rules), arch.d_ff and 1)
+        mlp_ws = b_loc * t * max(ff_loc, d) * act * 3
+        moe_ws = 0
+        if arch.moe is not None:
+            cap = int(b_loc * t * arch.moe.num_experts_per_tok /
+                      arch.moe.num_experts * 1.25)
+            e_loc = max(arch.moe.num_experts // _model_shards(rules), 1)
+            moe_ws = (e_loc * cap * max(arch.d_ff, d) * act * 3 +
+                      b_loc * t * arch.moe.num_experts_per_tok * d * act)
+        out["block_workspace"] = float(max(attn_ws + mlp_ws, moe_ws) * 2)
+    else:
+        # prefill/decode: cache + one block workspace
+        cache_abs = bb.cache_abstract(
+            shape.global_batch,
+            min(arch.sliding_window or shape.seq_len, shape.seq_len), arch)
+        axes = bb.cache_logical_axes(arch)
+        cache_bytes = 0
+        for sd, ax in zip(
+                jax.tree.leaves(cache_abs,
+                                is_leaf=lambda x: isinstance(
+                                    x, jax.ShapeDtypeStruct)),
+                jax.tree.leaves(axes,
+                                is_leaf=lambda x: isinstance(x, tuple))):
+            spec = rules.spec(ax, sd.shape)
+            size = int(np.prod(sd.shape)) * sd.dtype.itemsize
+            denom = 1
+            for p in spec:
+                if p is None:
+                    continue
+                for a in ((p,) if isinstance(p, str) else p):
+                    denom *= rules.mesh.shape[a]
+            cache_bytes += size // denom
+        out["cache"] = float(cache_bytes)
+        t = shape.seq_len if shape.kind == "prefill" else 1
+        out["block_workspace"] = float(b_loc * t * max(arch.d_ff, d) * act * 3)
+
+    out["total"] = float(sum(out.values()))
+    out["fits_16g"] = bool(out["total"] < 16e9)
+    return out

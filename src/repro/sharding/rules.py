@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules (t5x/MaxText style) with divisibility fallback.
+
+Tensors throughout the model code are annotated with *logical* axis names
+(``('batch', 'seq', 'embed')``). A ``Rules`` object maps logical names to
+mesh axes and resolves them into ``PartitionSpec``s, replicating any
+dimension whose size is not divisible by the mesh axis product (this is
+what lets e.g. recurrentgemma's 10 heads lower on a 16-way model axis).
+
+When no mesh is active (unit tests on CPU) all annotations are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+logger = logging.getLogger(__name__)
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Baseline logical->mesh rules for a ('pod', 'data', 'model') mesh.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "lru": "model",
+    "actions": None,
+    "layers": None,
+    "conv": None,
+    "kv_seq": None,
+    "stack": None,
+}
+
+
+class Rules:
+    """Resolver from logical axis tuples to PartitionSpecs on a mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+        self.mesh = mesh
+        table = dict(DEFAULT_RULES)
+        if rules:
+            table.update(rules)
+        # Drop mesh axes that don't exist on this mesh (e.g. 'pod' on 2D mesh)
+        clean: Dict[str, MeshAxes] = {}
+        for k, v in table.items():
+            if v is None:
+                clean[k] = None
+            else:
+                axes = (v,) if isinstance(v, str) else tuple(v)
+                axes = tuple(a for a in axes if a in mesh.axis_names)
+                clean[k] = axes if axes else None
+        self.table = clean
+
+    def _axis_size(self, mesh_axes: MeshAxes) -> int:
+        if mesh_axes is None:
+            return 1
+        axes = (mesh_axes,) if isinstance(mesh_axes, str) else mesh_axes
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+    def spec(self, logical: Sequence[Optional[str]],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical axes (+ optional shape for divisibility) to a spec."""
+        parts = []
+        used: set = set()
+        for i, name in enumerate(logical):
+            if name is None:
+                parts.append(None)
+                continue
+            mesh_axes = self.table.get(name)
+            if mesh_axes is None:
+                parts.append(None)
+                continue
+            axes = (mesh_axes,) if isinstance(mesh_axes, str) else tuple(mesh_axes)
+            # an axis may appear only once in a spec
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                parts.append(None)
+                continue
+            if shape is not None:
+                size = self._axis_size(axes)
+                if shape[i] % size != 0:
+                    logger.debug(
+                        "replicating logical axis %r (dim %d of size %d not "
+                        "divisible by mesh %s=%d)", name, i, shape[i], axes, size)
+                    parts.append(None)
+                    continue
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        return P(*parts)
+
+    def sharding(self, logical: Sequence[Optional[str]],
+                 shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+# --------------------------------------------------------------------------
+# Thread-local active rules so model code can annotate without plumbing.
+
+_state = threading.local()
+
+
+def get_rules() -> Optional[Rules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def logical_constraint(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Apply with_sharding_constraint from logical axes; no-op without rules."""
+    rules = get_rules()
+    if rules is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(logical, x.shape))
+
+
+# Short alias used pervasively in model code.
+lc = logical_constraint

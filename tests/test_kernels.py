@@ -1,0 +1,197 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels import ops
+from repro.kernels.vtrace import vtrace_pallas
+from repro.kernels.linear_scan import linear_scan_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+
+
+# ---------------------------------------------------------------------------
+# vtrace kernel
+
+
+@pytest.mark.parametrize("t,b", [(1, 1), (7, 3), (64, 128), (100, 130),
+                                 (257, 64), (512, 8)])
+def test_vtrace_kernel_shapes(t, b):
+    key = jax.random.key(t * 1000 + b)
+    ks = jax.random.split(key, 6)
+    rho = jnp.exp(jax.random.normal(ks[0], (t, b)) * 0.3).clip(max=1.0)
+    disc = jnp.where(jax.random.uniform(ks[1], (t, b)) < 0.1, 0.0, 0.95)
+    rew = jax.random.normal(ks[2], (t, b))
+    v = jax.random.normal(ks[3], (t, b))
+    vtp1 = jnp.concatenate([v[1:], jax.random.normal(ks[4], (1, b))], 0)
+    vs_r, pg_r = ref.vtrace_ref(rho, rho, disc, rew, v, vtp1)
+    vs_k, pg_k = vtrace_pallas(rho, rho, disc, rew, v, vtp1,
+                               t_chunk=64, b_block=128)
+    np.testing.assert_allclose(vs_r, vs_k, atol=1e-5)
+    np.testing.assert_allclose(pg_r, pg_k, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 130), st.integers(1, 40),
+       st.sampled_from([16, 64, 256]), st.integers(0, 2 ** 31 - 1))
+def test_vtrace_kernel_property(t, b, chunk, seed):
+    ks = jax.random.split(jax.random.key(seed), 6)
+    rho = jnp.exp(jax.random.normal(ks[0], (t, b)) * 0.4).clip(max=2.0)
+    c = jnp.minimum(rho, 1.0)
+    disc = jnp.where(jax.random.uniform(ks[1], (t, b)) < 0.2, 0.0, 0.9)
+    rew = jax.random.normal(ks[2], (t, b))
+    v = jax.random.normal(ks[3], (t, b))
+    vtp1 = jnp.concatenate([v[1:], jax.random.normal(ks[4], (1, b))], 0)
+    vs_r, pg_r = ref.vtrace_ref(rho, c, disc, rew, v, vtp1)
+    vs_k, pg_k = vtrace_pallas(rho, c, disc, rew, v, vtp1, t_chunk=chunk)
+    np.testing.assert_allclose(vs_r, vs_k, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(pg_r, pg_k, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# linear scan kernel
+
+
+@pytest.mark.parametrize("t,n", [(1, 1), (16, 64), (100, 300), (512, 1024),
+                                 (33, 7), (257, 129)])
+def test_linear_scan_shapes(t, n):
+    ks = jax.random.split(jax.random.key(t + n), 3)
+    a = jax.random.uniform(ks[0], (t, n), minval=0.5, maxval=1.0)
+    b = jax.random.normal(ks[1], (t, n))
+    h0 = jax.random.normal(ks[2], (n,))
+    r = ref.linear_scan_ref(a, b, h0)
+    k = linear_scan_pallas(a, b, h0, t_chunk=64, n_block=128)
+    np.testing.assert_allclose(r, k, atol=1e-5, rtol=1e-5)
+
+
+def test_linear_scan_zero_h0():
+    a = jnp.full((20, 32), 0.9)
+    b = jnp.ones((20, 32))
+    r = ref.linear_scan_ref(a, b)
+    k = linear_scan_pallas(a, b)
+    np.testing.assert_allclose(r, k, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_linear_scan_property(t, n, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    a = jax.random.uniform(ks[0], (t, n), minval=0.0, maxval=1.0)
+    b = jax.random.normal(ks[1], (t, n))
+    r = ref.linear_scan_ref(a, b)
+    k = linear_scan_pallas(a, b, t_chunk=32, n_block=64)
+    np.testing.assert_allclose(r, k, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention kernel
+
+
+@pytest.mark.parametrize("b,h,kh,s,d", [
+    (1, 1, 1, 8, 64), (2, 8, 2, 300, 64), (4, 16, 16, 1024, 128),
+    (1, 10, 1, 2000, 256), (3, 12, 4, 100, 32),
+])
+def test_decode_attention_shapes(b, h, kh, s, d):
+    ks = jax.random.split(jax.random.key(b * s + h), 4)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, d), jnp.float32)
+    lens = jax.random.randint(ks[3], (b,), 1, s + 1)
+    bias = jnp.where(jnp.arange(s)[None] < lens[:, None], 0.0, -1e30)
+    r = ref.decode_attention_ref(q, k, v, bias)
+    p = decode_attention_pallas(q, k, v, bias, s_chunk=256)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_bf16():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (2, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 128, 4, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 128, 4, 64), jnp.bfloat16)
+    bias = jnp.zeros((2, 128))
+    r = ref.decode_attention_ref(q, k, v, bias)
+    p = decode_attention_pallas(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(p, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch wrappers
+
+
+def test_ops_vtrace_dispatch():
+    ks = jax.random.split(jax.random.key(0), 5)
+    b, t = 4, 37
+    log_rhos = jax.random.normal(ks[0], (b, t)) * 0.3
+    disc = jnp.full((b, t), 0.95)
+    rew = jax.random.normal(ks[1], (b, t))
+    v = jax.random.normal(ks[2], (b, t))
+    boot = jax.random.normal(ks[3], (b,))
+    vs1, pg1 = ops.vtrace(log_rhos, disc, rew, v, boot, impl="ref")
+    vs2, pg2 = ops.vtrace(log_rhos, disc, rew, v, boot, impl="pallas")
+    np.testing.assert_allclose(vs1, vs2, atol=1e-5)
+    np.testing.assert_allclose(pg1, pg2, atol=1e-5)
+
+
+def test_ops_linear_scan_dispatch():
+    a = jnp.full((12, 16), 0.8)
+    b = jnp.ones((12, 16))
+    r1 = ops.linear_scan(a, b, impl="ref")
+    r2 = ops.linear_scan(a, b, impl="pallas")
+    np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill) kernel
+
+
+@pytest.mark.parametrize("b,t,h,kh,d,causal,window", [
+    (1, 64, 2, 2, 32, True, 0),
+    (2, 100, 4, 2, 64, True, 0),
+    (1, 128, 4, 1, 32, True, 24),
+    (1, 50, 2, 2, 16, False, 0),
+    (2, 200, 8, 4, 64, True, 64),
+    (1, 33, 3, 1, 8, True, 5),
+])
+def test_flash_attention_shapes(b, t, h, kh, d, causal, window):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    ks = jax.random.split(jax.random.key(b * t + h), 3)
+    q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kh, d), jnp.float32)
+    o_ref = ref.flash_attention_ref(q, k, v, causal, window)
+    o_ker = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                   q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_ker),
+                               atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 80), st.sampled_from([(2, 2), (4, 2), (4, 1)]),
+       st.integers(0, 30), st.integers(0, 2 ** 31 - 1))
+def test_flash_attention_property(t, heads, window, seed):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    h, kh = heads
+    d = 16
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, t, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (1, t, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (1, t, kh, d), jnp.float32)
+    o_ref = ref.flash_attention_ref(q, k, v, True, window)
+    o_ker = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                   q_block=16, kv_block=16)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_ker),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_ops_flash_attention_dispatch():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (1, 40, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 40, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 40, 2, 16), jnp.float32)
+    a = ops.flash_attention(q, k, v, impl="ref")
+    b = ops.flash_attention(q, k, v, impl="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)

@@ -1,0 +1,248 @@
+"""Layer-level unit tests: attention (dense vs chunked, windows, GQA),
+SSD chunked-vs-naive, RG-LRU scan, MoE dispatch, norms/rope."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+from repro.configs.registry import get_smoke_config
+from repro.models import attention as attn
+from repro.models import common, moe as moe_lib, ssm as ssm_lib
+from repro.models.rglru import chunked_diag_scan
+
+
+# ---------------------------------------------------------------------------
+# attention
+
+
+def _qkv(key, b, t, h, kh, d):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kh, d), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("h,kh", [(4, 4), (4, 2), (4, 1)])
+@pytest.mark.parametrize("window", [0, 7])
+def test_chunked_matches_dense(h, kh, window):
+    b, t, d = 2, 50, 16
+    q, k, v = _qkv(jax.random.key(h * 10 + window), b, t, h, kh, d)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    mask = pos[:, None, None, None, :] <= pos[:, None, None, :, None]
+    if window:
+        mask &= pos[:, None, None, None, :] > (pos[:, None, None, :, None]
+                                               - window)
+    dense = attn._dense_attention(q, k, v, mask, d ** -0.5)
+    chunked = attn._chunked_causal_attention(q, k, v, pos, pos, d ** -0.5,
+                                             window=window,
+                                             q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 60), st.integers(0, 20), st.integers(0, 2 ** 31 - 1))
+def test_chunked_property(t, window, seed):
+    b, h, d = 1, 2, 8
+    q, k, v = _qkv(jax.random.key(seed), b, t, h, h, d)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    mask = pos[:, None, None, None, :] <= pos[:, None, None, :, None]
+    if window:
+        mask &= pos[:, None, None, None, :] > (pos[:, None, None, :, None]
+                                               - window)
+    dense = attn._dense_attention(q, k, v, mask, d ** -0.5)
+    chunked = attn._chunked_causal_attention(q, k, v, pos, pos, d ** -0.5,
+                                             window=window,
+                                             q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ring_buffer_decode_matches_full_context():
+    """Sliding-window ring-buffer decode == full attention limited to the
+    window, beyond one window of context."""
+    cfg = get_smoke_config("mistral_nemo_12b").replace(sliding_window=8)
+    specs = attn.attention_specs(cfg)
+    params = common.init_params(specs, jax.random.key(0))
+    b, t = 1, 24
+    x = jax.random.normal(jax.random.key(1), (b, t, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    full, _ = attn.apply_attention(params, x, pos, cfg, causal=True,
+                                   window=8, mode="train")
+    # decode step-by-step with ring cache of size 8
+    spec = attn.CacheSpec(8, cfg.num_kv_heads, cfg.resolved_head_dim)
+    cache = attn.init_cache_arrays(b, spec, jnp.bfloat16)
+    outs = []
+    for i in range(t):
+        y, cache = attn.apply_attention(
+            params, x[:, i:i + 1], pos[:, i:i + 1], cfg, causal=True,
+            window=8, mode="decode", cache=cache,
+            cache_index=jnp.int32(i))
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full, np.float32)[:, 8:],
+                               np.asarray(dec, np.float32)[:, 8:],
+                               atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2)
+
+
+def _naive_ssd(x, dt, a_log, b, c, d_skip):
+    """O(T^2)-free literal recurrence for the oracle."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    a = -np.exp(np.asarray(a_log, np.float64))
+    state = np.zeros((bsz, h, p, n))
+    ys = np.zeros((bsz, t, h, p))
+    xn, dtn, bn, cn = map(lambda z: np.asarray(z, np.float64),
+                          (x, dt, b, c))
+    for s in range(t):
+        decay = np.exp(dtn[:, s] * a)[:, :, None, None]
+        state = decay * state + np.einsum(
+            "bhp,bn->bhpn", xn[:, s] * dtn[:, s][:, :, None], bn[:, s])
+        ys[:, s] = np.einsum("bhpn,bn->bhp", state, cn[:, s])
+    ys += np.asarray(d_skip)[None, None, :, None] * xn
+    return ys, state
+
+
+@pytest.mark.parametrize("t,chunk", [(8, 4), (17, 4), (32, 8), (5, 16)])
+def test_ssd_chunked_matches_naive(t, chunk):
+    bsz, h, p, n = 2, 3, 4, 5
+    ks = jax.random.split(jax.random.key(t * 10 + chunk), 5)
+    x = jax.random.normal(ks[0], (bsz, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, t, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.3
+    b = jax.random.normal(ks[3], (bsz, t, n))
+    c = jax.random.normal(ks[4], (bsz, t, n))
+    d_skip = jnp.ones((h,)) * 0.5
+    y, state = ssm_lib.ssd_chunked(x, dt, a_log, b, c, d_skip, chunk)
+    y_ref, state_ref = _naive_ssd(x, dt, a_log, b, c, d_skip)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(state), state_ref, atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_ssd_step_matches_chunked():
+    bsz, t, h, p, n = 1, 6, 2, 4, 3
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (bsz, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bsz, t, h)))
+    a_log = jax.random.normal(ks[2], (h,)) * 0.3
+    b = jax.random.normal(ks[3], (bsz, t, n))
+    c = jax.random.normal(ks[4], (bsz, t, n))
+    d_skip = jnp.zeros((h,))
+    y_full, _ = ssm_lib.ssd_chunked(x, dt, a_log, b, c, d_skip, chunk=4)
+    state = jnp.zeros((bsz, h, p, n))
+    for s in range(t):
+        y_s, state = ssm_lib.ssd_step(state, x[:, s], dt[:, s], a_log,
+                                      b[:, s], c[:, s], d_skip)
+        np.testing.assert_allclose(np.asarray(y_s),
+                                   np.asarray(y_full[:, s]), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU diag scan
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 70), st.integers(1, 16), st.sampled_from([4, 16, 256]),
+       st.integers(0, 2 ** 31 - 1))
+def test_chunked_diag_scan_property(t, w, chunk, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    a = jax.random.uniform(ks[0], (1, t, w), minval=0.0, maxval=1.0)
+    b = jax.random.normal(ks[1], (1, t, w))
+    h0 = jax.random.normal(ks[2], (1, w))
+    h, hf = chunked_diag_scan(a, b, h0, chunk=chunk)
+    # naive
+    cur = np.asarray(h0, np.float64)
+    for s in range(t):
+        cur = np.asarray(a[:, s]) * cur + np.asarray(b[:, s])
+        np.testing.assert_allclose(np.asarray(h[:, s]), cur, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), cur, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+
+
+def test_moe_matches_dense_full_compute_with_big_capacity():
+    """With capacity >= tokens*k, capacity dispatch must equal the literal
+    'every token through its top-k experts' computation."""
+    cfg = get_smoke_config("olmoe_1b_7b")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    specs = moe_lib.moe_specs(cfg)
+    params = common.init_params(specs, jax.random.key(0))
+    b, t = 2, 10
+    x = jax.random.normal(jax.random.key(1), (b, t, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_lib.apply_moe(params, x.astype(jnp.bfloat16), cfg)
+
+    gates, idx, _ = moe_lib.route(params, x, cfg)
+    xd = x.astype(jnp.bfloat16)
+    up = params["up"]["kernel"].astype(jnp.bfloat16)
+    gate_w = params["gate"]["kernel"].astype(jnp.bfloat16)
+    down = params["down"]["kernel"].astype(jnp.bfloat16)
+    # literal per-token loop
+    y_ref = np.zeros((b, t, cfg.d_model), np.float32)
+    for bi in range(b):
+        for ti in range(t):
+            for ki in range(cfg.moe.num_experts_per_tok):
+                e = int(idx[bi, ti, ki])
+                h = np.asarray(jax.nn.silu(xd[bi, ti] @ gate_w[e]) *
+                               (xd[bi, ti] @ up[e]), np.float32)
+                o = np.asarray(h.astype(np.float32) @
+                               np.asarray(down[e], np.float32))
+                y_ref[bi, ti] += float(gates[bi, ti, ki]) * o
+    np.testing.assert_allclose(np.asarray(y, np.float32), y_ref,
+                               atol=0.15, rtol=0.15)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = get_smoke_config("olmoe_1b_7b")
+    cfg = cfg.replace(moe=dataclasses.replace(
+        cfg.moe, capacity_factor=0.25))
+    specs = moe_lib.moe_specs(cfg)
+    params = common.init_params(specs, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (1, 16, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16)
+    y, _ = moe_lib.apply_moe(params, x, cfg)
+    assert y.shape == x.shape
+    assert not np.isnan(np.asarray(y, np.float32)).any()
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+
+
+def test_rmsnorm_unit_scale():
+    p = {"scale": jnp.ones((8,))}
+    x = jax.random.normal(jax.random.key(0), (4, 8)) * 5
+    y = common.rmsnorm(p, x)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    x = jax.random.normal(jax.random.key(0), (1, 6, 2, 8))
+    pos = jnp.arange(6)[None]
+    y = common.rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+    # dot products depend only on relative offsets
+    q = common.rope(jnp.broadcast_to(x[:, :1], x.shape), pos)
+    k = common.rope(jnp.broadcast_to(x[:, 1:2], x.shape), pos)
+    d1 = np.einsum("bshd,bshd->bsh", np.asarray(q[:, :3]),
+                   np.asarray(k[:, :3]))
+    d2 = np.einsum("bshd,bshd->bsh", np.asarray(q[:, 2:5]),
+                   np.asarray(k[:, 2:5]))
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)
