@@ -8,7 +8,12 @@ Variants mirror Figure 2:
   a2c_sync_traj   unroll n steps with the CURRENT params, learn, repeat
                   (batched A2C, sync trajectories)
   impala          unroll with STALE params (queue + lag) so acting is
-                  decoupled from the learner's update cycle
+                  decoupled from the learner's update cycle — but still
+                  one thread (simulated decoupling)
+  impala_async    the real thing (repro.distributed): actor threads
+                  overlap the learner, which drains the queue with
+                  dynamic batching; fps counts learner-consumed frames
+                  at steady state
 """
 from __future__ import annotations
 
@@ -66,6 +71,19 @@ def _measure(env_name: str, variant: str, num_envs: int = 32,
     return frames / dt
 
 
+def _measure_async(env_name: str, num_envs: int = 32, unroll: int = 20,
+                   iters: int = 20, num_actors: int = 2) -> float:
+    from repro.distributed import run_async_training
+
+    env = make_env(env_name)
+    icfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=unroll)
+    _, _, tel = run_async_training(
+        env, icfg, num_envs, iters, num_actors=num_actors,
+        queue_capacity=8, queue_policy="block", max_batch_trajs=4,
+        seed=0, arch=small_arch(env), warm_buckets=True)
+    return tel["frames_per_sec"]
+
+
 def run() -> None:
     iters = 5 if FAST else 20
     for env_name in ("catch", "chase"):
@@ -75,5 +93,11 @@ def run() -> None:
             emit(f"throughput/{env_name}/{variant}",
                  1e6 / max(fps[variant], 1e-9),
                  f"fps={fps[variant]:.0f}")
+        fps["impala_async"] = _measure_async(env_name, iters=max(iters, 10))
+        emit(f"throughput/{env_name}/impala_async",
+             1e6 / max(fps["impala_async"], 1e-9),
+             f"fps={fps['impala_async']:.0f}")
         emit(f"throughput/{env_name}/impala_speedup_vs_sync_step", 0.0,
              f"x{fps['impala'] / max(fps['a2c_sync_step'], 1e-9):.2f}")
+        emit(f"throughput/{env_name}/async_speedup_vs_sync_traj", 0.0,
+             f"x{fps['impala_async'] / max(fps['a2c_sync_traj'], 1e-9):.2f}")

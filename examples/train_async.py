@@ -1,0 +1,51 @@
+"""Async quickstart: the paper's actual architecture — actors decoupled
+from the learner — running as real threads in one process.
+
+Two actor threads each drive their own batch of `catch` envs with a
+jitted unroll (the dispatch drops the GIL, so they overlap the learner);
+trajectories flow through a bounded backpressured queue; the learner
+stacks up to 4 of them per update (dynamic batching) and publishes params
+through a versioned store. Policy lag is *measured* per trajectory — watch
+the lag histogram in the final telemetry, it is the off-policy gap that
+V-trace is correcting.
+
+  PYTHONPATH=src python examples/train_async.py
+"""
+import json
+
+from repro.configs.base import ImpalaConfig
+from repro.configs.registry import get_smoke_config
+from repro.data.envs import make_catch
+from repro.distributed import run_async_training
+
+
+def main():
+    env = make_catch()
+    arch = get_smoke_config("impala-shallow").replace(image_hw=env.image_hw)
+    cfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=20,
+                       learning_rate=6e-4, entropy_cost=0.003,
+                       rmsprop_eps=0.01)
+
+    def log(step, params, metrics, snapshot_fn):
+        if step % 100 == 0:
+            tel = snapshot_fn()
+            print(f"update {step}: loss={float(metrics['loss/total']):.2f} "
+                  f"lag(mean)={tel['lag']['mean']:.2f} "
+                  f"queue_occ={tel['queue']['mean_occupancy']:.1f} "
+                  f"fps={tel['frames_per_sec']:.0f}")
+
+    tracker, metrics, tel = run_async_training(
+        env, cfg, num_envs=32, steps=400, num_actors=2,
+        queue_capacity=8, queue_policy="block", max_batch_trajs=4,
+        seed=0, arch=arch, on_update=log)
+
+    print(f"return(100) = {tracker.mean_return():.3f} "
+          f"(optimal 1.0, random ~ -0.6)")
+    print("measured lag histogram:", json.dumps(tel["lag"]["hist"]))
+    print("queue:", json.dumps(tel["queue"]))
+    assert tel["lag"]["max"] > 0, "async run must show real policy lag"
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

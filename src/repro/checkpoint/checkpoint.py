@@ -38,7 +38,11 @@ def save(directory: str, step: int, tree: PyTree,
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
     os.close(fd)
     np.savez(tmp, **leaves)
+    # np.savez appends .npz to names without the suffix, leaving the
+    # original mkstemp file behind — move the real archive, drop the stub
     os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    if os.path.exists(tmp):
+        os.remove(tmp)
     with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(directory, "LATEST"), "w") as f:

@@ -1,11 +1,11 @@
-"""Host-side trajectory queue between actors and learner (paper Fig. 1).
+"""Host-side trajectory ring buffer + deterministic lag stand-in.
 
-In the paper, actors on many machines push trajectories into a queue that
-the learner drains. Here the queue is an in-process ring buffer carrying
-jax pytrees, plus ``LagController`` — a deterministic stand-in for the
-asynchrony: it holds the learner's parameter history and serves actors
-the parameters from ``lag`` updates ago, making the off-policy gap of
-Fig. E.1 an explicit, reproducible quantity.
+``TrajectoryQueue`` here is a *single-threaded* ring buffer and
+``LagController`` replays a parameter history to impose an exact,
+reproducible policy lag — the right tools when an experiment needs the
+off-policy gap of Fig. E.1 as a controlled variable (lag sweeps,
+correction ablations). The real concurrent pipeline — actor threads,
+backpressure policies, *measured* lag — lives in ``repro.distributed``.
 """
 from __future__ import annotations
 
@@ -23,11 +23,16 @@ class TrajectoryQueue:
         self.dropped = 0
         self.pushed = 0
 
-    def put(self, traj: PyTree) -> None:
+    def put(self, traj: PyTree) -> bool:
+        """Append; returns True iff ``traj`` is now in the queue (always,
+        for this ring — same contract as ``repro.distributed``'s queue).
+        A full ring evicts its oldest entry, counted in ``dropped``
+        *before* the deque silently discards it."""
         if len(self._q) == self._q.maxlen:
             self.dropped += 1
         self._q.append(traj)
         self.pushed += 1
+        return True
 
     def get(self) -> Optional[PyTree]:
         return self._q.popleft() if self._q else None

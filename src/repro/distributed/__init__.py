@@ -1,0 +1,21 @@
+"""repro.distributed — the real asynchronous actor-learner runtime.
+
+Decoupled acting and learning in one process (paper §3): an actor thread
+pool feeds a bounded backpressured trajectory queue; a dynamic-batching
+learner drains it; parameters flow back through a versioned store so
+policy lag is measured per trajectory rather than simulated.
+"""
+from repro.distributed.actor_pool import ActorPool, TrajectoryItem
+from repro.distributed.paramstore import ParameterStore
+from repro.distributed.runtime import MultiTracker, run_async_training
+from repro.distributed.tqueue import POLICIES, TrajectoryQueue
+
+__all__ = [
+    "ActorPool",
+    "TrajectoryItem",
+    "ParameterStore",
+    "MultiTracker",
+    "run_async_training",
+    "POLICIES",
+    "TrajectoryQueue",
+]

@@ -1,0 +1,142 @@
+"""Actor thread pool: N workers, each owning its own env batch, RNG
+stream, and jitted unroll (paper §3's distributed actors, in-process).
+
+Concurrency model: each worker's loop is (pull params) -> (jitted unroll)
+-> (queue put). The unroll dispatch drops the GIL while XLA executes, so
+workers genuinely overlap with each other and with the learner's
+train_step on a multicore host — this is real decoupling, not simulated
+lag. Each worker builds its own ``build_actor`` closure, so its jit cache,
+env batch, and RNG stream are private; worker i derives its streams from
+``fold_in(seed, i)`` so runs are reproducible per actor count.
+
+Each produced trajectory is stamped with the parameter version it was
+acted with (see ``paramstore``) plus its actor id, making per-trajectory
+policy lag measurable at the learner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.core import actor as actor_lib
+from repro.distributed.paramstore import ParameterStore
+from repro.distributed.tqueue import TrajectoryQueue
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrajectoryItem:
+    """What flows through the queue: the trajectory pytree plus the
+    provenance needed for measured lag and per-actor accounting."""
+    data: PyTree
+    param_version: int
+    actor_id: int
+    produced_at: float
+
+
+class ActorPool:
+    def __init__(self, env, arch_cfg, icfg, num_envs: int, num_actors: int,
+                 store: ParameterStore, queue: TrajectoryQueue,
+                 seed: int = 0):
+        if num_actors < 1:
+            raise ValueError("num_actors must be >= 1")
+        self.env = env
+        self.num_envs = num_envs
+        self.num_actors = num_actors
+        self.store = store
+        self.queue = queue
+        self.seed = seed
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._builders = []
+        for i in range(num_actors):
+            # per-actor closure => per-actor jit cache and env batch
+            self._builders.append(
+                actor_lib.build_actor(env, arch_cfg, icfg, num_envs))
+        self.frames = [0] * num_actors          # env frames produced
+        self.trajectories = [0] * num_actors    # accepted into the queue
+        self.rejected = [0] * num_actors        # lost to backpressure
+        self.errors: List[BaseException] = []
+        self._steady_t0: Optional[float] = None
+        self._steady_frames0 = 0
+        self._frames_per_traj = num_envs * icfg.unroll_length
+
+    # ------------------------------------------------------------------
+
+    def _run(self, idx: int) -> None:
+        init_fn, unroll = self._builders[idx]
+        base = jax.random.fold_in(jax.random.key(self.seed), idx)
+        carry = init_fn(jax.random.fold_in(base, 1))
+        try:
+            while not self._stop.is_set():
+                params, version = self.store.pull()
+                carry, traj = unroll(params, carry)
+                # materialise before enqueue: backpressure must reflect
+                # finished work, not a ballooning async dispatch queue
+                traj = jax.block_until_ready(traj)
+                self.frames[idx] += self._frames_per_traj
+                if self._steady_t0 is None:
+                    # fps clock starts at the first finished trajectory
+                    # (post-compile), mirroring the learner's steady-state
+                    # window; benign race — near-identical timestamps
+                    self._steady_t0 = time.monotonic()
+                    self._steady_frames0 = sum(self.frames)
+                item = TrajectoryItem(traj, version, idx, time.monotonic())
+                attempt = 0
+                while not self._stop.is_set():
+                    if self.queue.put(item, timeout=0.1,
+                                      count_stall=attempt == 0):
+                        self.trajectories[idx] += 1
+                        break
+                    if self.queue.closed:
+                        break                   # shutting down
+                    if self.queue.policy == "drop_newest":
+                        self.rejected[idx] += 1
+                        break                   # genuine drop, move on
+                    # block policy timed out: re-check stop flag and retry
+                    attempt += 1
+        except BaseException as e:  # surface in the learner thread
+            self.errors.append(e)
+            self.queue.close()
+
+    # ------------------------------------------------------------------
+
+    def start(self) -> None:
+        for i in range(self.num_actors):
+            t = threading.Thread(target=self._run, args=(i,),
+                                 name=f"actor-{i}", daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout
+        for t in self._threads:
+            t.join(max(0.0, deadline - time.monotonic()))
+
+    def raise_errors(self) -> None:
+        if self.errors:
+            raise RuntimeError("actor thread died") from self.errors[0]
+
+    def stats(self) -> Dict[str, float]:
+        total_frames = sum(self.frames)
+        fps = 0.0
+        if self._steady_t0 is not None:
+            dt = time.monotonic() - self._steady_t0
+            if dt > 0:
+                fps = (total_frames - self._steady_frames0) / dt
+        return {
+            "num_actors": self.num_actors,
+            "frames": total_frames,
+            "trajectories": sum(self.trajectories),
+            "rejected": sum(self.rejected),
+            "actor_fps": fps,
+            "frames_per_actor": list(self.frames),
+        }

@@ -1,0 +1,52 @@
+"""Versioned parameter store: the learner publishes, actors pull.
+
+This is the piece that turns policy lag from a scripted fiction
+(``core.queue.LagController`` replaying a parameter history) into a
+*measured* quantity: every ``pull`` returns ``(params, version)``, the
+actor stamps the version into the trajectory it produces, and the learner
+computes ``lag = current_version - trajectory.param_version`` at
+consumption time — exactly the off-policy gap V-trace corrects (paper §4.2,
+Fig. E.1), now emergent from real queueing delays instead of dialled in.
+
+Thread-safety: a single mutex guards the (params, version) pair so a pull
+can never observe a torn publish. Params are jax pytrees of immutable
+device arrays — publishing swaps the reference, pullers keep whatever
+snapshot they grabbed.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Tuple
+
+PyTree = Any
+
+
+class ParameterStore:
+    """Lock-guarded (params, version) cell with monotonically increasing
+    versions. Version 0 is the initial (pre-training) parameter set."""
+
+    def __init__(self, params: PyTree, version: int = 0):
+        self._lock = threading.Lock()
+        self._params = params
+        self._version = version
+        self.publishes = 0
+        self.pulls = 0
+
+    def publish(self, params: PyTree) -> int:
+        """Install new params; returns the new version."""
+        with self._lock:
+            self._params = params
+            self._version += 1
+            self.publishes += 1
+            return self._version
+
+    def pull(self) -> Tuple[PyTree, int]:
+        """Returns the current (params, version) snapshot."""
+        with self._lock:
+            self.pulls += 1
+            return self._params, self._version
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version

@@ -1,0 +1,235 @@
+"""The asynchronous actor-learner runtime (paper §3, for real).
+
+``run_async_training`` stands up N actor threads (``actor_pool``) feeding
+a bounded backpressured queue (``tqueue``) that one learner loop drains
+with *dynamic batching*: up to ``max_batch_trajs`` queued trajectories are
+stacked into a single larger learner batch (§3.1's dynamic batching,
+applied learner-side), amortising the update's fixed cost over more
+frames. Batch sizes are bucketed to powers of two so XLA compiles at most
+log2(max_batch_trajs)+1 variants of the train step.
+
+Parameters flow learner -> ``ParameterStore`` -> actors; each trajectory
+comes back stamped with the parameter version it was acted with, so the
+per-trajectory policy lag the learner observes is a **measured** quantity
+(`lag = version_now - version_acted`), not a scripted one. The telemetry
+snapshot reports the lag histogram alongside actor FPS, learner
+updates/sec, queue occupancy, and drop/stall counters.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ImpalaConfig
+from repro.core import learner as learner_lib
+from repro.core.metrics import EpisodeTracker
+from repro.data.envs import make_env
+from repro.distributed.actor_pool import ActorPool, TrajectoryItem
+from repro.distributed.paramstore import ParameterStore
+from repro.distributed.tqueue import TrajectoryQueue
+from repro.models import backbone as bb
+from repro.models import common as pcommon
+
+PyTree = Any
+
+
+class MultiTracker:
+    """Episode-return accounting across actor-local env batches."""
+
+    def __init__(self, num_actors: int, num_envs: int):
+        self.trackers = [EpisodeTracker(num_envs) for _ in range(num_actors)]
+        self._merged: List[float] = []
+
+    def update(self, actor_id: int, rewards, dones) -> None:
+        t = self.trackers[actor_id]
+        before = len(t.completed)
+        t.update(np.asarray(rewards), np.asarray(dones))
+        # merge in consumption order so mean_return's last-n window is
+        # chronological, not actor-grouped
+        self._merged.extend(t.completed[before:])
+
+    @property
+    def completed(self) -> List[float]:
+        return list(self._merged)
+
+    def mean_return(self, last_n: int = 100) -> float:
+        if not self._merged:
+            return float("nan")
+        return float(np.mean(self._merged[-last_n:]))
+
+
+def _buckets(max_batch_trajs: int) -> List[int]:
+    """Power-of-two stack sizes <= max, descending (compile-count bound)."""
+    out, b = [], 1
+    while b <= max_batch_trajs:
+        out.append(b)
+        b *= 2
+    return out[::-1]
+
+
+def _stack(items: List[TrajectoryItem]) -> PyTree:
+    if len(items) == 1:
+        return items[0].data
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                        *[it.data for it in items])
+
+
+def run_async_training(
+    env_name: str,
+    icfg: ImpalaConfig,
+    num_envs: int,
+    steps: int,
+    *,
+    num_actors: int = 2,
+    queue_capacity: int = 8,
+    queue_policy: str = "block",
+    max_batch_trajs: int = 4,
+    seed: int = 0,
+    arch: Optional[ArchConfig] = None,
+    warm_buckets: bool = False,
+    initial_params: Optional[PyTree] = None,
+    start_step: int = 0,
+    on_update: Optional[Callable[[int, PyTree, Dict, Dict], None]] = None,
+) -> Tuple[MultiTracker, Dict, Dict]:
+    """Train until ``steps`` total learner updates with real async acting.
+
+    ``initial_params`` + ``start_step`` resume from a checkpoint: the
+    update counter (and the parameter-store version) continues from
+    ``start_step``, so lr schedules and checkpoint numbering line up with
+    the interrupted run.
+
+    Returns (tracker, last-update metrics, telemetry). ``on_update`` (if
+    given) is called after every learner update with
+    ``(update_index, params, metrics, snapshot_fn)`` where ``snapshot_fn``
+    is a zero-arg callable producing the telemetry dict on demand — the
+    hook for logging and checkpointing without re-implementing the loop.
+
+    ``warm_buckets=True`` pre-compiles the train step for every batch
+    bucket before the timed region, so benchmarks measure steady-state
+    throughput rather than XLA compilation.
+    """
+    if icfg.replay_fraction > 0:
+        raise ValueError("experience replay is only wired into the sync "
+                         "runtime; run with --runtime sync")
+    if max_batch_trajs < 1:
+        raise ValueError(f"max_batch_trajs must be >= 1, got "
+                         f"{max_batch_trajs}")
+    env = make_env(env_name) if isinstance(env_name, str) else env_name
+    if arch is None:
+        from repro.core.driver import small_arch
+        arch = small_arch(env)
+    specs = bb.backbone_specs(arch, env.num_actions)
+    if initial_params is not None:
+        params = initial_params
+    else:
+        params = pcommon.init_params(specs, jax.random.key(seed))
+    train_step, opt = learner_lib.build_train_step(arch, icfg,
+                                                   env.num_actions)
+    train_step = jax.jit(train_step)
+    opt_state = opt.init(params)
+
+    store = ParameterStore(params, version=start_step)
+    queue = TrajectoryQueue(queue_capacity, queue_policy)
+    pool = ActorPool(env, arch, icfg, num_envs, num_actors, store, queue,
+                     seed=seed)
+    tracker = MultiTracker(num_actors, num_envs)
+    buckets = _buckets(max_batch_trajs)
+    frames_per_traj = num_envs * icfg.unroll_length
+
+    lag_hist: collections.Counter = collections.Counter()
+    batch_hist: collections.Counter = collections.Counter()
+    updates = start_step
+    frames_consumed = 0
+    steady_t0: Optional[float] = None
+    steady_updates0 = 0
+    steady_frames0 = 0
+    metrics: Dict = {}
+
+    def telemetry_snapshot() -> Dict:
+        now = time.monotonic()
+        dt = (now - steady_t0) if steady_t0 is not None else 0.0
+        n_lags = sum(lag_hist.values())
+        return {
+            "learner_updates": updates,
+            "frames_consumed": frames_consumed,
+            "updates_per_sec": ((updates - steady_updates0) / dt
+                                if dt > 0 else 0.0),
+            "frames_per_sec": ((frames_consumed - steady_frames0) / dt
+                               if dt > 0 else 0.0),
+            "batch_size_hist": dict(batch_hist),
+            "lag": {
+                "hist": dict(sorted(lag_hist.items())),
+                "mean": (sum(k * v for k, v in lag_hist.items()) / n_lags
+                         if n_lags else 0.0),
+                "max": max(lag_hist) if lag_hist else 0,
+                "measured": n_lags,
+            },
+            "queue": queue.snapshot(),
+            "actors": pool.stats(),
+            "param_version": store.version,
+        }
+
+    pool.start()
+    try:
+        if warm_buckets:
+            first = None
+            while first is None:
+                pool.raise_errors()
+                first = queue.get(timeout=0.5)
+            for b in buckets:
+                warm = _stack([first] * b) if b > 1 else first.data
+                out = train_step(params, opt_state, jnp.int32(0), warm)
+                jax.block_until_ready(out[0])   # compile only; discard
+            queue.requeue_front(first)
+
+        while updates < steps:
+            pool.raise_errors()
+            item = queue.get(timeout=0.5)
+            if item is None:
+                continue
+            items = [item]
+            while len(items) < buckets[0]:
+                nxt = queue.get_nowait()
+                if nxt is None:
+                    break
+                items.append(nxt)
+            k = next(b for b in buckets if b <= len(items))
+            for extra in reversed(items[k:]):
+                queue.requeue_front(extra)      # oldest-first order kept
+            items = items[:k]
+
+            version_now = store.version
+            for it in items:
+                lag_hist[version_now - it.param_version] += 1
+                tracker.update(it.actor_id, it.data["rewards"],
+                               it.data["done"])
+            batch = _stack(items)
+            params, opt_state, metrics = train_step(
+                params, opt_state, jnp.int32(updates), batch)
+            store.publish(params)
+            updates += 1
+            frames_consumed += k * frames_per_traj
+            batch_hist[k] += 1
+            if steady_t0 is None:
+                # first update includes jit compile: start the clock after
+                jax.block_until_ready(params)
+                steady_t0 = time.monotonic()
+                steady_updates0 = updates
+                steady_frames0 = frames_consumed
+            if on_update is not None:
+                on_update(updates, params, metrics, telemetry_snapshot)
+        # snapshot before teardown: pool.join waits out in-flight unrolls
+        # and put timeouts, which would silently pad the steady-state dt
+        jax.block_until_ready(params)
+        final_telemetry = telemetry_snapshot()
+    finally:
+        pool.stop()
+        queue.close()
+        pool.join()
+    pool.raise_errors()
+    return tracker, metrics, final_telemetry

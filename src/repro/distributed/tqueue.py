@@ -1,0 +1,168 @@
+"""Thread-safe bounded trajectory queue with selectable backpressure.
+
+The paper's actors feed a learner-side queue (Fig. 1); what happens when
+the learner falls behind is a real systems decision:
+
+  block        producers wait for space — lossless, throttles actors to
+               learner speed (TorchBeast's choice; right for equivalence
+               runs and benchmarks that must count every frame).
+  drop_oldest  evict the stalest queued trajectory — bounds both memory
+               AND policy lag; the learner always trains on the freshest
+               data (Ape-X-style priority for recency).
+  drop_newest  reject the incoming trajectory — keeps FIFO order of what
+               was already queued, wastes the newest actor work.
+
+Every outcome is counted (pushed / popped / dropped / stalls) and
+occupancy is accumulated at put-time so a telemetry snapshot can report
+mean fill level without a sampler thread.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Deque, Dict, Optional
+
+POLICIES = ("block", "drop_oldest", "drop_newest")
+
+
+class TrajectoryQueue:
+    """Bounded MPSC/MPMC queue for trajectory items (any Python object)."""
+
+    def __init__(self, capacity: int = 8, policy: str = "block"):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got "
+                             f"{policy!r}")
+        self.capacity = capacity
+        self.policy = policy
+        self._q: Deque[Any] = collections.deque()
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._closed = False
+        # counters (read under lock via snapshot())
+        self.pushed = 0        # items accepted into the queue
+        self.popped = 0        # items handed to consumers
+        self.dropped = 0       # items lost (evicted or rejected)
+        self.put_stalls = 0    # blocking puts that had to wait
+        self.get_stalls = 0    # gets that had to wait
+        self._occupancy_sum = 0
+        self._occupancy_samples = 0
+
+    # ------------------------------------------------------------------
+    # producer side
+
+    def put(self, item: Any, timeout: Optional[float] = None,
+            count_stall: bool = True) -> bool:
+        """Enqueue ``item`` under the configured backpressure policy.
+
+        Returns True iff *this item* is now in the queue: False means the
+        queue was closed, a blocking put timed out, or drop_newest
+        rejected it. drop_oldest always accepts (evicting the stalest
+        entry when full). Drops are counted *before* anything is removed,
+        so the counter never lags the loss it reports. A producer
+        retrying the same item after a timeout should pass
+        ``count_stall=False`` so one stalled enqueue counts once, however
+        many retries it takes.
+        """
+        with self._lock:
+            if self._closed:
+                return False
+            if self.policy == "block":
+                if len(self._q) >= self.capacity:
+                    if count_stall:
+                        self.put_stalls += 1
+                    if not self._not_full.wait_for(
+                            lambda: len(self._q) < self.capacity or
+                            self._closed, timeout):
+                        return False            # timed out, item not queued
+                    if self._closed:
+                        return False
+                self._accept(item)
+                return True
+            if len(self._q) >= self.capacity:
+                self.dropped += 1
+                if self.policy == "drop_newest":
+                    return False                # reject the incoming item
+                self._q.popleft()               # drop_oldest: evict stalest
+            self._accept(item)
+            return True
+
+    def _accept(self, item: Any) -> None:
+        self._q.append(item)
+        self.pushed += 1
+        self._occupancy_sum += len(self._q)
+        self._occupancy_samples += 1
+        self._not_empty.notify()
+
+    # ------------------------------------------------------------------
+    # consumer side
+
+    def get(self, timeout: Optional[float] = None) -> Optional[Any]:
+        """Dequeue the oldest item; None on timeout or closed-and-empty."""
+        with self._lock:
+            if not self._q:
+                self.get_stalls += 1
+                if not self._not_empty.wait_for(
+                        lambda: self._q or self._closed, timeout):
+                    return None
+                if not self._q:
+                    return None                 # closed and drained
+            item = self._q.popleft()
+            self.popped += 1
+            self._not_full.notify()
+            return item
+
+    def get_nowait(self) -> Optional[Any]:
+        with self._lock:
+            if not self._q:
+                return None
+            item = self._q.popleft()
+            self.popped += 1
+            self._not_full.notify()
+            return item
+
+    def requeue_front(self, item: Any) -> None:
+        """Put an already-popped item back at the head (learner-internal:
+        dynamic batching took more than it could stack). Not counted as a
+        new push; ignores capacity so nothing is lost."""
+        with self._lock:
+            self._q.appendleft(item)
+            self.popped -= 1
+            self._not_empty.notify()
+
+    # ------------------------------------------------------------------
+
+    def close(self) -> None:
+        """Wake all blocked producers/consumers; subsequent puts fail and
+        gets drain whatever is left."""
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._q)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            occ = (self._occupancy_sum / self._occupancy_samples
+                   if self._occupancy_samples else 0.0)
+            return {
+                "capacity": self.capacity,
+                "policy": self.policy,
+                "size": len(self._q),
+                "pushed": self.pushed,
+                "popped": self.popped,
+                "dropped": self.dropped,
+                "put_stalls": self.put_stalls,
+                "get_stalls": self.get_stalls,
+                "mean_occupancy": occ,
+            }

@@ -87,7 +87,7 @@ def run_pair(arch_name: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 1)
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = analysis.executable_cost(compiled)
         hlo = compiled.as_text()
         from repro.roofline import memory_model, flops_model
         mem_model = memory_model.estimate(arch, shape, rules)

@@ -1,9 +1,20 @@
 """Training driver: the IMPALA loop (actors -> queue -> V-trace learner)
 with checkpointing, replay, policy lag, and optional multi-task suites.
 
-CPU-scale entry point (real envs, real learning):
+Two runtimes:
+  --runtime sync    one loop, acting and learning interleaved; policy lag
+                    is *simulated* deterministically (LagController), the
+                    right mode for controlled lag/correction experiments.
+  --runtime async   real concurrency (repro.distributed): N actor threads
+                    feed a backpressured queue, the learner drains it with
+                    dynamic batching, and per-trajectory policy lag is
+                    *measured* from parameter-store versions.
+
+CPU-scale entry points (real envs, real learning):
   PYTHONPATH=src python -m repro.launch.train --arch impala-shallow \
       --env catch --steps 500 --num-envs 32
+  PYTHONPATH=src python -m repro.launch.train --runtime async \
+      --actor-threads 4 --env catch --steps 200 --smoke
 
 The production mesh path for the assigned architectures is exercised by
 ``repro.launch.dryrun`` (compile-only on this CPU-only box).
@@ -12,7 +23,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
@@ -30,13 +40,25 @@ def main() -> int:
     p.add_argument("--lr", type=float, default=6e-4)
     p.add_argument("--entropy-cost", type=float, default=0.003)
     p.add_argument("--rmsprop-eps", type=float, default=0.01)
-    p.add_argument("--policy-lag", type=int, default=1)
+    p.add_argument("--policy-lag", type=int, default=1,
+                   help="simulated lag (sync runtime only; async measures)")
     p.add_argument("--correction", default="vtrace",
                    choices=["vtrace", "onestep_is", "eps", "none"])
     p.add_argument("--replay-fraction", type=float, default=0.0)
     p.add_argument("--reward-clip", default="abs_one")
     p.add_argument("--smoke", action="store_true",
                    help="use the reduced smoke config of --arch")
+    p.add_argument("--runtime", default="sync", choices=["sync", "async"])
+    p.add_argument("--actor-threads", type=int, default=2,
+                   help="actor worker threads (async runtime)")
+    p.add_argument("--queue-capacity", type=int, default=8)
+    p.add_argument("--queue-policy", default="block",
+                   choices=["block", "drop_oldest", "drop_newest"])
+    p.add_argument("--max-batch-trajs", type=int, default=4,
+                   help="learner dynamic batching: max trajectories "
+                        "stacked per update, rounded DOWN to a power of "
+                        "two (batch sizes are bucketed so XLA compiles "
+                        "at most log2 variants; async runtime)")
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-every", type=int, default=200)
     p.add_argument("--log-every", type=int, default=25)
@@ -45,15 +67,7 @@ def main() -> int:
 
     from repro.configs.base import ImpalaConfig
     from repro.configs.registry import get_config, get_smoke_config
-    from repro.core import actor as actor_lib
-    from repro.core import learner as learner_lib
-    from repro.core.metrics import EpisodeTracker
-    from repro.core.queue import LagController, TrajectoryQueue
-    from repro.core.replay import ReplayBuffer, mix_batches
-    from repro.checkpoint import checkpoint as ckpt
     from repro.data.envs import make_env
-    from repro.models import backbone as bb
-    from repro.models import common
 
     env = make_env(args.env)
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -68,10 +82,25 @@ def main() -> int:
         correction=args.correction, replay_fraction=args.replay_fraction,
         reward_clip=args.reward_clip, seed=args.seed)
 
+    if args.runtime == "async":
+        return _run_async(args, env, arch, icfg)
+    return _run_sync(args, env, arch, icfg)
+
+
+def _run_sync(args, env, arch, icfg) -> int:
+    from repro.core import actor as actor_lib
+    from repro.core import learner as learner_lib
+    from repro.core.metrics import EpisodeTracker
+    from repro.core.queue import LagController
+    from repro.core.replay import ReplayBuffer, mix_batches
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.models import backbone as bb
+    from repro.models import common
+
     specs = bb.backbone_specs(arch, env.num_actions)
     params = common.init_params(specs, jax.random.key(args.seed))
     print(f"arch={arch.name} params={common.param_count(specs):,} "
-          f"env={env.name} actions={env.num_actions}")
+          f"env={env.name} actions={env.num_actions} runtime=sync")
 
     init_fn, unroll = actor_lib.build_actor(env, arch, icfg, args.num_envs)
     train_step, opt = learner_lib.build_train_step(arch, icfg,
@@ -85,16 +114,16 @@ def main() -> int:
 
     carry = init_fn(jax.random.key(args.seed + 1))
     lag = LagController(icfg.policy_lag, params)
-    queue = TrajectoryQueue(capacity=8)
     buf = ReplayBuffer(icfg.replay_capacity)
     tracker = EpisodeTracker(args.num_envs)
     frames = 0
     t0 = time.time()
     for step in range(start_step, args.steps):
-        carry, traj = unroll(lag.actor_params(), carry)
-        queue.put(traj)
-        tracker.update(np.asarray(traj["rewards"]), np.asarray(traj["done"]))
-        batch = queue.get()
+        # acting and learning interleave directly — no queue theatre: the
+        # trajectory IS the batch (the real queue lives in the async path)
+        carry, batch = unroll(lag.actor_params(), carry)
+        tracker.update(np.asarray(batch["rewards"]),
+                       np.asarray(batch["done"]))
         if icfg.replay_fraction > 0:
             buf.add_batch(batch)
             rep = buf.sample(args.num_envs)
@@ -114,6 +143,63 @@ def main() -> int:
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, args.steps, params)
     print(f"final return(100) = {tracker.mean_return():.3f}")
+    return 0
+
+
+def _run_async(args, env, arch, icfg) -> int:
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.distributed import run_async_training
+    from repro.models import backbone as bb
+    from repro.models import common
+
+    if icfg.replay_fraction > 0:
+        raise SystemExit("--replay-fraction requires --runtime sync")
+    specs = bb.backbone_specs(arch, env.num_actions)
+    print(f"arch={arch.name} params={common.param_count(specs):,} "
+          f"env={env.name} actions={env.num_actions} runtime=async "
+          f"actors={args.actor_threads} queue={args.queue_capacity}/"
+          f"{args.queue_policy} max_batch_trajs={args.max_batch_trajs}")
+    initial_params, start_step = None, 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        like = common.init_params(specs, jax.random.key(args.seed))
+        initial_params, start_step = ckpt.restore(args.ckpt_dir, like)
+        print(f"restored checkpoint at step {start_step}")
+
+    last_params = [None]
+
+    def on_update(step, params, metrics, snapshot_fn):
+        last_params[0] = params
+        if step % args.log_every == 0:
+            tel = snapshot_fn()
+            lag = tel["lag"]
+            q = tel["queue"]
+            print(f"update {step:6d} "
+                  f"loss={float(metrics['loss/total']):10.2f} "
+                  f"lag(mean/max)={lag['mean']:.2f}/{lag['max']} "
+                  f"queue(occ/drop/stall)={q['mean_occupancy']:.1f}/"
+                  f"{q['dropped']}/{q['put_stalls']} "
+                  f"learner_fps={tel['frames_per_sec']:7.0f} "
+                  f"actor_fps={tel['actors']['actor_fps']:7.0f}")
+        if args.ckpt_dir and step % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step, params)
+
+    tracker, metrics, tel = run_async_training(
+        env, icfg, args.num_envs, args.steps,
+        num_actors=args.actor_threads,
+        queue_capacity=args.queue_capacity,
+        queue_policy=args.queue_policy,
+        max_batch_trajs=args.max_batch_trajs,
+        seed=args.seed, arch=arch, initial_params=initial_params,
+        start_step=start_step, on_update=on_update)
+    if args.ckpt_dir and last_params[0] is not None:
+        ckpt.save(args.ckpt_dir, args.steps, last_params[0])
+    print(f"final return(100) = {tracker.mean_return():.3f}")
+    print("telemetry:", json.dumps(
+        {k: tel[k] for k in ("learner_updates", "frames_consumed",
+                             "updates_per_sec", "frames_per_sec",
+                             "batch_size_hist", "lag", "queue",
+                             "actors", "param_version")},
+        default=float))
     return 0
 
 

@@ -151,7 +151,8 @@ def _apply_moe_shard_map(params, x, cfg: ArchConfig, rules
     if "gate" in params:
         local_w["gate"] = params["gate"]["kernel"]
         w_specs["gate"] = e_spec
-    y, aux = jax.shard_map(
+    from repro.sharding.compat import shard_map
+    y, aux = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(), w_specs, P(batch_ax, None, None)),
         out_specs=(P(batch_ax, None, None), P()),

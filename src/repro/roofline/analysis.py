@@ -75,6 +75,16 @@ class Roofline:
     useful_flops_ratio: Optional[float] = None
 
 
+def executable_cost(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalised across jax versions: older
+    releases return a one-element list of dicts, newer ones the dict
+    itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def analyse(cost: Dict[str, float], hlo_text: str, hw: Dict[str, float],
             model_flops: Optional[float] = None) -> Roofline:
     flops = float(cost.get("flops", 0.0))

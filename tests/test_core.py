@@ -114,6 +114,15 @@ def test_mix_batches_fraction():
     assert float(mixed["x"].sum()) == 8.0  # 4 rows of ones
 
 
+def test_queue_put_reports_drop_before_eviction():
+    q = TrajectoryQueue(capacity=2)
+    assert q.put("a") and q.put("b")        # ring always accepts
+    assert q.dropped == 0
+    assert q.put("c")                       # full: "a" evicted, counted
+    assert q.dropped == 1 and q.pushed == 3
+    assert q.get() == "b" and q.get() == "c" and q.get() is None
+
+
 def test_queue_and_lag():
     q = TrajectoryQueue(capacity=2)
     q.put(1), q.put(2), q.put(3)

@@ -156,7 +156,7 @@ def test_lower_pair_end_to_end_subprocess():
                 lowered, meta = steps_lib.lower_pair(arch, shape, mesh,
                                                      rules)
                 compiled = lowered.compile()
-                cost = compiled.cost_analysis()
+                cost = analysis.executable_cost(compiled)
                 coll = analysis.collective_bytes(compiled.as_text())
                 out[f"{name}/{shape.kind}"] = {
                     "flops": cost.get("flops", 0),
