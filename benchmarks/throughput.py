@@ -14,9 +14,20 @@ Variants mirror Figure 2:
                   overlap the learner, which drains the queue with
                   dynamic batching; fps counts learner-consumed frames
                   at steady state
+  impala_proc     actor *processes* over the serialized shm transport —
+                  acting leaves the learner's interpreter entirely, the
+                  trajectory pipeline crosses a real byte boundary
+
+Besides the CSV rows, the run writes ``BENCH_throughput.json`` (variant
+-> frames/sec plus run metadata) so the perf trajectory is tracked
+across PRs instead of only printed.
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
+import sys
 import time
 
 import jax
@@ -72,32 +83,77 @@ def _measure(env_name: str, variant: str, num_envs: int = 32,
 
 
 def _measure_async(env_name: str, num_envs: int = 32, unroll: int = 20,
-                   iters: int = 20, num_actors: int = 2) -> float:
+                   iters: int = 20, num_actors: int = 2,
+                   actor_backend: str = "thread",
+                   transport: str = "inproc") -> float:
     from repro.distributed import run_async_training
 
     env = make_env(env_name)
     icfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=unroll)
     _, _, tel = run_async_training(
-        env, icfg, num_envs, iters, num_actors=num_actors,
+        env_name, icfg, num_envs, iters, num_actors=num_actors,
+        actor_backend=actor_backend, transport=transport,
         queue_capacity=8, queue_policy="block", max_batch_trajs=4,
         seed=0, arch=small_arch(env), warm_buckets=True)
     return tel["frames_per_sec"]
 
 
+def _write_json(fps_by_env) -> None:
+    out = {
+        "benchmark": "throughput",
+        "unit": "frames_per_sec",
+        "meta": {
+            "fast_mode": FAST,
+            "python": sys.version.split()[0],
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "cpu_count": os.cpu_count(),
+            "devices": [str(d) for d in jax.devices()],
+        },
+        "variants": {f"{env_name}/{variant}": round(v, 2)
+                     for env_name, fps in fps_by_env.items()
+                     for variant, v in fps.items()},
+    }
+    path = os.environ.get("BENCH_JSON", "BENCH_throughput.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", flush=True)
+
+
 def run() -> None:
     iters = 5 if FAST else 20
+    # both async variants at the same actor count so the thread-vs-process
+    # comparison is apples to apples
+    async_actors = 4
+    fps_by_env = {}
     for env_name in ("catch", "chase"):
-        fps = {}
+        fps = fps_by_env.setdefault(env_name, {})
         for variant in ("a2c_sync_step", "a2c_sync_traj", "impala"):
             fps[variant] = _measure(env_name, variant, iters=iters)
             emit(f"throughput/{env_name}/{variant}",
                  1e6 / max(fps[variant], 1e-9),
                  f"fps={fps[variant]:.0f}")
-        fps["impala_async"] = _measure_async(env_name, iters=max(iters, 10))
+        # the async variants need a longer run than the sync ones: their
+        # fps is a steady-state window opened only after every worker is
+        # past startup (jax import + compile, per process for the proc
+        # backend), so short runs measure mostly ramp noise
+        async_iters = max(iters * 3, 15)
+        fps["impala_async"] = _measure_async(
+            env_name, iters=async_iters, num_actors=async_actors)
         emit(f"throughput/{env_name}/impala_async",
              1e6 / max(fps["impala_async"], 1e-9),
              f"fps={fps['impala_async']:.0f}")
+        fps["impala_proc"] = _measure_async(
+            env_name, iters=async_iters, num_actors=async_actors,
+            actor_backend="process", transport="shm")
+        emit(f"throughput/{env_name}/impala_proc",
+             1e6 / max(fps["impala_proc"], 1e-9),
+             f"fps={fps['impala_proc']:.0f}")
         emit(f"throughput/{env_name}/impala_speedup_vs_sync_step", 0.0,
              f"x{fps['impala'] / max(fps['a2c_sync_step'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/async_speedup_vs_sync_traj", 0.0,
              f"x{fps['impala_async'] / max(fps['a2c_sync_traj'], 1e-9):.2f}")
+        emit(f"throughput/{env_name}/proc_speedup_vs_async", 0.0,
+             f"x{fps['impala_proc'] / max(fps['impala_async'], 1e-9):.2f}")
+    _write_json(fps_by_env)

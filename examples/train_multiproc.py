@@ -1,19 +1,14 @@
-"""Async quickstart: the paper's actual architecture — actors decoupled
-from the learner — running as real threads in one process.
+"""Multi-process actors: the paper's deployment shape on one machine.
 
-Two actor threads each drive their own batch of `catch` envs with a
-jitted unroll (the dispatch drops the GIL, so they overlap the learner);
-trajectories flow through a bounded backpressured queue; the learner
-stacks up to 4 of them per update (dynamic batching) and publishes params
-through a versioned store. Policy lag is *measured* per trajectory — watch
-the lag histogram in the final telemetry, it is the off-policy gap that
-V-trace is correcting.
+Two actor *processes* (own interpreter, own env batch, own jit cache —
+no GIL shared with the learner) act `catch` and ship serde-encoded
+trajectory buffers over the shm transport; the learner drains them with
+dynamic batching and publishes parameters back through the store's
+serialized subscribe path (encoded once per version, pulled by version
+over a pipe). Same loop body, same RNG streams, same telemetry as the
+thread backend — only the transport changed. That is the point.
 
-This is the thread backend over the zero-copy in-process transport; see
-``examples/train_multiproc.py`` for the same run with actor *processes*
-shipping serialized trajectory buffers over the shm transport.
-
-  PYTHONPATH=src python examples/train_async.py
+  PYTHONPATH=src python examples/train_multiproc.py
 """
 import json
 
@@ -33,20 +28,23 @@ def main():
     def log(step, params, metrics, snapshot_fn):
         if step % 100 == 0:
             tel = snapshot_fn()
+            q = tel["queue"]
             print(f"update {step}: loss={float(metrics['loss/total']):.2f} "
                   f"lag(mean)={tel['lag']['mean']:.2f} "
-                  f"queue_occ={tel['queue']['mean_occupancy']:.1f} "
+                  f"wire_mb={q['wire_bytes'] / 1e6:.1f} "
                   f"fps={tel['frames_per_sec']:.0f}")
 
     tracker, metrics, tel = run_async_training(
-        env, cfg, num_envs=32, steps=400, num_actors=2,
+        "catch", cfg, num_envs=32, steps=400, num_actors=2,
+        actor_backend="process", transport="shm",
         queue_capacity=8, queue_policy="block", max_batch_trajs=4,
         seed=0, arch=arch, on_update=log)
 
     print(f"return(100) = {tracker.mean_return():.3f} "
           f"(optimal 1.0, random ~ -0.6)")
     print("measured lag histogram:", json.dumps(tel["lag"]["hist"]))
-    print("queue:", json.dumps(tel["queue"]))
+    print("transport:", json.dumps(tel["queue"]))
+    assert tel["queue"]["wire_received"] > 0, "trajectories must cross the wire"
     assert tel["lag"]["max"] > 0, "async run must show real policy lag"
     print("done.")
 

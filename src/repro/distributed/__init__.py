@@ -1,21 +1,70 @@
 """repro.distributed — the real asynchronous actor-learner runtime.
 
-Decoupled acting and learning in one process (paper §3): an actor thread
-pool feeds a bounded backpressured trajectory queue; a dynamic-batching
-learner drains it; parameters flow back through a versioned store so
-policy lag is measured per trajectory rather than simulated.
-"""
-from repro.distributed.actor_pool import ActorPool, TrajectoryItem
-from repro.distributed.paramstore import ParameterStore
-from repro.distributed.runtime import MultiTracker, run_async_training
-from repro.distributed.tqueue import POLICIES, TrajectoryQueue
+Decoupled acting and learning (paper §3) as a layered pipeline:
 
-__all__ = [
-    "ActorPool",
-    "TrajectoryItem",
-    "ParameterStore",
-    "MultiTracker",
-    "run_async_training",
-    "POLICIES",
-    "TrajectoryQueue",
-]
+  serde       TrajectoryItem <-> spec-described contiguous byte buffer
+  transport   put/get/backpressure/counters behind one interface —
+              in-process deque (zero-copy) or cross-process wire
+              (serialized buffers, parent-side policy)
+  runner      the actor loop body, shared by thread and process workers
+  pools       ActorPool (threads) / ProcessActorPool (spawned workers)
+  paramstore  versioned publish/pull, plus a serialized subscribe path
+              (encoded once per version) for process actors
+  runtime     the dynamic-batching learner loop over any of the above
+
+Exports resolve lazily (PEP 562): importing ``repro.distributed.serde``
+or ``.transport`` from an actor child process must not drag jax in.
+"""
+from typing import TYPE_CHECKING
+
+_EXPORTS = {
+    "ActorPool": "repro.distributed.actor_pool",
+    "ProcessActorPool": "repro.distributed.procpool",
+    "TrajectoryItem": "repro.distributed.serde",
+    "encode_item": "repro.distributed.serde",
+    "decode_item": "repro.distributed.serde",
+    "encode_tree": "repro.distributed.serde",
+    "decode_tree": "repro.distributed.serde",
+    "tree_spec": "repro.distributed.serde",
+    "ParameterStore": "repro.distributed.paramstore",
+    "MultiTracker": "repro.distributed.runtime",
+    "run_async_training": "repro.distributed.runtime",
+    "run_actor_loop": "repro.distributed.runner",
+    "POLICIES": "repro.distributed.tqueue",
+    "TrajectoryQueue": "repro.distributed.tqueue",
+    "TRANSPORTS": "repro.distributed.transport",
+    "Transport": "repro.distributed.transport",
+    "InprocTransport": "repro.distributed.transport",
+    "ShmTransport": "repro.distributed.transport",
+    "make_transport": "repro.distributed.transport",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(target), name)
+
+
+def __dir__():
+    return __all__
+
+
+if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
+    from repro.distributed.actor_pool import ActorPool
+    from repro.distributed.paramstore import ParameterStore
+    from repro.distributed.procpool import ProcessActorPool
+    from repro.distributed.runner import run_actor_loop
+    from repro.distributed.runtime import MultiTracker, run_async_training
+    from repro.distributed.serde import (TrajectoryItem, decode_item,
+                                         decode_tree, encode_item,
+                                         encode_tree, tree_spec)
+    from repro.distributed.tqueue import POLICIES, TrajectoryQueue
+    from repro.distributed.transport import (TRANSPORTS, InprocTransport,
+                                             ShmTransport, Transport,
+                                             make_transport)

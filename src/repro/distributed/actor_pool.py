@@ -2,52 +2,99 @@
 stream, and jitted unroll (paper §3's distributed actors, in-process).
 
 Concurrency model: each worker's loop is (pull params) -> (jitted unroll)
--> (queue put). The unroll dispatch drops the GIL while XLA executes, so
-workers genuinely overlap with each other and with the learner's
+-> (transport put). The unroll dispatch drops the GIL while XLA executes,
+so workers genuinely overlap with each other and with the learner's
 train_step on a multicore host — this is real decoupling, not simulated
-lag. Each worker builds its own ``build_actor`` closure, so its jit cache,
-env batch, and RNG stream are private; worker i derives its streams from
-``fold_in(seed, i)`` so runs are reproducible per actor count.
+lag. Each worker builds its own ``build_actor`` closure, so its jit
+cache, env batch, and RNG stream are private; the loop body itself lives
+in ``runner.run_actor_loop``, shared verbatim with the process backend.
 
-Each produced trajectory is stamped with the parameter version it was
-acted with (see ``paramstore``) plus its actor id, making per-trajectory
-policy lag measurable at the learner.
+The pool is written against the ``Transport`` interface. With the
+in-process transport, items are live pytrees and put() outcomes carry
+the accounting; with a serializing transport (``ShmTransport``), policy
+decisions happen at the drain side, so acceptance/rejection is counted
+through the transport's attribution hooks instead. Either way,
+``stats()["rejected"]`` charges every lost trajectory — drop_newest
+rejections *and* drop_oldest evictions — back to the actor that made it.
 """
 from __future__ import annotations
 
-import dataclasses
 import threading
 import time
-from typing import Any, Dict, List, Optional
-
-import jax
+from typing import Dict, List, Optional
 
 from repro.core import actor as actor_lib
 from repro.distributed.paramstore import ParameterStore
-from repro.distributed.tqueue import TrajectoryQueue
-
-PyTree = Any
-
-
-@dataclasses.dataclass
-class TrajectoryItem:
-    """What flows through the queue: the trajectory pytree plus the
-    provenance needed for measured lag and per-actor accounting."""
-    data: PyTree
-    param_version: int
-    actor_id: int
-    produced_at: float
+from repro.distributed.runner import run_actor_loop
+from repro.distributed.serde import TrajectoryItem  # noqa: F401 (re-export)
+from repro.distributed.transport import Transport
 
 
-class ActorPool:
+class PoolAccounting:
+    """The per-actor ledger both worker pools share: frames / accepted
+    trajectories / losses, the steady-state fps clock, and the stats
+    dict the runtime's telemetry embeds. Loss attribution can arrive
+    from several threads at once (a producer counting its own rejection,
+    the queue's eviction callback, a transport drain thread), so the
+    ``rejected`` ledger is written under a lock."""
+
+    backend = "?"
+
+    def _init_accounting(self, num_actors: int, frames_per_traj: int
+                         ) -> None:
+        self.num_actors = num_actors
+        self.frames = [0] * num_actors          # env frames produced
+        self.trajectories = [0] * num_actors    # accepted into the queue
+        self.rejected = [0] * num_actors        # lost (rejected/evicted)
+        self._acct_lock = threading.Lock()
+        self._steady_t0: Optional[float] = None
+        self._steady_frames0 = 0
+        self._frames_per_traj = frames_per_traj
+
+    def _note_accept(self, item: TrajectoryItem) -> None:
+        self.trajectories[item.actor_id] += 1
+
+    def _note_loss(self, item: TrajectoryItem) -> None:
+        with self._acct_lock:
+            self.rejected[item.actor_id] += 1
+
+    def _note_frames(self, idx: int) -> None:
+        self.frames[idx] += self._frames_per_traj
+        if self._steady_t0 is None:
+            # fps clock starts at the first finished trajectory
+            # (post-compile), mirroring the learner's steady-state
+            # window; benign race — near-identical timestamps
+            self._steady_t0 = time.monotonic()
+            self._steady_frames0 = sum(self.frames)
+
+    def stats(self) -> Dict[str, float]:
+        total_frames = sum(self.frames)
+        fps = 0.0
+        if self._steady_t0 is not None:
+            dt = time.monotonic() - self._steady_t0
+            if dt > 0:
+                fps = (total_frames - self._steady_frames0) / dt
+        return {
+            "num_actors": self.num_actors,
+            "backend": self.backend,
+            "frames": total_frames,
+            "trajectories": sum(self.trajectories),
+            "rejected": sum(self.rejected),
+            "rejected_per_actor": list(self.rejected),
+            "actor_fps": fps,
+            "frames_per_actor": list(self.frames),
+        }
+
+
+class ActorPool(PoolAccounting):
+    backend = "thread"
+
     def __init__(self, env, arch_cfg, icfg, num_envs: int, num_actors: int,
-                 store: ParameterStore, queue: TrajectoryQueue,
-                 seed: int = 0):
+                 store: ParameterStore, queue: Transport, seed: int = 0):
         if num_actors < 1:
             raise ValueError("num_actors must be >= 1")
         self.env = env
         self.num_envs = num_envs
-        self.num_actors = num_actors
         self.store = store
         self.queue = queue
         self.seed = seed
@@ -58,48 +105,50 @@ class ActorPool:
             # per-actor closure => per-actor jit cache and env batch
             self._builders.append(
                 actor_lib.build_actor(env, arch_cfg, icfg, num_envs))
-        self.frames = [0] * num_actors          # env frames produced
-        self.trajectories = [0] * num_actors    # accepted into the queue
-        self.rejected = [0] * num_actors        # lost to backpressure
         self.errors: List[BaseException] = []
-        self._steady_t0: Optional[float] = None
-        self._steady_frames0 = 0
-        self._frames_per_traj = num_envs * icfg.unroll_length
+        self._init_accounting(num_actors, num_envs * icfg.unroll_length)
+        # attribution hooks: evictions always come back through the
+        # transport; accept/reject only when the policy runs drain-side
+        self._counts_at_drain = not queue.rejects_at_put
+        if hasattr(queue, "on_drop"):
+            queue.on_drop = self._note_loss
+        if self._counts_at_drain:
+            queue.on_item = self._note_accept
+            queue.on_reject = self._note_loss
 
     # ------------------------------------------------------------------
 
+    def _emit(self, idx: int, item: TrajectoryItem) -> bool:
+        """Transport put with the policy-aware retry loop. True = keep
+        producing; False = shut down."""
+        attempt = 0
+        while not self._stop.is_set():
+            if self.queue.put(item, timeout=0.1, count_stall=attempt == 0):
+                if not self._counts_at_drain:
+                    self.trajectories[idx] += 1
+                return True
+            if self.queue.closed:
+                return False                    # shutting down
+            if self.queue.rejects_at_put and \
+                    self.queue.policy == "drop_newest":
+                with self._acct_lock:
+                    self.rejected[idx] += 1
+                return True                     # genuine drop, move on
+            # block policy timed out (or wire momentarily full):
+            # re-check stop flag and retry
+            attempt += 1
+        return False
+
     def _run(self, idx: int) -> None:
-        init_fn, unroll = self._builders[idx]
-        base = jax.random.fold_in(jax.random.key(self.seed), idx)
-        carry = init_fn(jax.random.fold_in(base, 1))
         try:
-            while not self._stop.is_set():
-                params, version = self.store.pull()
-                carry, traj = unroll(params, carry)
-                # materialise before enqueue: backpressure must reflect
-                # finished work, not a ballooning async dispatch queue
-                traj = jax.block_until_ready(traj)
-                self.frames[idx] += self._frames_per_traj
-                if self._steady_t0 is None:
-                    # fps clock starts at the first finished trajectory
-                    # (post-compile), mirroring the learner's steady-state
-                    # window; benign race — near-identical timestamps
-                    self._steady_t0 = time.monotonic()
-                    self._steady_frames0 = sum(self.frames)
-                item = TrajectoryItem(traj, version, idx, time.monotonic())
-                attempt = 0
-                while not self._stop.is_set():
-                    if self.queue.put(item, timeout=0.1,
-                                      count_stall=attempt == 0):
-                        self.trajectories[idx] += 1
-                        break
-                    if self.queue.closed:
-                        break                   # shutting down
-                    if self.queue.policy == "drop_newest":
-                        self.rejected[idx] += 1
-                        break                   # genuine drop, move on
-                    # block policy timed out: re-check stop flag and retry
-                    attempt += 1
+            run_actor_loop(
+                actor_id=idx,
+                builder=self._builders[idx],
+                seed=self.seed,
+                pull_params=self.store.pull,
+                emit=lambda item: self._emit(idx, item),
+                should_stop=self._stop.is_set,
+                on_unroll=lambda: self._note_frames(idx))
         except BaseException as e:  # surface in the learner thread
             self.errors.append(e)
             self.queue.close()
@@ -115,6 +164,9 @@ class ActorPool:
 
     def stop(self) -> None:
         self._stop.set()
+        if hasattr(self.queue, "begin_shutdown"):
+            self.queue.begin_shutdown()     # serializing transport: keep
+            # the wire draining (discard) while workers wind down
 
     def join(self, timeout: float = 30.0) -> None:
         deadline = time.monotonic() + timeout
@@ -124,19 +176,3 @@ class ActorPool:
     def raise_errors(self) -> None:
         if self.errors:
             raise RuntimeError("actor thread died") from self.errors[0]
-
-    def stats(self) -> Dict[str, float]:
-        total_frames = sum(self.frames)
-        fps = 0.0
-        if self._steady_t0 is not None:
-            dt = time.monotonic() - self._steady_t0
-            if dt > 0:
-                fps = (total_frames - self._steady_frames0) / dt
-        return {
-            "num_actors": self.num_actors,
-            "frames": total_frames,
-            "trajectories": sum(self.trajectories),
-            "rejected": sum(self.rejected),
-            "actor_fps": fps,
-            "frames_per_actor": list(self.frames),
-        }

@@ -12,11 +12,18 @@ Thread-safety: a single mutex guards the (params, version) pair so a pull
 can never observe a torn publish. Params are jax pytrees of immutable
 device arrays — publishing swaps the reference, pullers keep whatever
 snapshot they grabbed.
+
+Actor *processes* can't share the live pytree, so the store also has a
+serialized subscribe path: ``pull_serialized(have_version)`` returns a
+serde-encoded buffer only when something newer than ``have_version``
+exists (else None — a cheap "you're current"). The encode is done at
+most once per published version and cached, so N subscribing actors cost
+one device->host copy per update, not N.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 PyTree = Any
 
@@ -31,6 +38,9 @@ class ParameterStore:
         self._version = version
         self.publishes = 0
         self.pulls = 0
+        self.serialized_pulls = 0
+        self.serialized_encodes = 0
+        self._ser_cache: Optional[Tuple[int, bytes]] = None
 
     def publish(self, params: PyTree) -> int:
         """Install new params; returns the new version."""
@@ -45,6 +55,32 @@ class ParameterStore:
         with self._lock:
             self.pulls += 1
             return self._params, self._version
+
+    def pull_serialized(self, have_version: int = -1
+                        ) -> Optional[Tuple[bytes, int]]:
+        """Returns (encoded params, version) if anything newer than
+        ``have_version`` is published, else None. Encoding happens
+        outside the lock (device->host copy can be slow) and is cached
+        per version; concurrent first-pulls may both encode — idempotent,
+        last writer wins."""
+        with self._lock:
+            self.serialized_pulls += 1
+            version = self._version
+            if version <= have_version:
+                return None
+            params = self._params
+            cached = self._ser_cache
+        if cached is not None and cached[0] == version:
+            return cached[1], version
+        from repro.distributed import serde
+        buf = serde.encode_tree(params)
+        self.serialized_encodes += 1
+        with self._lock:
+            # don't regress the cache if a newer version was encoded in
+            # the meantime
+            if self._ser_cache is None or self._ser_cache[0] <= version:
+                self._ser_cache = (version, buf)
+        return buf, version
 
     @property
     def version(self) -> int:

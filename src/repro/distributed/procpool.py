@@ -1,0 +1,168 @@
+"""Actor *process* pool: spawn-based workers behind the same interface
+as ``ActorPool`` (paper §3's actors on separate interpreters — acting no
+longer competes with the learner for the GIL).
+
+Each worker process builds its own env batch, RNG stream, and jit cache
+from picklable ingredients (env *name*, config dataclasses, seed) — no
+live jax object crosses the boundary. Two channels connect it to the
+parent:
+
+  params     a duplex pipe to the parent's *param server* thread. The
+             child asks "anything newer than version v?"; the server
+             answers from ``ParameterStore.pull_serialized`` (encoded
+             once per version, shared by all children).
+  data       the ``ShmTransport`` wire. The child ships serde-encoded
+             trajectory buffers; the parent's drain thread decodes and
+             applies the backpressure policy.
+
+Accounting happens entirely parent-side through the transport's
+attribution hooks (accepted / rejected / evicted per actor id), so
+``stats()`` has the same meaning as the thread pool's — with the caveat
+that ``frames`` counts trajectories that *arrived* (in-flight unrolls in
+a child are invisible until they land).
+
+Shutdown: set the shared stop event; children exit their loop (their
+wire puts and param pulls are timeout/poll-based); join with a deadline;
+``terminate()`` stragglers so no orphan can outlive the run.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+import time
+from multiprocessing import connection as mp_connection
+from typing import List
+
+from repro.distributed.actor_pool import PoolAccounting
+from repro.distributed.paramstore import ParameterStore
+from repro.distributed.runner import process_actor_main
+from repro.distributed.serde import TrajectoryItem
+from repro.distributed.transport import ShmTransport
+
+
+class ProcessActorPool(PoolAccounting):
+    backend = "process"
+
+    def __init__(self, env_name: str, arch_cfg, icfg, num_envs: int,
+                 num_actors: int, store: ParameterStore,
+                 transport: ShmTransport, seed: int = 0):
+        if num_actors < 1:
+            raise ValueError("num_actors must be >= 1")
+        if not isinstance(transport, ShmTransport):
+            raise ValueError("ProcessActorPool requires a serializing "
+                             "transport (--transport shm)")
+        if not isinstance(env_name, str):
+            raise ValueError("process actors rebuild the env by name; "
+                             "pass an env name, not an Env object")
+        self.env_name = env_name
+        self.num_envs = num_envs
+        self.store = store
+        self.queue = transport
+        self.seed = seed
+        self._ctx = mp.get_context("spawn")
+        self._stop = self._ctx.Event()
+        self._procs: List[mp.process.BaseProcess] = []
+        self._conns = []                        # parent ends of param pipes
+        self.errors: List[str] = []             # child tracebacks
+        # ``frames`` counts trajectories that *landed* parent-side: the
+        # steady clock starts at the first arrival (post child startup +
+        # compile), mirroring the thread pool's convention
+        self._init_accounting(num_actors, num_envs * icfg.unroll_length)
+        self._arch_cfg = arch_cfg
+        self._icfg = icfg
+        transport.on_item = self._note_arrival
+        transport.on_reject = self._note_loss
+        transport.on_drop = self._note_loss
+        self._server = threading.Thread(target=self._serve_params,
+                                        name="param-server", daemon=True)
+
+    # ------------------------------------------------------------------
+    # accounting (runs on the transport drain / param server threads)
+
+    def _note_arrival(self, item: TrajectoryItem) -> None:
+        self._note_accept(item)
+        self._note_frames(item.actor_id)
+
+    # ------------------------------------------------------------------
+    # param server: version-gated pub/sub over pipes
+
+    def _serve_params(self) -> None:
+        conns = list(self._conns)
+        while conns:
+            ready = mp_connection.wait(conns, timeout=0.2)
+            for conn in ready:
+                try:
+                    msg = conn.recv()
+                except (EOFError, OSError):
+                    conns.remove(conn)
+                    continue
+                if msg[0] == "pull":
+                    _, _actor_id, have_version = msg
+                    if self._stop.is_set():
+                        reply = ("stop",)
+                    else:
+                        fresh = self.store.pull_serialized(have_version)
+                        reply = (("params", fresh[1], fresh[0])
+                                 if fresh is not None else ("keep",))
+                    try:
+                        conn.send(reply)
+                    except (OSError, BrokenPipeError):
+                        conns.remove(conn)
+                elif msg[0] == "error":
+                    self.errors.append(msg[2])
+                    self.queue.close()
+            if self._stop.is_set() and not any(
+                    p.is_alive() for p in self._procs):
+                break
+
+    # ------------------------------------------------------------------
+
+    def start(self) -> None:
+        for i in range(self.num_actors):
+            parent_conn, child_conn = self._ctx.Pipe()
+            self._conns.append(parent_conn)
+            p = self._ctx.Process(
+                target=process_actor_main,
+                args=(i, self.env_name, self._arch_cfg, self._icfg,
+                      self.num_envs, self.seed, self.queue.producer(),
+                      child_conn, self._stop),
+                name=f"actor-proc-{i}", daemon=True)
+            self._procs.append(p)
+            p.start()
+            child_conn.close()              # parent keeps only its end
+        self._server.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        # keep the wire flowing (discarding) while children wind down,
+        # so their queue feeders can always flush and no child ever
+        # hangs at exit mid-write into a full pipe
+        self.queue.begin_shutdown()
+
+    def join(self, timeout: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout
+        for p in self._procs:
+            p.join(max(0.1, deadline - time.monotonic()))
+        for p in self._procs:
+            if p.is_alive():                # no orphans, ever
+                p.terminate()
+                p.join(timeout=5.0)
+        if self._server.is_alive():
+            self._server.join(timeout=5.0)
+        for conn in self._conns:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def raise_errors(self) -> None:
+        if self.errors:
+            raise RuntimeError("actor process died:\n" + self.errors[0])
+        if not self._stop.is_set():
+            # a child that crashed before it could report (import error,
+            # OOM kill, ...) must not leave the learner polling forever
+            for p in self._procs:
+                if p.exitcode is not None and p.exitcode != 0:
+                    raise RuntimeError(
+                        f"actor process {p.name} exited with code "
+                        f"{p.exitcode} before reporting an error")

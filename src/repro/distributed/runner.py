@@ -1,0 +1,223 @@
+"""The actor loop body, extracted so one implementation drives both
+thread workers (``ActorPool``) and process workers (``ProcessActorPool``).
+
+The loop is the paper's actor (§3): pull current params, run one jitted
+n-step unroll against a private env batch, stamp the trajectory with the
+parameter version it was acted with, hand it to the transport. What
+varies between backends is only *how* params arrive and *where* the
+trajectory goes:
+
+  threads     pull = ParameterStore.pull (shared memory, zero-copy);
+              emit = Transport.put of the live pytree.
+  processes   pull = request/reply over a pipe against the parent's
+              param server (serde-encoded, cached per version);
+              emit = serde-encode + wire put of the byte buffer.
+
+Each worker derives its RNG stream from ``fold_in(seed, actor_id)`` —
+identical across backends, so a thread-backend run and a process-backend
+run with the same seed act out the same per-actor randomness.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+from typing import Any, Callable, Optional, Tuple
+
+PyTree = Any
+
+
+def run_actor_loop(
+    *,
+    actor_id: int,
+    builder: Tuple[Callable, Callable],
+    seed: int,
+    pull_params: Callable[[], Optional[Tuple[PyTree, int]]],
+    emit: Callable[[Any], bool],
+    should_stop: Callable[[], bool],
+    on_unroll: Optional[Callable[[], None]] = None,
+) -> None:
+    """Drive one actor until ``should_stop`` or a channel closes.
+
+    ``pull_params`` returns (params, version) or None on shutdown.
+    ``emit`` owns backpressure/retry/accounting and returns False only
+    when the worker should exit. ``on_unroll`` fires after each finished
+    (host-materialized) unroll — the hook for frame counters.
+    """
+    import jax  # deferred: keeps this module importable without jax
+
+    from repro.distributed.serde import TrajectoryItem
+
+    init_fn, unroll = builder
+    base = jax.random.fold_in(jax.random.key(seed), actor_id)
+    carry = init_fn(jax.random.fold_in(base, 1))
+    while not should_stop():
+        pulled = pull_params()
+        if pulled is None:
+            break
+        params, version = pulled
+        carry, traj = unroll(params, carry)
+        # materialise before enqueue: backpressure must reflect finished
+        # work, not a ballooning async dispatch queue
+        traj = jax.block_until_ready(traj)
+        if on_unroll is not None:
+            on_unroll()
+        item = TrajectoryItem(traj, version, actor_id, time.monotonic())
+        if not emit(item):
+            break
+
+
+# ---------------------------------------------------------------------------
+# process worker entry point (spawn target — must be module-level)
+
+
+def _tune_child_scheduling(actor_id: int) -> None:
+    """Best-effort OS tuning for an actor child on a shared box: actors
+    yield to the learner (the learner is the throughput constraint under
+    backpressure — a niced actor loses nothing, it would have stalled on
+    the queue anyway) and each child sticks to one core so four children
+    don't migrate across, and thrash the caches of, every core the
+    learner's train step is using."""
+    import os
+    # a small niceness wins: +3 keeps the learner ahead in the scheduler
+    # without starving acting (larger values over-throttle producers on
+    # small hosts); override via env for experiments
+    nice_step = int(os.environ.get("REPRO_ACTOR_NICE", "3"))
+    if nice_step:
+        try:
+            os.nice(nice_step)
+        except OSError:  # pragma: no cover
+            pass
+    if os.environ.get("REPRO_ACTOR_PIN", "1") == "1":
+        try:
+            ncpu = os.cpu_count() or 1
+            os.sched_setaffinity(0, {actor_id % ncpu})
+        except (AttributeError, OSError):  # pragma: no cover
+            pass
+
+
+def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
+                       num_envs: int, seed: int, producer,
+                       param_conn, stop_event) -> None:
+    """Entry point of one actor *process*. Builds its own env batch and
+    jit cache (nothing jax crosses the process boundary), subscribes to
+    params by version from the parent's param server, and ships
+    serde-encoded trajectories through the wire.
+
+    The unroll is kept on the critical path alone: a *subscriber* thread
+    refreshes params in the background (the loop never waits on the
+    pipe once the first version has landed), and a *sender* thread owns
+    encode + wire put behind a depth-1 buffer — enough to overlap the
+    send with the next unroll, shallow enough that wire backpressure
+    still stalls the actor within two trajectories."""
+    import queue as stdlib_queue
+    import threading
+
+    try:
+        _tune_child_scheduling(actor_id)
+        import jax
+        import numpy as np
+
+        from repro.core import actor as actor_lib
+        from repro.data.envs import make_env
+        from repro.distributed import serde
+
+        env = make_env(env_name)
+        builder = actor_lib.build_actor(env, arch_cfg, icfg, num_envs)
+        cache = {"params": None, "version": -1, "dead": False}
+        cache_lock = threading.Lock()
+        fresh = threading.Event()
+
+        def subscribe():
+            # version-gated pub/sub: ask for anything newer than we hold
+            # (a "keep" reply costs one tiny message), at a bounded rate —
+            # the throttle caps both server traffic and this child's
+            # decode+upload work; params are at most ``interval`` stale,
+            # which is exactly the off-policy gap V-trace corrects
+            interval = 0.1
+            while not stop_event.is_set():
+                try:
+                    param_conn.send(("pull", actor_id, cache["version"]))
+                    msg = param_conn.recv()
+                except (EOFError, OSError, BrokenPipeError, ValueError):
+                    # includes the main thread closing the conn under us
+                    # during shutdown
+                    break
+                if msg[0] == "stop":
+                    break
+                if msg[0] == "params":
+                    _, version, buf = msg
+                    tree, _ = serde.decode_tree(buf, copy=True)
+                    params = jax.tree.map(jax.numpy.asarray, tree)
+                    with cache_lock:
+                        cache["params"] = params
+                        cache["version"] = version
+                    fresh.set()
+                if stop_event.wait(interval):
+                    break
+            with cache_lock:
+                cache["dead"] = True
+            fresh.set()
+
+        def pull_params():
+            while not fresh.wait(timeout=0.2):
+                if stop_event.is_set():
+                    return None
+            with cache_lock:
+                if cache["dead"] and cache["params"] is None:
+                    return None
+                return cache["params"], cache["version"]
+
+        outbox: stdlib_queue.Queue = stdlib_queue.Queue(maxsize=1)
+
+        def send_loop():
+            while True:
+                try:
+                    item = outbox.get(timeout=0.1)
+                except stdlib_queue.Empty:
+                    if stop_event.is_set():
+                        return
+                    continue
+                if item is None:
+                    return
+                buf = serde.encode_item(serde.TrajectoryItem(
+                    jax.tree.map(np.asarray, item.data),
+                    item.param_version, item.actor_id, item.produced_at))
+                while not stop_event.is_set():
+                    if producer.send(buf, timeout=0.1):
+                        break
+
+        def emit(item):
+            while not stop_event.is_set():
+                try:
+                    outbox.put(item, timeout=0.1)
+                    return True
+                except stdlib_queue.Full:
+                    continue            # wire backpressure reached us
+            return False
+
+        sub = threading.Thread(target=subscribe, daemon=True,
+                               name="param-subscriber")
+        snd = threading.Thread(target=send_loop, daemon=True,
+                               name="traj-sender")
+        sub.start()
+        snd.start()
+        try:
+            run_actor_loop(actor_id=actor_id, builder=builder, seed=seed,
+                           pull_params=pull_params, emit=emit,
+                           should_stop=stop_event.is_set)
+        finally:
+            try:
+                outbox.put_nowait(None)
+            except stdlib_queue.Full:
+                pass
+            snd.join(timeout=5.0)
+    except BaseException:
+        try:
+            param_conn.send(("error", actor_id, traceback.format_exc()))
+        except (EOFError, OSError, BrokenPipeError):
+            pass
+    finally:
+        try:
+            param_conn.close()
+        except OSError:
+            pass

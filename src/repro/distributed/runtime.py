@@ -1,11 +1,13 @@
 """The asynchronous actor-learner runtime (paper §3, for real).
 
-``run_async_training`` stands up N actor threads (``actor_pool``) feeding
-a bounded backpressured queue (``tqueue``) that one learner loop drains
-with *dynamic batching*: up to ``max_batch_trajs`` queued trajectories are
-stacked into a single larger learner batch (§3.1's dynamic batching,
-applied learner-side), amortising the update's fixed cost over more
-frames. Batch sizes are bucketed to powers of two so XLA compiles at most
+``run_async_training`` stands up N actors — threads (``actor_pool``) or
+spawn-based processes (``procpool``) — feeding a bounded backpressured
+``Transport`` (in-process deque, or serialized buffers over a
+cross-process wire) that one learner loop drains with *dynamic
+batching*: up to ``max_batch_trajs`` queued trajectories are stacked
+into a single larger learner batch (§3.1's dynamic batching, applied
+learner-side), amortising the update's fixed cost over more frames.
+Batch sizes are bucketed to powers of two so XLA compiles at most
 log2(max_batch_trajs)+1 variants of the train step.
 
 Parameters flow learner -> ``ParameterStore`` -> actors; each trajectory
@@ -29,9 +31,10 @@ from repro.configs.base import ArchConfig, ImpalaConfig
 from repro.core import learner as learner_lib
 from repro.core.metrics import EpisodeTracker
 from repro.data.envs import make_env
-from repro.distributed.actor_pool import ActorPool, TrajectoryItem
+from repro.distributed.actor_pool import ActorPool
 from repro.distributed.paramstore import ParameterStore
-from repro.distributed.tqueue import TrajectoryQueue
+from repro.distributed.serde import TrajectoryItem
+from repro.distributed.transport import make_transport
 from repro.models import backbone as bb
 from repro.models import common as pcommon
 
@@ -75,8 +78,16 @@ def _buckets(max_batch_trajs: int) -> List[int]:
 def _stack(items: List[TrajectoryItem]) -> PyTree:
     if len(items) == 1:
         return items[0].data
-    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
-                        *[it.data for it in items])
+
+    def cat(*xs):
+        # serialized transports deliver numpy views: concatenate on the
+        # host (one copy, feeding the jit's host->device transfer)
+        # instead of converting every leaf to a device array first
+        if isinstance(xs[0], np.ndarray):
+            return np.concatenate(xs, axis=0)
+        return jnp.concatenate(xs, axis=0)
+
+    return jax.tree.map(cat, *[it.data for it in items])
 
 
 def run_async_training(
@@ -86,6 +97,8 @@ def run_async_training(
     steps: int,
     *,
     num_actors: int = 2,
+    actor_backend: str = "thread",
+    transport: str = "inproc",
     queue_capacity: int = 8,
     queue_policy: str = "block",
     max_batch_trajs: int = 4,
@@ -97,6 +110,16 @@ def run_async_training(
     on_update: Optional[Callable[[int, PyTree, Dict, Dict], None]] = None,
 ) -> Tuple[MultiTracker, Dict, Dict]:
     """Train until ``steps`` total learner updates with real async acting.
+
+    ``actor_backend`` picks where actors live: ``thread`` (workers in
+    this interpreter, zero-copy handoff) or ``process`` (spawned
+    interpreters, each with its own env batch, RNG stream, and jit
+    cache). ``transport`` picks how trajectories travel: ``inproc`` (the
+    live-pytree deque) or ``shm`` (serde-encoded buffers over a
+    cross-process wire). Process actors require the serializing
+    transport; thread actors accept either — ``thread``+``shm`` drives
+    every byte of the serialization boundary without paying process
+    startup, which is exactly what the transport tests exploit.
 
     ``initial_params`` + ``start_step`` resume from a checkpoint: the
     update counter (and the parameter-store version) continues from
@@ -119,6 +142,12 @@ def run_async_training(
     if max_batch_trajs < 1:
         raise ValueError(f"max_batch_trajs must be >= 1, got "
                          f"{max_batch_trajs}")
+    if actor_backend not in ("thread", "process"):
+        raise ValueError(f"actor_backend must be 'thread' or 'process', "
+                         f"got {actor_backend!r}")
+    if actor_backend == "process" and transport != "shm":
+        raise ValueError("process actors cannot share live pytrees; use "
+                         "transport='shm'")
     env = make_env(env_name) if isinstance(env_name, str) else env_name
     if arch is None:
         from repro.core.driver import small_arch
@@ -134,9 +163,15 @@ def run_async_training(
     opt_state = opt.init(params)
 
     store = ParameterStore(params, version=start_step)
-    queue = TrajectoryQueue(queue_capacity, queue_policy)
-    pool = ActorPool(env, arch, icfg, num_envs, num_actors, store, queue,
-                     seed=seed)
+    queue = make_transport(transport, queue_capacity, queue_policy)
+    if actor_backend == "process":
+        from repro.distributed.procpool import ProcessActorPool
+        pool = ProcessActorPool(
+            env_name if isinstance(env_name, str) else env.name,
+            arch, icfg, num_envs, num_actors, store, queue, seed=seed)
+    else:
+        pool = ActorPool(env, arch, icfg, num_envs, num_actors, store,
+                         queue, seed=seed)
     tracker = MultiTracker(num_actors, num_envs)
     buckets = _buckets(max_batch_trajs)
     frames_per_traj = num_envs * icfg.unroll_length
@@ -145,21 +180,34 @@ def run_async_training(
     batch_hist: collections.Counter = collections.Counter()
     updates = start_step
     frames_consumed = 0
+    # the steady-state window opens once every actor has landed at least
+    # one trajectory AND the learner is past its compile update — the
+    # one-time startup storm (jax import + per-worker XLA compile, paid
+    # once per process for the process backend) is not steady state.
+    # ``first_t0`` (set after the first update) is the fallback so
+    # degenerate runs that end mid-ramp still report an honest rate.
     steady_t0: Optional[float] = None
     steady_updates0 = 0
     steady_frames0 = 0
+    first_t0: Optional[float] = None
+    first_updates0 = 0
+    first_frames0 = 0
     metrics: Dict = {}
 
     def telemetry_snapshot() -> Dict:
         now = time.monotonic()
-        dt = (now - steady_t0) if steady_t0 is not None else 0.0
+        if steady_t0 is not None:
+            dt, u0, f0 = now - steady_t0, steady_updates0, steady_frames0
+        elif first_t0 is not None:
+            dt, u0, f0 = now - first_t0, first_updates0, first_frames0
+        else:
+            dt, u0, f0 = 0.0, 0, 0
         n_lags = sum(lag_hist.values())
         return {
             "learner_updates": updates,
             "frames_consumed": frames_consumed,
-            "updates_per_sec": ((updates - steady_updates0) / dt
-                                if dt > 0 else 0.0),
-            "frames_per_sec": ((frames_consumed - steady_frames0) / dt
+            "updates_per_sec": ((updates - u0) / dt if dt > 0 else 0.0),
+            "frames_per_sec": ((frames_consumed - f0) / dt
                                if dt > 0 else 0.0),
             "batch_size_hist": dict(batch_hist),
             "lag": {
@@ -216,11 +264,17 @@ def run_async_training(
             frames_consumed += k * frames_per_traj
             batch_hist[k] += 1
             if steady_t0 is None:
-                # first update includes jit compile: start the clock after
                 jax.block_until_ready(params)
-                steady_t0 = time.monotonic()
-                steady_updates0 = updates
-                steady_frames0 = frames_consumed
+                if first_t0 is None:
+                    # first update includes the learner's jit compile
+                    first_t0 = time.monotonic()
+                    first_updates0 = updates
+                    first_frames0 = frames_consumed
+                if all(f > 0 for f in pool.frames):
+                    # every worker is past import/compile and producing
+                    steady_t0 = time.monotonic()
+                    steady_updates0 = updates
+                    steady_frames0 = frames_consumed
             if on_update is not None:
                 on_update(updates, params, metrics, telemetry_snapshot)
         # snapshot before teardown: pool.join waits out in-flight unrolls
@@ -228,8 +282,12 @@ def run_async_training(
         jax.block_until_ready(params)
         final_telemetry = telemetry_snapshot()
     finally:
+        # order matters: signal stop (a serializing transport flips to
+        # discard mode so producer processes can always flush and exit),
+        # join the workers, and only then tear the transport down — a
+        # wire closed under a live producer can tear frames
         pool.stop()
-        queue.close()
         pool.join()
+        queue.close()
     pool.raise_errors()
     return tracker, metrics, final_telemetry

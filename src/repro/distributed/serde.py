@@ -1,0 +1,192 @@
+"""Serialization boundary for the trajectory pipeline.
+
+A ``TrajectoryItem`` (trajectory pytree + provenance) is flattened into a
+single spec-described contiguous byte buffer and restored *exactly* —
+same nesting, same key order, same dtypes (including bfloat16), same
+bits. This is the boundary that lets trajectories cross a real wire
+(pipe, shared memory, later a socket) instead of being live jax pytrees
+shared between threads of one interpreter.
+
+Wire format (little-endian throughout)::
+
+    [4B magic 'RTJ1'][4B uint32 header length][header JSON utf-8][payload]
+
+The header is a JSON *spec*: a recursive structure descriptor whose leaf
+nodes carry ``(dtype, shape, byte offset, byte length)`` into the payload,
+plus the item's provenance (param version, actor id, produced_at). The
+payload is the leaves' raw bytes, concatenated in spec order. Decoding is
+zero-copy: each leaf is a (read-only) numpy view into the received buffer.
+
+Deliberately no jax import: actors and transports must be able to move
+buffers (and tests must be able to spawn producer processes) without
+paying a jax import. ``np.asarray`` converts incoming jax arrays on
+encode; bfloat16 comes from ``ml_dtypes``, which numpy interops with.
+
+Supported pytree nodes: dict (string keys, insertion order preserved),
+list, tuple, None, and array-like leaves (numpy/jax arrays and python
+scalars). Namedtuples are encoded structurally as tuples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+MAGIC = b"RTJ1"
+_HDR = struct.Struct("<4sI")
+
+# dtype registry: everything a trajectory / parameter pytree may carry.
+_DTYPES: Dict[str, np.dtype] = {
+    np.dtype(t).name: np.dtype(t)
+    for t in (np.float64, np.float32, np.float16, np.int64, np.int32,
+              np.int16, np.int8, np.uint64, np.uint32, np.uint16, np.uint8,
+              np.bool_, np.complex64, np.complex128)
+}
+_DTYPES["bfloat16"] = np.dtype(ml_dtypes.bfloat16)
+
+
+@dataclasses.dataclass
+class TrajectoryItem:
+    """What flows through a transport: the trajectory pytree plus the
+    provenance needed for measured lag and per-actor accounting."""
+    data: PyTree
+    param_version: int
+    actor_id: int
+    produced_at: float
+
+
+class SerdeError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# spec construction / encoding
+
+
+def _encode_node(tree: PyTree, chunks: List[bytes], offset: int,
+                 path: str) -> Tuple[Dict[str, Any], int]:
+    """Append ``tree``'s leaves to ``chunks`` (starting at byte ``offset``)
+    and return (spec node, next offset)."""
+    if tree is None:
+        return {"t": "none"}, offset
+    if isinstance(tree, dict):
+        keys, children = [], []
+        for k in tree:                      # insertion order IS the spec
+            if not isinstance(k, str):
+                raise SerdeError(f"non-string dict key {k!r} at {path}")
+            node, offset = _encode_node(tree[k], chunks, offset,
+                                        f"{path}/{k}")
+            keys.append(k)
+            children.append(node)
+        return {"t": "dict", "keys": keys, "children": children}, offset
+    if isinstance(tree, (list, tuple)):
+        kind = "tuple" if isinstance(tree, tuple) else "list"
+        children = []
+        for i, child in enumerate(tree):
+            node, offset = _encode_node(child, chunks, offset,
+                                        f"{path}[{i}]")
+            children.append(node)
+        return {"t": kind, "children": children}, offset
+    # leaf: anything numpy can view (jax arrays and python scalars too).
+    # tobytes() yields a C-order copy whatever the input strides, and —
+    # unlike ascontiguousarray — keeps 0-d shapes 0-d.
+    arr = np.asarray(tree)
+    name = arr.dtype.name
+    if name not in _DTYPES:
+        raise SerdeError(f"unsupported leaf dtype {name!r} at {path}")
+    raw = arr.tobytes()                      # contiguous little-endian copy
+    chunks.append(raw)
+    node = {"t": "a", "dtype": name, "shape": list(arr.shape),
+            "off": offset, "n": len(raw)}
+    return node, offset + len(raw)
+
+
+def tree_spec(tree: PyTree) -> Dict[str, Any]:
+    """The structure descriptor alone (offsets included) — what the header
+    carries. Useful for tests and for reasoning about compatibility."""
+    spec, _ = _encode_node(tree, [], 0, "$")
+    return spec
+
+
+def encode_tree(tree: PyTree, meta: Optional[Dict[str, Any]] = None
+                ) -> bytes:
+    """Flatten ``tree`` into one contiguous buffer. ``meta`` must be
+    JSON-serializable; it rides in the header (provenance, version, ...)."""
+    chunks: List[bytes] = []
+    spec, total = _encode_node(tree, chunks, 0, "$")
+    header = json.dumps({"meta": meta or {}, "tree": spec},
+                        separators=(",", ":")).encode("utf-8")
+    return b"".join([_HDR.pack(MAGIC, len(header)), header] + chunks)
+
+
+# ---------------------------------------------------------------------------
+# decoding
+
+
+def _decode_node(node: Dict[str, Any], payload: memoryview,
+                 copy: bool) -> PyTree:
+    t = node["t"]
+    if t == "none":
+        return None
+    if t == "dict":
+        return {k: _decode_node(c, payload, copy)
+                for k, c in zip(node["keys"], node["children"])}
+    if t == "list":
+        return [_decode_node(c, payload, copy) for c in node["children"]]
+    if t == "tuple":
+        return tuple(_decode_node(c, payload, copy)
+                     for c in node["children"])
+    if t == "a":
+        dtype = _DTYPES.get(node["dtype"])
+        if dtype is None:
+            raise SerdeError(f"unknown dtype in spec: {node['dtype']!r}")
+        off, n = node["off"], node["n"]
+        arr = np.frombuffer(payload[off:off + n], dtype=dtype)
+        arr = arr.reshape(node["shape"])
+        return arr.copy() if copy else arr
+    raise SerdeError(f"unknown spec node type {t!r}")
+
+
+def decode_tree(buf: bytes, copy: bool = False
+                ) -> Tuple[PyTree, Dict[str, Any]]:
+    """Inverse of ``encode_tree``: returns (tree, meta).
+
+    ``copy=False`` (default) decodes leaves as zero-copy read-only views
+    of ``buf``; pass ``copy=True`` when the caller needs writable arrays
+    or must outlive the buffer.
+    """
+    if len(buf) < _HDR.size:
+        raise SerdeError(f"buffer too short ({len(buf)} bytes)")
+    magic, hlen = _HDR.unpack_from(buf)
+    if magic != MAGIC:
+        raise SerdeError(f"bad magic {magic!r} (expected {MAGIC!r})")
+    start = _HDR.size
+    header = json.loads(bytes(buf[start:start + hlen]).decode("utf-8"))
+    payload = memoryview(buf)[start + hlen:]
+    tree = _decode_node(header["tree"], payload, copy)
+    return tree, header.get("meta", {})
+
+
+# ---------------------------------------------------------------------------
+# TrajectoryItem convenience layer
+
+
+def encode_item(item: TrajectoryItem) -> bytes:
+    return encode_tree(item.data, meta={
+        "param_version": int(item.param_version),
+        "actor_id": int(item.actor_id),
+        "produced_at": float(item.produced_at),
+    })
+
+
+def decode_item(buf: bytes, copy: bool = False) -> TrajectoryItem:
+    data, meta = decode_tree(buf, copy=copy)
+    return TrajectoryItem(data, int(meta["param_version"]),
+                          int(meta["actor_id"]),
+                          float(meta["produced_at"]))

@@ -20,15 +20,23 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Any, Deque, Dict, Optional
+from typing import Any, Callable, Deque, Dict, Optional
 
 POLICIES = ("block", "drop_oldest", "drop_newest")
 
 
 class TrajectoryQueue:
-    """Bounded MPSC/MPMC queue for trajectory items (any Python object)."""
+    """Bounded MPSC/MPMC queue for trajectory items (any Python object).
 
-    def __init__(self, capacity: int = 8, policy: str = "block"):
+    ``on_drop`` (constructor arg or assignable attribute) is called with
+    each item *evicted* by drop_oldest, so the producer that made it can
+    be charged for the loss — drop_newest rejections are already visible
+    to the caller via ``put`` returning False. The callback runs under
+    the queue lock: it must be fast and must not re-enter the queue.
+    """
+
+    def __init__(self, capacity: int = 8, policy: str = "block",
+                 on_drop: Optional[Callable[[Any], None]] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if policy not in POLICIES:
@@ -36,6 +44,10 @@ class TrajectoryQueue:
                              f"{policy!r}")
         self.capacity = capacity
         self.policy = policy
+        self.on_drop = on_drop
+        # Transport contract (this class is registered as one): a put
+        # returning False under drop_newest IS the rejection of that item
+        self.rejects_at_put = True
         self._q: Deque[Any] = collections.deque()
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
@@ -85,7 +97,9 @@ class TrajectoryQueue:
                 self.dropped += 1
                 if self.policy == "drop_newest":
                     return False                # reject the incoming item
-                self._q.popleft()               # drop_oldest: evict stalest
+                evicted = self._q.popleft()     # drop_oldest: evict stalest
+                if self.on_drop is not None:
+                    self.on_drop(evicted)
             self._accept(item)
             return True
 

@@ -5,16 +5,24 @@ Two runtimes:
   --runtime sync    one loop, acting and learning interleaved; policy lag
                     is *simulated* deterministically (LagController), the
                     right mode for controlled lag/correction experiments.
-  --runtime async   real concurrency (repro.distributed): N actor threads
-                    feed a backpressured queue, the learner drains it with
+  --runtime async   real concurrency (repro.distributed): N actors feed a
+                    backpressured transport, the learner drains it with
                     dynamic batching, and per-trajectory policy lag is
-                    *measured* from parameter-store versions.
+                    *measured* from parameter-store versions. Actors run
+                    as threads (--actor-backend thread, zero-copy
+                    in-process queue) or as spawned processes
+                    (--actor-backend process --transport shm, serialized
+                    trajectory buffers over a cross-process wire — acting
+                    stops competing with the learner for the GIL).
 
 CPU-scale entry points (real envs, real learning):
   PYTHONPATH=src python -m repro.launch.train --arch impala-shallow \
       --env catch --steps 500 --num-envs 32
   PYTHONPATH=src python -m repro.launch.train --runtime async \
       --actor-threads 4 --env catch --steps 200 --smoke
+  PYTHONPATH=src python -m repro.launch.train --runtime async \
+      --actor-backend process --transport shm --env catch \
+      --steps 100 --smoke
 
 The production mesh path for the assigned architectures is exercised by
 ``repro.launch.dryrun`` (compile-only on this CPU-only box).
@@ -50,7 +58,18 @@ def main() -> int:
                    help="use the reduced smoke config of --arch")
     p.add_argument("--runtime", default="sync", choices=["sync", "async"])
     p.add_argument("--actor-threads", type=int, default=2,
-                   help="actor worker threads (async runtime)")
+                   help="actor worker count (async runtime; threads or "
+                        "processes per --actor-backend)")
+    p.add_argument("--actor-backend", default="thread",
+                   choices=["thread", "process"],
+                   help="where actors live: threads of this interpreter "
+                        "(zero-copy) or spawned processes (serialized "
+                        "trajectories, no GIL contention)")
+    p.add_argument("--transport", default="",
+                   choices=["", "inproc", "shm"],
+                   help="trajectory transport; default inproc for thread "
+                        "actors, shm (serialized buffers over a "
+                        "cross-process wire) for process actors")
     p.add_argument("--queue-capacity", type=int, default=8)
     p.add_argument("--queue-policy", default="block",
                    choices=["block", "drop_oldest", "drop_newest"])
@@ -117,7 +136,11 @@ def _run_sync(args, env, arch, icfg) -> int:
     buf = ReplayBuffer(icfg.replay_capacity)
     tracker = EpisodeTracker(args.num_envs)
     frames = 0
-    t0 = time.time()
+    # steady-state fps window opens after the first jitted update lands —
+    # otherwise early prints are dominated by XLA compile time (matching
+    # the async runtime's convention)
+    t0 = None
+    frames0 = 0
     for step in range(start_step, args.steps):
         # acting and learning interleave directly — no queue theatre: the
         # trajectory IS the batch (the real queue lives in the async path)
@@ -132,8 +155,13 @@ def _run_sync(args, env, arch, icfg) -> int:
                                                 jnp.int32(step), batch)
         lag.on_update(params)
         frames += args.num_envs * args.unroll
+        if t0 is None:
+            jax.block_until_ready(params)
+            t0 = time.time()
+            frames0 = frames
         if (step + 1) % args.log_every == 0:
-            fps = frames / (time.time() - t0)
+            dt = time.time() - t0
+            fps = (frames - frames0) / dt if dt > 0 else 0.0
             print(f"step {step+1:6d} return(100)={tracker.mean_return():7.3f} "
                   f"loss={float(metrics['loss/total']):10.2f} "
                   f"entropy={-float(metrics['loss/entropy']):8.1f} "
@@ -154,10 +182,15 @@ def _run_async(args, env, arch, icfg) -> int:
 
     if icfg.replay_fraction > 0:
         raise SystemExit("--replay-fraction requires --runtime sync")
+    transport = args.transport or (
+        "shm" if args.actor_backend == "process" else "inproc")
+    if args.actor_backend == "process" and transport != "shm":
+        raise SystemExit("--actor-backend process requires --transport shm")
     specs = bb.backbone_specs(arch, env.num_actions)
     print(f"arch={arch.name} params={common.param_count(specs):,} "
           f"env={env.name} actions={env.num_actions} runtime=async "
-          f"actors={args.actor_threads} queue={args.queue_capacity}/"
+          f"actors={args.actor_threads}({args.actor_backend}) "
+          f"transport={transport} queue={args.queue_capacity}/"
           f"{args.queue_policy} max_batch_trajs={args.max_batch_trajs}")
     initial_params, start_step = None, 0
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
@@ -186,6 +219,8 @@ def _run_async(args, env, arch, icfg) -> int:
     tracker, metrics, tel = run_async_training(
         env, icfg, args.num_envs, args.steps,
         num_actors=args.actor_threads,
+        actor_backend=args.actor_backend,
+        transport=transport,
         queue_capacity=args.queue_capacity,
         queue_policy=args.queue_policy,
         max_batch_trajs=args.max_batch_trajs,

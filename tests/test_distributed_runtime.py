@@ -217,6 +217,7 @@ def test_async_stress_slow_learner_each_policy(policy):
     assert np.isfinite(float(metrics["loss/total"]))
     assert tel["lag"]["measured"] >= 8    # lag recorded per trajectory
     q = tel["queue"]
+    actors = tel["actors"]
     if policy == "block":
         assert q["put_stalls"] > 0 and q["dropped"] == 0, q
         assert tel["lag"]["max"] > 0, tel["lag"]
@@ -226,6 +227,16 @@ def test_async_stress_slow_learner_each_policy(policy):
     else:  # drop_oldest: drops happen AND keep the learner near on-policy
         assert q["dropped"] > 0, q
         assert tel["lag"]["mean"] <= 2.0, tel["lag"]
+    # every loss — drop_newest rejection or drop_oldest eviction — is
+    # attributed back to the actor that produced the item, so the global
+    # drop counter and the per-actor ledger agree up to in-flight events
+    # (the snapshot reads the two counters non-atomically while actors
+    # are still producing; each producer can have at most one loss in
+    # the window between the reads)
+    if policy != "block":
+        assert actors["rejected"] > 0, (actors, q)
+    assert abs(actors["rejected"] - q["dropped"]) <= 4, (actors, q)
+    assert sum(actors["rejected_per_actor"]) == actors["rejected"]
 
 
 def test_async_measured_lag_and_dynamic_batching():

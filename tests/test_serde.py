@@ -1,0 +1,216 @@
+"""The serialization boundary: a TrajectoryItem flattened to one
+contiguous buffer must come back *exactly* — same nesting, same dict key
+order, same dtypes (bfloat16 included), same bits (NaN payloads too).
+No jax at module level: this is the layer actor processes import."""
+import sys
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.distributed import serde
+
+DTYPES = [np.float32, np.float64, np.float16, np.int32, np.int64,
+          np.uint8, np.bool_, ml_dtypes.bfloat16]
+
+
+def _rand(rng, shape, dtype):
+    dt = np.dtype(dtype)
+    if dt == np.bool_:
+        return rng.integers(0, 2, shape).astype(bool)
+    if dt.kind in "iu":
+        return rng.integers(0, 100, shape).astype(dt)
+    return rng.standard_normal(shape).astype(dt)
+
+
+def _assert_same_tree(a, b, path="$"):
+    assert type(a) is type(b), (path, type(a), type(b))
+    if a is None:
+        return
+    if isinstance(a, dict):
+        assert list(a.keys()) == list(b.keys()), path  # order, not just set
+        for k in a:
+            _assert_same_tree(a[k], b[k], f"{path}/{k}")
+        return
+    if isinstance(a, (list, tuple)):
+        assert len(a) == len(b), path
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_same_tree(x, y, f"{path}[{i}]")
+        return
+    a, b = np.asarray(a), np.asarray(b)     # leaf: same dtype and shape
+    assert a.dtype == b.dtype and a.shape == b.shape, path
+
+
+def _assert_leaves_bitexact(a, b, path="$"):
+    if isinstance(a, dict):
+        for k in a:
+            _assert_leaves_bitexact(a[k], b[k], f"{path}/{k}")
+    elif isinstance(a, (list, tuple)):
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_leaves_bitexact(x, y, f"{path}[{i}]")
+    elif a is not None:
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype, path
+        assert a.shape == b.shape, path
+        assert a.tobytes() == b.tobytes(), f"bits differ at {path}"
+
+
+def _roundtrip(tree):
+    out, _meta = serde.decode_tree(serde.encode_tree(tree))
+    _assert_leaves_bitexact(tree, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# plain tests
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: np.dtype(d).name)
+def test_roundtrip_each_dtype(dtype):
+    rng = np.random.default_rng(0)
+    tree = {"x": _rand(rng, (3, 4), dtype), "y": _rand(rng, (7,), dtype)}
+    out = _roundtrip(tree)
+    assert out["x"].dtype == np.dtype(dtype)
+
+
+def test_roundtrip_nested_structure_and_key_order():
+    rng = np.random.default_rng(1)
+    tree = {
+        "zulu": _rand(rng, (2, 3), np.float32),          # deliberately not
+        "alpha": {"m": _rand(rng, (4,), np.int32),        # sorted: insertion
+                  "a": _rand(rng, (1,), np.float64)},     # order must hold
+        "mid": [_rand(rng, (2,), np.uint8),
+                (_rand(rng, (5,), ml_dtypes.bfloat16), None)],
+        "none": None,
+    }
+    out = _roundtrip(tree)
+    _assert_same_tree(tree, out)
+    assert list(out.keys()) == ["zulu", "alpha", "mid", "none"]
+    assert list(out["alpha"].keys()) == ["m", "a"]
+    assert isinstance(out["mid"], list)
+    assert isinstance(out["mid"][1], tuple)
+    assert out["mid"][1][1] is None
+
+
+def test_roundtrip_empty_leaves_and_scalars():
+    tree = {"empty_f": np.zeros((0, 5), np.float32),
+            "empty_b": np.zeros((3, 0), bool),
+            "scalar": np.float32(1.5),
+            "pyint": 7,                       # encoded as 0-d int array
+            "zerod": np.array(2.5, np.float64)}
+    out = _roundtrip(tree)
+    assert out["empty_f"].shape == (0, 5)
+    assert out["empty_b"].shape == (3, 0)
+    assert out["scalar"].shape == ()
+    assert int(out["pyint"]) == 7
+
+
+def test_roundtrip_nan_and_inf_bit_patterns():
+    weird = np.array([np.nan, -np.nan, np.inf, -np.inf, -0.0], np.float32)
+    _roundtrip({"w": weird, "bf": weird.astype(ml_dtypes.bfloat16)})
+
+
+def test_noncontiguous_input_roundtrips():
+    base = np.arange(24, dtype=np.float32).reshape(4, 6)
+    view = base[::2, ::3]                    # strided, non-contiguous
+    out = _roundtrip({"v": view})
+    assert np.array_equal(out["v"], view)
+
+
+def test_item_provenance_roundtrip():
+    item = serde.TrajectoryItem({"r": np.ones(3, np.float32)},
+                                param_version=42, actor_id=3,
+                                produced_at=123.456)
+    out = serde.decode_item(serde.encode_item(item))
+    assert (out.param_version, out.actor_id) == (42, 3)
+    assert out.produced_at == pytest.approx(123.456)
+    assert out.data["r"].tobytes() == item.data["r"].tobytes()
+
+
+def test_decode_is_zero_copy_and_copy_flag_writable():
+    buf = serde.encode_tree({"x": np.arange(5, dtype=np.int32)})
+    view, _ = serde.decode_tree(buf)
+    assert not view["x"].flags.writeable    # view into the buffer
+    owned, _ = serde.decode_tree(buf, copy=True)
+    owned["x"][0] = 99                      # writable copy
+    assert owned["x"][0] == 99
+
+
+def test_spec_describes_offsets_and_dtypes():
+    tree = {"a": np.zeros((2, 2), np.float32),
+            "b": np.zeros((3,), ml_dtypes.bfloat16)}
+    spec = serde.tree_spec(tree)
+    assert spec["t"] == "dict" and spec["keys"] == ["a", "b"]
+    a, b = spec["children"]
+    assert (a["dtype"], a["off"], a["n"]) == ("float32", 0, 16)
+    assert (b["dtype"], b["off"], b["n"]) == ("bfloat16", 16, 6)
+
+
+def test_errors_bad_magic_truncation_unknown_key_type():
+    with pytest.raises(serde.SerdeError):
+        serde.decode_tree(b"XXXX\x00\x00\x00\x00")
+    with pytest.raises(serde.SerdeError):
+        serde.decode_tree(b"\x01")
+    with pytest.raises(serde.SerdeError):
+        serde.encode_tree({1: np.zeros(2)})   # non-string dict key
+
+
+def test_module_imports_without_jax():
+    """Actor children must be able to move buffers without paying a jax
+    import; guard the dependency edge, not just the behaviour."""
+    import os
+    import subprocess
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c",
+         "import sys; import repro.distributed.serde, "
+         "repro.distributed.transport; sys.exit(1 if 'jax' in "
+         "sys.modules else 0)"],
+        env=env, timeout=120)
+    assert r.returncode == 0, "serde/transport import pulled jax in"
+
+
+# ---------------------------------------------------------------------------
+# property tests (skip cleanly when hypothesis is absent)
+
+if HAVE_HYPOTHESIS:
+    leaf_dtypes = st.sampled_from(DTYPES)
+
+    @st.composite
+    def leaves(draw):
+        dtype = draw(leaf_dtypes)
+        shape = tuple(draw(st.lists(st.integers(0, 4), min_size=0,
+                                    max_size=3)))
+        rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+        return _rand(rng, shape, dtype)
+
+    def trees(depth=2):
+        base = st.one_of(leaves(), st.none())
+        ext = lambda inner: st.one_of(  # noqa: E731
+            st.lists(inner, max_size=3),
+            st.lists(inner, max_size=3).map(tuple),
+            st.dictionaries(st.text(min_size=1, max_size=6), inner,
+                            max_size=3))
+        return st.recursive(base, ext, max_leaves=8)
+else:  # decorators below still need *something* to reference
+    def trees():
+        return None
+
+
+@settings(max_examples=60, deadline=None)
+@given(tree=trees())
+def test_property_roundtrip_bitexact_any_tree(tree):
+    out, _ = serde.decode_tree(serde.encode_tree(tree))
+    _assert_same_tree(tree, out)
+    _assert_leaves_bitexact(tree, out)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tree=trees())
+def test_property_double_roundtrip_stable(tree):
+    buf1 = serde.encode_tree(tree)
+    out1, _ = serde.decode_tree(buf1)
+    buf2 = serde.encode_tree(out1)
+    assert buf1 == buf2                     # encoding is a fixed point
