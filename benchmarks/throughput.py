@@ -17,10 +17,17 @@ Variants mirror Figure 2:
   impala_proc     actor *processes* over the serialized shm transport —
                   acting leaves the learner's interpreter entirely, the
                   trajectory pipeline crosses a real byte boundary
+  impala_infserve       thread actors in *inference mode*: host-side env
+                  stepping against the dynamic-batching
+                  InferenceService (one batched policy forward on the
+                  learner's device, §3.1), zero per-actor params
+  impala_infserve_proc  the same service fed by actor processes: serde
+                  observation/action frames over the service wire
 
 Besides the CSV rows, the run writes ``BENCH_throughput.json`` (variant
 -> frames/sec plus run metadata) so the perf trajectory is tracked
-across PRs instead of only printed.
+across PRs instead of only printed. ``BENCH_ENVS`` (comma-separated)
+restricts the env set — the CI smoke job runs catch only.
 """
 from __future__ import annotations
 
@@ -85,14 +92,16 @@ def _measure(env_name: str, variant: str, num_envs: int = 32,
 def _measure_async(env_name: str, num_envs: int = 32, unroll: int = 20,
                    iters: int = 20, num_actors: int = 2,
                    actor_backend: str = "thread",
-                   transport: str = "inproc") -> float:
+                   transport: str = "inproc",
+                   actor_mode: str = "unroll") -> float:
     from repro.distributed import run_async_training
 
     env = make_env(env_name)
     icfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=unroll)
     _, _, tel = run_async_training(
         env_name, icfg, num_envs, iters, num_actors=num_actors,
-        actor_backend=actor_backend, transport=transport,
+        actor_backend=actor_backend, actor_mode=actor_mode,
+        transport=transport,
         queue_capacity=8, queue_policy="block", max_batch_trajs=4,
         seed=0, arch=small_arch(env), warm_buckets=True)
     return tel["frames_per_sec"]
@@ -123,11 +132,15 @@ def _write_json(fps_by_env) -> None:
 
 def run() -> None:
     iters = 5 if FAST else 20
-    # both async variants at the same actor count so the thread-vs-process
-    # comparison is apples to apples
+    # all async variants at the same actor count so the thread-vs-process
+    # (and unroll-vs-inference-service) comparisons are apples to apples
     async_actors = 4
+    env_names = tuple(
+        e.strip()
+        for e in os.environ.get("BENCH_ENVS", "catch,chase").split(",")
+        if e.strip())
     fps_by_env = {}
-    for env_name in ("catch", "chase"):
+    for env_name in env_names:
         fps = fps_by_env.setdefault(env_name, {})
         for variant in ("a2c_sync_step", "a2c_sync_traj", "impala"):
             fps[variant] = _measure(env_name, variant, iters=iters)
@@ -150,10 +163,25 @@ def run() -> None:
         emit(f"throughput/{env_name}/impala_proc",
              1e6 / max(fps["impala_proc"], 1e-9),
              f"fps={fps['impala_proc']:.0f}")
+        fps["impala_infserve"] = _measure_async(
+            env_name, iters=async_iters, num_actors=async_actors,
+            actor_mode="inference")
+        emit(f"throughput/{env_name}/impala_infserve",
+             1e6 / max(fps["impala_infserve"], 1e-9),
+             f"fps={fps['impala_infserve']:.0f}")
+        fps["impala_infserve_proc"] = _measure_async(
+            env_name, iters=async_iters, num_actors=async_actors,
+            actor_backend="process", transport="shm",
+            actor_mode="inference")
+        emit(f"throughput/{env_name}/impala_infserve_proc",
+             1e6 / max(fps["impala_infserve_proc"], 1e-9),
+             f"fps={fps['impala_infserve_proc']:.0f}")
         emit(f"throughput/{env_name}/impala_speedup_vs_sync_step", 0.0,
              f"x{fps['impala'] / max(fps['a2c_sync_step'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/async_speedup_vs_sync_traj", 0.0,
              f"x{fps['impala_async'] / max(fps['a2c_sync_traj'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/proc_speedup_vs_async", 0.0,
              f"x{fps['impala_proc'] / max(fps['impala_async'], 1e-9):.2f}")
+        emit(f"throughput/{env_name}/infserve_speedup_vs_async", 0.0,
+             f"x{fps['impala_infserve'] / max(fps['impala_async'], 1e-9):.2f}")
     _write_json(fps_by_env)

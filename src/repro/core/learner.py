@@ -45,7 +45,7 @@ def forward_trajectory(params, batch: Dict, arch_cfg: ArchConfig,
 
 
 def build_loss_fn(arch_cfg: ArchConfig, cfg: ImpalaConfig,
-                  num_actions: int, vtrace_impl: str = "scan",
+                  num_actions: int, vtrace_impl: str = "auto",
                   aux_coef: float = 0.01):
     def loss_fn(params, batch):
         logits, values, aux = forward_trajectory(params, batch, arch_cfg,
@@ -72,10 +72,14 @@ def build_loss_fn(arch_cfg: ArchConfig, cfg: ImpalaConfig,
 def build_train_step(arch_cfg: ArchConfig, cfg: ImpalaConfig,
                      num_actions: int,
                      optimizer: opt_lib.Optimizer = None,
-                     vtrace_impl: str = "scan",
+                     vtrace_impl: str = "auto",
                      mixed_precision: bool = False,
                      ) -> Callable[..., Tuple[PyTree, PyTree, Dict]]:
-    """mixed_precision: the *live* params are bf16 leaves and the f32
+    """vtrace_impl: 'auto' picks the Pallas kernel on TPU and the scan
+    path elsewhere (``losses.resolve_vtrace_impl``); 'scan' / 'pallas' /
+    'reference' pin an implementation.
+
+    mixed_precision: the *live* params are bf16 leaves and the f32
     master copy lives in the optimizer state — so the autodiff cotangents
     (and the cross-device gradient reduction GSPMD inserts on them) are
     bf16, halving grad-sync bytes (§Perf B2). RMSProp accumulates on the

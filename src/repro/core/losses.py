@@ -15,6 +15,16 @@ from repro.configs.base import ImpalaConfig
 from repro.core import corrections, vtrace as vtrace_lib
 
 
+def resolve_vtrace_impl(impl: str = "auto") -> str:
+    """Map the ``auto`` V-trace implementation choice to a concrete one:
+    the fused Pallas kernel where it compiles for real (TPU), the
+    ``lax.scan`` path everywhere else. Explicit choices pass through, so
+    ablations and tests can still pin any implementation."""
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "scan"
+
+
 def reward_clip(rewards: jax.Array, mode: str) -> jax.Array:
     if mode == "abs_one":
         return jnp.clip(rewards, -1.0, 1.0)
@@ -54,7 +64,7 @@ def entropy_loss(logits):
 
 
 def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
-                impl: str = "scan") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                impl: str = "auto") -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """The full IMPALA learner loss on a batch of trajectories.
 
     batch: actions (B,T) int32, rewards (B,T) f32, discounts (B,T) f32,
@@ -64,6 +74,7 @@ def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
     as batch['bootstrap_value'] (B,), produced by evaluating the learner
     network on x_T (we evaluate on T+1 steps and split outside).
     """
+    impl = resolve_vtrace_impl(impl)
     rewards = reward_clip(batch["rewards"], cfg.reward_clip)
     vs, pg_adv = corrections.compute_correction(
         cfg, batch["behaviour_logprob"], target_logits, batch["actions"],

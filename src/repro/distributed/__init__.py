@@ -6,11 +6,17 @@ Decoupled acting and learning (paper §3) as a layered pipeline:
   transport   put/get/backpressure/counters behind one interface —
               in-process deque (zero-copy) or cross-process wire
               (serialized buffers, parent-side policy)
-  runner      the actor loop body, shared by thread and process workers
+  runner      the actor loop bodies (per-actor unroll, and the
+              inference-mode host env stepper), shared by thread and
+              process workers
+  inference   the dynamic-batching InferenceService: one jitted batched
+              per-step policy forward on the learner's device, fed by
+              thread clients or serde frames from actor processes
   pools       ActorPool (threads) / ProcessActorPool (spawned workers)
   paramstore  versioned publish/pull, plus a serialized subscribe path
               (encoded once per version) for process actors
-  runtime     the dynamic-batching learner loop over any of the above
+  runtime     the dynamic-batching, donating learner loop over any of
+              the above
 
 Exports resolve lazily (PEP 562): importing ``repro.distributed.serde``
 or ``.transport`` from an actor child process must not drag jax in.
@@ -25,11 +31,17 @@ _EXPORTS = {
     "decode_item": "repro.distributed.serde",
     "encode_tree": "repro.distributed.serde",
     "decode_tree": "repro.distributed.serde",
+    "decode_tree_into": "repro.distributed.serde",
     "tree_spec": "repro.distributed.serde",
     "ParameterStore": "repro.distributed.paramstore",
+    "ACTOR_MODES": "repro.distributed.runtime",
     "MultiTracker": "repro.distributed.runtime",
     "run_async_training": "repro.distributed.runtime",
     "run_actor_loop": "repro.distributed.runner",
+    "run_inference_actor_loop": "repro.distributed.runner",
+    "InferenceService": "repro.distributed.inference",
+    "InferenceClient": "repro.distributed.inference",
+    "InferenceReply": "repro.distributed.inference",
     "POLICIES": "repro.distributed.tqueue",
     "TrajectoryQueue": "repro.distributed.tqueue",
     "TRANSPORTS": "repro.distributed.transport",
@@ -57,13 +69,19 @@ def __dir__():
 
 if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
     from repro.distributed.actor_pool import ActorPool
+    from repro.distributed.inference import (InferenceClient,
+                                             InferenceReply,
+                                             InferenceService)
     from repro.distributed.paramstore import ParameterStore
     from repro.distributed.procpool import ProcessActorPool
-    from repro.distributed.runner import run_actor_loop
-    from repro.distributed.runtime import MultiTracker, run_async_training
+    from repro.distributed.runner import (run_actor_loop,
+                                          run_inference_actor_loop)
+    from repro.distributed.runtime import (ACTOR_MODES, MultiTracker,
+                                           run_async_training)
     from repro.distributed.serde import (TrajectoryItem, decode_item,
-                                         decode_tree, encode_item,
-                                         encode_tree, tree_spec)
+                                         decode_tree, decode_tree_into,
+                                         encode_item, encode_tree,
+                                         tree_spec)
     from repro.distributed.tqueue import POLICIES, TrajectoryQueue
     from repro.distributed.transport import (TRANSPORTS, InprocTransport,
                                              ShmTransport, Transport,

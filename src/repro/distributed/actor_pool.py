@@ -25,7 +25,8 @@ from typing import Dict, List, Optional
 
 from repro.core import actor as actor_lib
 from repro.distributed.paramstore import ParameterStore
-from repro.distributed.runner import run_actor_loop
+from repro.distributed.runner import (run_actor_loop,
+                                      run_inference_driver_loop)
 from repro.distributed.serde import TrajectoryItem  # noqa: F401 (re-export)
 from repro.distributed.transport import Transport
 
@@ -90,7 +91,13 @@ class ActorPool(PoolAccounting):
     backend = "thread"
 
     def __init__(self, env, arch_cfg, icfg, num_envs: int, num_actors: int,
-                 store: ParameterStore, queue: Transport, seed: int = 0):
+                 store: ParameterStore, queue: Transport, seed: int = 0,
+                 service=None):
+        """``service`` (an ``InferenceService``) switches the pool to
+        inference mode: no per-actor policy or params — one *driver*
+        thread multiplexes all logical actors' host-side env stepping
+        against the shared batched forward (paper §3.1's dynamic
+        batching); see ``_run_driver``."""
         if num_actors < 1:
             raise ValueError("num_actors must be >= 1")
         self.env = env
@@ -98,13 +105,17 @@ class ActorPool(PoolAccounting):
         self.store = store
         self.queue = queue
         self.seed = seed
+        self.service = service
+        self._arch_cfg = arch_cfg
+        self._icfg = icfg
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._builders = []
-        for i in range(num_actors):
-            # per-actor closure => per-actor jit cache and env batch
-            self._builders.append(
-                actor_lib.build_actor(env, arch_cfg, icfg, num_envs))
+        if service is None:
+            for i in range(num_actors):
+                # per-actor closure => per-actor jit cache and env batch
+                self._builders.append(
+                    actor_lib.build_actor(env, arch_cfg, icfg, num_envs))
         self.errors: List[BaseException] = []
         self._init_accounting(num_actors, num_envs * icfg.unroll_length)
         # attribution hooks: evictions always come back through the
@@ -153,9 +164,35 @@ class ActorPool(PoolAccounting):
             self.errors.append(e)
             self.queue.close()
 
+    def _run_driver(self) -> None:
+        """Inference mode: ONE thread multiplexes every logical actor —
+        per-actor threads would only add GIL-serialized Event wake-ups
+        to a loop whose heavy lifting (the batched policy forward)
+        already happens in the shared service. Each logical actor keeps
+        its thread-layout identity: own env batch, own
+        fold_in(seed, actor_id) RNG stream, own trajectory stream."""
+        try:
+            run_inference_driver_loop(
+                actor_ids=list(range(self.num_actors)),
+                env=self.env, arch_cfg=self._arch_cfg, icfg=self._icfg,
+                num_envs=self.num_envs, seed=self.seed,
+                service=self.service,
+                emit=self._emit,
+                should_stop=self._stop.is_set,
+                on_unroll=self._note_frames)
+        except BaseException as e:  # surface in the learner thread
+            self.errors.append(e)
+            self.queue.close()
+
     # ------------------------------------------------------------------
 
     def start(self) -> None:
+        if self.service is not None:
+            t = threading.Thread(target=self._run_driver,
+                                 name="inference-driver", daemon=True)
+            self._threads.append(t)
+            t.start()
+            return
         for i in range(self.num_actors):
             t = threading.Thread(target=self._run, args=(i,),
                                  name=f"actor-{i}", daemon=True)

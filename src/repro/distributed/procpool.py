@@ -35,7 +35,8 @@ from typing import List
 
 from repro.distributed.actor_pool import PoolAccounting
 from repro.distributed.paramstore import ParameterStore
-from repro.distributed.runner import process_actor_main
+from repro.distributed.runner import (inference_actor_main,
+                                      process_actor_main)
 from repro.distributed.serde import TrajectoryItem
 from repro.distributed.transport import ShmTransport
 
@@ -45,7 +46,14 @@ class ProcessActorPool(PoolAccounting):
 
     def __init__(self, env_name: str, arch_cfg, icfg, num_envs: int,
                  num_actors: int, store: ParameterStore,
-                 transport: ShmTransport, seed: int = 0):
+                 transport: ShmTransport, seed: int = 0, service=None,
+                 infer_streams: int = 1):
+        """``service`` (an ``InferenceService``) switches the children to
+        inference mode: they hold no params and run no policy network —
+        observation requests go up the service's process frontend wire,
+        action replies come back over per-stream pipes
+        (``infer_streams`` pipelined env half-batches per child), and
+        the param pipe carries only error reports."""
         if num_actors < 1:
             raise ValueError("num_actors must be >= 1")
         if not isinstance(transport, ShmTransport):
@@ -70,6 +78,11 @@ class ProcessActorPool(PoolAccounting):
         self._init_accounting(num_actors, num_envs * icfg.unroll_length)
         self._arch_cfg = arch_cfg
         self._icfg = icfg
+        self.service = service
+        self.infer_streams = infer_streams
+        self._frontend = (service.process_frontend(
+            self._ctx, num_actors * infer_streams)
+            if service is not None else None)
         transport.on_item = self._note_arrival
         transport.on_reject = self._note_loss
         transport.on_drop = self._note_loss
@@ -121,23 +134,39 @@ class ProcessActorPool(PoolAccounting):
         for i in range(self.num_actors):
             parent_conn, child_conn = self._ctx.Pipe()
             self._conns.append(parent_conn)
-            p = self._ctx.Process(
-                target=process_actor_main,
-                args=(i, self.env_name, self._arch_cfg, self._icfg,
-                      self.num_envs, self.seed, self.queue.producer(),
-                      child_conn, self._stop),
-                name=f"actor-proc-{i}", daemon=True)
+            if self._frontend is not None:
+                clients = [self._frontend.register(
+                    i * self.infer_streams + s)
+                    for s in range(self.infer_streams)]
+                target, args = inference_actor_main, (
+                    i, self.env_name, self._arch_cfg, self._icfg,
+                    self.num_envs, self.seed, self.queue.producer(),
+                    clients, child_conn, self._stop)
+            else:
+                target, args = process_actor_main, (
+                    i, self.env_name, self._arch_cfg, self._icfg,
+                    self.num_envs, self.seed, self.queue.producer(),
+                    child_conn, self._stop)
+            p = self._ctx.Process(target=target, args=args,
+                                  name=f"actor-proc-{i}", daemon=True)
             self._procs.append(p)
             p.start()
             child_conn.close()              # parent keeps only its end
+            if self._frontend is not None:
+                for c in clients:
+                    c.close()               # ditto for reply recv-ends
+        if self._frontend is not None:
+            self._frontend.start()
         self._server.start()
 
     def stop(self) -> None:
         self._stop.set()
-        # keep the wire flowing (discarding) while children wind down,
+        # keep the wires flowing (discarding) while children wind down,
         # so their queue feeders can always flush and no child ever
         # hangs at exit mid-write into a full pipe
         self.queue.begin_shutdown()
+        if self._frontend is not None:
+            self._frontend.begin_shutdown()
 
     def join(self, timeout: float = 30.0) -> None:
         deadline = time.monotonic() + timeout
@@ -147,6 +176,8 @@ class ProcessActorPool(PoolAccounting):
             if p.is_alive():                # no orphans, ever
                 p.terminate()
                 p.join(timeout=5.0)
+        if self._frontend is not None:
+            self._frontend.close()          # children are gone: safe
         if self._server.is_alive():
             self._server.join(timeout=5.0)
         for conn in self._conns:

@@ -1,17 +1,28 @@
-"""The actor loop body, extracted so one implementation drives both
+"""The actor loop bodies, extracted so one implementation drives both
 thread workers (``ActorPool``) and process workers (``ProcessActorPool``).
 
-The loop is the paper's actor (§3): pull current params, run one jitted
-n-step unroll against a private env batch, stamp the trajectory with the
-parameter version it was acted with, hand it to the transport. What
-varies between backends is only *how* params arrive and *where* the
-trajectory goes:
+Two actor modes share this module:
+
+``run_actor_loop`` is the paper's self-contained actor (§3): pull
+current params, run one jitted n-step unroll against a private env
+batch, stamp the trajectory with the parameter version it was acted
+with, hand it to the transport. What varies between backends is only
+*how* params arrive and *where* the trajectory goes:
 
   threads     pull = ParameterStore.pull (shared memory, zero-copy);
               emit = Transport.put of the live pytree.
   processes   pull = request/reply over a pipe against the parent's
               param server (serde-encoded, cached per version);
               emit = serde-encode + wire put of the byte buffer.
+
+``run_inference_actor_loop`` is the dynamic-batching variant (§3.1):
+the actor holds **no parameters at all** — it steps its env batch on
+the host, submits each per-step observation batch to the shared
+``InferenceService`` (which batches across actors on the learner's
+device), and assembles the returned actions/log-probs/recurrent states
+into the same trajectory layout the unroll produces. Thread clients
+talk to the service in-process; process clients ship serde frames over
+a wire.
 
 Each worker derives its RNG stream from ``fold_in(seed, actor_id)`` —
 identical across backends, so a thread-backend run and a process-backend
@@ -21,7 +32,7 @@ from __future__ import annotations
 
 import time
 import traceback
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 PyTree = Any
 
@@ -64,6 +75,333 @@ def run_actor_loop(
         item = TrajectoryItem(traj, version, actor_id, time.monotonic())
         if not emit(item):
             break
+
+
+def assemble_inference_traj(steps: List[dict], boot: dict,
+                            init_lstm: Tuple[Any, Any], icfg) -> dict:
+    """Package one unroll's per-step records into the learner's
+    trajectory layout — the exact shape ``core.actor``'s ``_finalize``
+    produces (batch-major arrays, bootstrap step appended to the
+    observation-side keys, the unroll's *initial* LSTM state attached).
+    Shared by the thread-mode driver and the process actor loop so the
+    layout cannot drift between backends.
+
+    Leaves may be numpy or (possibly still-lazy) device arrays: host
+    stacking forces/views them — ~20x cheaper than the equivalent chain
+    of tiny XLA stack/concat dispatches, and on CPU the conversions are
+    views by the time the unroll ends. Every emitted leaf is numpy, so
+    learner-side stacking takes the staged-buffer path whichever
+    transport carries the item.
+
+    ``steps[t]`` keys: obs_image/last_action/last_reward/done_in (the
+    step's *inputs*), action/reward/done/behaviour_logprob (its
+    outputs). ``boot``: the post-final-step obs_image/last_action/
+    last_reward/done."""
+    import numpy as np
+
+    def col(k):
+        return np.stack([np.asarray(s[k]) for s in steps], axis=1)
+
+    def col_boot(k, final):
+        return np.concatenate([col(k), np.asarray(final)[:, None]],
+                              axis=1)
+
+    step_dones = col("done")
+    return {
+        "actions": col("action"),
+        "rewards": col("reward"),
+        "discounts": (icfg.discount *
+                      (1.0 - step_dones.astype(np.float32))
+                      ).astype(np.float32),
+        "behaviour_logprob": col("behaviour_logprob"),
+        "done": step_dones,
+        "obs_image": col_boot("obs_image", boot["obs_image"]),
+        "last_action": col_boot("last_action", boot["last_action"]),
+        "last_reward": col_boot("last_reward", boot["last_reward"]),
+        "done_in": col_boot("done_in", boot["done"]),
+        "lstm_state": (np.asarray(init_lstm[0]),
+                       np.asarray(init_lstm[1])),
+    }
+
+
+class _ActingState:
+    """Per logical-actor (or per pipeline-stream) carry for the
+    inference acting loops — everything the threaded layout would keep
+    on an actor thread's stack."""
+
+    __slots__ = ("uid", "client", "state", "obs_image", "last_action",
+                 "last_reward", "done", "h", "c", "key", "ukey",
+                 "steps", "version", "handle")
+
+
+def _make_inference_env_fns(env, n: int):
+    """The two jitted env drivers every inference acting loop shares."""
+    import jax
+
+    @jax.jit
+    def reset_batch(key):
+        keys = jax.random.split(key, n)
+        state = jax.vmap(env.reset)(keys)
+        return state, jax.vmap(env.observe)(state)
+
+    @jax.jit
+    def step_batch(state, action, key, t):
+        # fold the step index in here: deriving per-step keys outside
+        # would cost one extra device op on every step's critical path
+        keys = jax.random.split(jax.random.fold_in(key, t), n)
+        state, ts = jax.vmap(env.step)(state, action, keys)
+        # only what the service request / trajectory needs: XLA dead-
+        # code-eliminates the rest of the TimeStep (e.g. obs_token)
+        return state, (ts.obs_image, ts.reward, ts.done)
+
+    return reset_batch, step_batch
+
+
+def _init_acting_state(uid, base_key, reset_batch, arch_cfg, n: int,
+                       conv, client=None) -> _ActingState:
+    import jax
+    import numpy as np
+
+    from repro.models import lstm as lstm_lib
+
+    st = _ActingState()
+    st.uid = uid
+    st.client = client
+    st.state, ts = reset_batch(jax.random.fold_in(base_key, 1))
+    st.obs_image = conv(ts.obs_image)
+    st.last_action = np.zeros((n,), np.int32)
+    st.last_reward = np.zeros((n,), np.float32)
+    st.done = np.zeros((n,), bool)
+    st.h, st.c = (conv(x) for x in
+                  lstm_lib.lstm_zero_state(n, arch_cfg.lstm_width))
+    st.key = jax.random.fold_in(base_key, 2)
+    return st
+
+
+def _acting_request(st: _ActingState) -> dict:
+    return {"obs_image": st.obs_image, "last_action": st.last_action,
+            "last_reward": st.last_reward, "done": st.done,
+            "lstm_h": st.h, "lstm_c": st.c}
+
+
+def _acting_boot(st: _ActingState) -> dict:
+    return {"obs_image": st.obs_image, "last_action": st.last_action,
+            "last_reward": st.last_reward, "done": st.done}
+
+
+def _record_reply_and_step(st: _ActingState, reply, step_batch, t: int,
+                           conv) -> None:
+    """The shared per-step bookkeeping: stamp the first-step version,
+    advance the recurrent state from the reply, step the envs, record
+    the step, carry forward."""
+    import numpy as np
+
+    if st.version is None:
+        st.version = reply.param_version
+    action = conv(reply.action)
+    st.h = conv(reply.lstm_state[0])
+    st.c = conv(reply.lstm_state[1])
+    st.state, (obs_image, reward, step_done) = step_batch(
+        st.state, action, st.ukey, np.int32(t))
+    st.steps.append({
+        "obs_image": st.obs_image, "last_action": st.last_action,
+        "last_reward": st.last_reward, "done_in": st.done,
+        "action": action, "reward": conv(reward),
+        "done": conv(step_done),
+        "behaviour_logprob": conv(reply.logprob)})
+    st.obs_image = conv(obs_image)
+    st.last_action = action
+    st.last_reward = st.steps[-1]["reward"]
+    st.done = st.steps[-1]["done"]
+
+
+def run_inference_actor_loop(
+    *,
+    actor_id: int,
+    env,
+    arch_cfg,
+    icfg,
+    num_envs: int,
+    seed: int,
+    clients: List[Any],
+    emit: Callable[[Any], bool],
+    should_stop: Callable[[], bool],
+    on_unroll: Optional[Callable[[], None]] = None,
+) -> None:
+    """Drive one *inference-mode* actor: host-side env stepping against
+    the shared batched-inference service.
+
+    ``clients`` is one service client per **pipeline stream**: the env
+    batch is split evenly across them, and the streams are software-
+    pipelined — while one stream's inference request is in flight (in a
+    flush on the learner's device), the actor env-steps the other
+    stream. With a single client the loop degenerates to the plain
+    submit/step alternation. Each client must expose
+    ``submit_async(request) -> handle | None`` and
+    ``wait(handle) -> InferenceReply | None`` (None = service shut
+    down) plus ``pause``/``resume``.
+
+    The caller's ``emit`` should pause/resume the clients around *long*
+    blocks (transport backpressure): the service stops counting paused
+    clients towards its all-clients-ready flush rule, so a
+    learner-throttled actor never holds the others' batches hostage to
+    the flush deadline. Short gaps (trajectory assembly, ~0.5ms)
+    deliberately do NOT pause: fracturing the bucket costs more than
+    the others waiting out a sub-millisecond straggler.
+
+    The trajectory emitted recombines the streams along the batch axis
+    and is bit-compatible with the unroll actor's layout
+    (``assemble_inference_traj``). The item is stamped with the oldest
+    param version of the unroll's first step across streams, so
+    measured lag stays conservative. Per-step state is materialized
+    numpy — the requests cross a serde wire anyway.
+    """
+    import jax
+    import numpy as np
+
+    from repro.distributed.serde import TrajectoryItem
+
+    t_len = icfg.unroll_length
+    n_streams = len(clients)
+    if num_envs % n_streams:
+        raise ValueError(f"num_envs={num_envs} must divide evenly over "
+                         f"{n_streams} pipeline streams")
+    n_sub = num_envs // n_streams
+    base = jax.random.fold_in(jax.random.key(seed), actor_id)
+    conv = np.asarray
+    reset_batch, step_batch = _make_inference_env_fns(env, n_sub)
+
+    streams = [
+        _init_acting_state(s, jax.random.fold_in(base, s), reset_batch,
+                           arch_cfg, n_sub, conv, client=client)
+        for s, client in enumerate(clients)]
+
+    unroll_idx = 0
+    while not should_stop():
+        unroll_idx += 1
+        init_lstm = [(st.h, st.c) for st in streams]
+        for st in streams:
+            st.steps = []
+            st.version = None
+            st.ukey = jax.random.fold_in(st.key, unroll_idx)
+            if n_streams > 1:
+                st.handle = st.client.submit_async(_acting_request(st))
+        for t in range(t_len):
+            for st in streams:
+                if n_streams > 1:
+                    # while this wait blocks, the other streams'
+                    # requests are pending service-side and our env
+                    # step below overlaps their flush
+                    reply = st.client.wait(st.handle)
+                else:
+                    # single stream: the blocking path keeps
+                    # leader-executed flushes (no service-thread wake
+                    # on the critical path)
+                    reply = st.client.infer(_acting_request(st))
+                if reply is None:
+                    return              # service shut down mid-unroll
+                _record_reply_and_step(st, reply, step_batch, t, conv)
+                if n_streams > 1 and t + 1 < t_len:
+                    st.handle = st.client.submit_async(_acting_request(st))
+
+        trajs = [assemble_inference_traj(st.steps, _acting_boot(st),
+                                         init_lstm[s], icfg)
+                 for s, st in enumerate(streams)]
+        traj = (trajs[0] if n_streams == 1 else
+                jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
+                             *trajs))
+        version = min(st.version for st in streams)
+        if on_unroll is not None:
+            on_unroll()
+        if not emit(TrajectoryItem(traj, version, actor_id,
+                                   time.monotonic())):
+            break
+
+
+def run_inference_driver_loop(
+    *,
+    actor_ids: List[int],
+    env,
+    arch_cfg,
+    icfg,
+    num_envs: int,
+    seed: int,
+    service,
+    emit: Callable[[int, Any], bool],
+    should_stop: Callable[[], bool],
+    on_unroll: Optional[Callable[[int], None]] = None,
+) -> None:
+    """Drive ALL thread-mode inference actors from one thread.
+
+    Under the GIL, per-actor threads buy an inference-mode actor
+    nothing: the service does the policy compute, env-step dispatches
+    are brief, and what remains is pure glue — which N threads only
+    serialize anyway, paying an Event wake-up per actor per step on the
+    critical path. This driver multiplexes the logical actors instead:
+    submit every actor's per-step request, execute the flush inline
+    (``service.drive_flushes``), dispatch every env step (lazily — the
+    results are only forced by the next flush or the unroll assembly),
+    repeat. A full acting cycle has zero cross-thread handoffs.
+
+    Each logical actor keeps exactly the identity it has under the
+    per-thread layout: its own env batch, its own
+    ``fold_in(seed, actor_id)`` RNG stream, its own trajectory stream
+    stamped with its ``actor_id``. Emits block on transport
+    backpressure, which stalls all acting — the same throttling the
+    thread-per-actor layout converges to, reached sooner.
+    """
+    import jax
+
+    from repro.distributed.serde import TrajectoryItem
+
+    t_len = icfg.unroll_length
+    reset_batch, step_batch = _make_inference_env_fns(env, num_envs)
+    # identity conv: env-step outputs stay lazy device values — the
+    # next flush (or the unroll assembly) forces them off this thread's
+    # critical path. Replies are already numpy (materialized once,
+    # service-side).
+    conv = (lambda x: x)
+
+    actors = [
+        _init_acting_state(
+            aid, jax.random.fold_in(jax.random.key(seed), aid),
+            reset_batch, arch_cfg, num_envs, conv)
+        for aid in actor_ids]
+
+    unroll_idx = 0
+    while not should_stop():
+        unroll_idx += 1
+        init_lstm = {a.uid: (a.h, a.c) for a in actors}
+        for a in actors:
+            a.steps = []
+            a.version = None
+            a.ukey = jax.random.fold_in(a.key, unroll_idx)
+        for t in range(t_len):
+            for a in actors:
+                a.handle = service.submit_async(_acting_request(a))
+                if a.handle is None:
+                    return                  # service shut down
+            service.drive_flushes()
+            for a in actors:
+                if not a.handle.event.is_set():     # frontend raced us
+                    reply = service.wait(a.handle)
+                else:
+                    reply = a.handle.slot[0]
+                if reply is None:
+                    return
+                _record_reply_and_step(a, reply, step_batch, t, conv)
+
+        for a in actors:
+            # env-step leaves recorded above may still be lazy device
+            # values: assemble_inference_traj forces them (free views
+            # by now — the flushes consumed their upstream chains)
+            traj = assemble_inference_traj(a.steps, _acting_boot(a),
+                                           init_lstm[a.uid], icfg)
+            if on_unroll is not None:
+                on_unroll(a.uid)
+            if not emit(a.uid, TrajectoryItem(traj, a.version, a.uid,
+                                              time.monotonic())):
+                return
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +472,15 @@ def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
             # decode+upload work; params are at most ``interval`` stale,
             # which is exactly the off-policy gap V-trace corrects
             interval = 0.1
+            # steady state decodes into one reused host mirror instead
+            # of allocating a fresh params-sized tree per pull; the
+            # first pull — or a structure change — takes the allocating
+            # path. The device upload MUST be jnp.array (guaranteed
+            # copy): jnp.asarray zero-copy *aliases* 64-byte-aligned
+            # host buffers on the CPU backend (measured), and an
+            # aliased param leaf would be torn by the next publish's
+            # decode while the unroll reads it
+            mirror = None
             while not stop_event.is_set():
                 try:
                     param_conn.send(("pull", actor_id, cache["version"]))
@@ -146,8 +493,14 @@ def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
                     break
                 if msg[0] == "params":
                     _, version, buf = msg
-                    tree, _ = serde.decode_tree(buf, copy=True)
-                    params = jax.tree.map(jax.numpy.asarray, tree)
+                    if mirror is not None:
+                        try:
+                            serde.decode_tree_into(buf, mirror)
+                        except serde.SerdeError:
+                            mirror = None
+                    if mirror is None:
+                        mirror, _ = serde.decode_tree(buf, copy=True)
+                    params = jax.tree.map(jax.numpy.array, mirror)
                     with cache_lock:
                         cache["params"] = params
                         cache["version"] = version
@@ -219,5 +572,97 @@ def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
     finally:
         try:
             param_conn.close()
+        except OSError:
+            pass
+
+
+def inference_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
+                         num_envs: int, seed: int, producer,
+                         infer_clients, ctrl_conn, stop_event) -> None:
+    """Entry point of one *inference-mode* actor process: no parameters,
+    no policy network — just env stepping plus serde frames both ways
+    (observation requests up the shared wire, action replies back down
+    per-stream private pipes, finished trajectories through the
+    transport wire). ``infer_clients`` is one ``PipeInferenceClient``
+    per pipeline stream.
+
+    ``ctrl_conn`` is the control pipe to the parent's server thread,
+    used only for error reports here (nothing to pull — the service owns
+    the params). The trajectory sender runs behind the same depth-1
+    outbox as the unroll worker, overlapping encode+put with the next
+    unroll's inference round-trips."""
+    import queue as stdlib_queue
+    import threading
+
+    try:
+        _tune_child_scheduling(actor_id)
+        from repro.data.envs import make_env
+        from repro.distributed import serde
+
+        for cl in infer_clients:
+            cl.bind_stop(stop_event)
+        env = make_env(env_name)
+        outbox: stdlib_queue.Queue = stdlib_queue.Queue(maxsize=1)
+
+        def send_loop():
+            while True:
+                try:
+                    item = outbox.get(timeout=0.1)
+                except stdlib_queue.Empty:
+                    if stop_event.is_set():
+                        return
+                    continue
+                if item is None:
+                    return
+                buf = serde.encode_item(item)   # leaves already numpy
+                while not stop_event.is_set():
+                    if producer.send(buf, timeout=0.1):
+                        break
+
+        def emit(item):
+            blocked = False
+            try:
+                while not stop_event.is_set():
+                    try:
+                        outbox.put(item, timeout=0.1)
+                        return True
+                    except stdlib_queue.Full:
+                        # wire backpressure reached us: drop out of the
+                        # service's ready rule while we wait
+                        if not blocked:
+                            blocked = True
+                            for cl in infer_clients:
+                                cl.pause()
+                        continue
+            finally:
+                if blocked:
+                    for cl in infer_clients:
+                        cl.resume()
+            return False
+
+        snd = threading.Thread(target=send_loop, daemon=True,
+                               name="traj-sender")
+        snd.start()
+        try:
+            run_inference_actor_loop(
+                actor_id=actor_id, env=env, arch_cfg=arch_cfg, icfg=icfg,
+                num_envs=num_envs, seed=seed, clients=infer_clients,
+                emit=emit, should_stop=stop_event.is_set)
+        finally:
+            try:
+                outbox.put_nowait(None)
+            except stdlib_queue.Full:
+                pass
+            snd.join(timeout=5.0)
+            for cl in infer_clients:
+                cl.close()
+    except BaseException:
+        try:
+            ctrl_conn.send(("error", actor_id, traceback.format_exc()))
+        except (EOFError, OSError, BrokenPipeError):
+            pass
+    finally:
+        try:
+            ctrl_conn.close()
         except OSError:
             pass

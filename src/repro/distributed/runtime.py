@@ -10,12 +10,38 @@ learner-side), amortising the update's fixed cost over more frames.
 Batch sizes are bucketed to powers of two so XLA compiles at most
 log2(max_batch_trajs)+1 variants of the train step.
 
+Actors come in two modes. ``unroll`` (default) gives every actor its
+own jitted n-step unroll with a private copy of the params. With
+``actor_mode='inference'`` the actors hold no params at all: they step
+envs on the host and submit per-step observation batches to one
+``InferenceService`` next to the learner — §3.1's dynamic-batched actor
+inference, one batched forward on the learner's device instead of N
+per-actor forwards.
+
+The learner hot path is tuned three ways:
+
+  donation    ``train_step`` is jitted with ``donate_argnums`` for
+              params and opt_state, so XLA updates both in place
+              instead of allocating fresh trees every update. Published
+              params are a jitted device copy (one params-sized alloc)
+              because live references escape to actors / the inference
+              service / the serializing param server — a donated buffer
+              must have exactly one owner.
+  staging     queued host trajectories are stacked into per-bucket
+              preallocated, ping-ponged staging buffers and moved with
+              one ``device_put`` (no ``np.concatenate`` allocs on the
+              consume path).
+  kernels     the V-trace implementation resolves 'auto': the fused
+              Pallas kernel compiled for real on TPU, scan elsewhere.
+
 Parameters flow learner -> ``ParameterStore`` -> actors; each trajectory
 comes back stamped with the parameter version it was acted with, so the
 per-trajectory policy lag the learner observes is a **measured** quantity
 (`lag = version_now - version_acted`), not a scripted one. The telemetry
 snapshot reports the lag histogram alongside actor FPS, learner
-updates/sec, queue occupancy, and drop/stall counters.
+updates/sec, queue occupancy, drop/stall counters, and (in inference
+mode) the service's batch-size histogram, flush reasons, and queue-wait
+quantiles.
 """
 from __future__ import annotations
 
@@ -39,6 +65,8 @@ from repro.models import backbone as bb
 from repro.models import common as pcommon
 
 PyTree = Any
+
+ACTOR_MODES = ("unroll", "inference")
 
 
 class MultiTracker:
@@ -75,14 +103,142 @@ def _buckets(max_batch_trajs: int) -> List[int]:
     return out[::-1]
 
 
-def _stack(items: List[TrajectoryItem]) -> PyTree:
+def _collect_batch(queue, buckets: List[int], first: TrajectoryItem,
+                   linger_s: float = 0.0) -> List[TrajectoryItem]:
+    """Starting from ``first`` (already popped), drain the queue up to
+    the largest bucket, then trim to the largest power-of-two that
+    fits — requeueing the overflow *at the front, newest first*, so the
+    queue keeps oldest-first order and the next batch starts with the
+    trajectories this one could not stack.
+
+    ``linger_s`` is the learner-side flush deadline (the mirror of the
+    inference service's): rather than greedily training on whatever is
+    queued, wait up to this long for the bucket to fill. A starved
+    learner taking singleton batches pays the update's fixed cost per
+    trajectory — and on a shared host, those extra updates steal the
+    very cores the actors need to refill the queue. The deadline bounds
+    the staleness this adds; a full bucket never waits."""
+    items = [first]
+    deadline = (time.monotonic() + linger_s) if linger_s > 0 else None
+    while len(items) < buckets[0]:
+        nxt = queue.get_nowait()
+        if nxt is None:
+            if deadline is None:
+                break
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            nxt = queue.get(timeout=remaining)
+            if nxt is None:
+                break
+        items.append(nxt)
+    k = next(b for b in buckets if b <= len(items))
+    for extra in reversed(items[k:]):
+        queue.requeue_front(extra)
+    return items[:k]
+
+
+def _device_put_copies() -> bool:
+    """Probe whether ``jax.device_put`` of a host buffer COPIES on this
+    backend. The CPU backend zero-copy *aliases* 64-byte-aligned numpy
+    buffers (measured on jax 0.4.37, ~half of all allocations): the
+    returned "device" array IS the host memory, so a staging buffer
+    that produced one can never be rewritten while any consumer might
+    still read the batch. Probed on a deterministically 64-aligned
+    view so the answer doesn't depend on allocator luck."""
+    raw = np.zeros(1024 + 16, np.float32)
+    off = (-raw.ctypes.data) % 64 // raw.itemsize
+    aligned = raw[off:off + 1024]
+    dev = jax.device_put(aligned)
+    jax.block_until_ready(dev)
+    aligned[0] = 1.0
+    return float(np.asarray(dev)[0]) == 0.0
+
+
+class _HostStager:
+    """Per-(bucket, structure) host staging buffers for the learner's
+    consume path.
+
+    Serialized transports deliver numpy (often read-only view) leaves;
+    stacking ``k`` trajectories with ``np.concatenate`` allocates one
+    intermediate per leaf per update. Instead each leaf is written in
+    place into a staging buffer and the whole tree moves with one
+    ``device_put``. Buffer lifetime depends on what ``device_put``
+    does, probed once:
+
+      copies (accelerators)   two preallocated sets per bucket,
+          **ping-ponged**, and before a set is *re*-written the batch
+          it produced two updates ago is ``block_until_ready``-ed — the
+          ping-pong alone only pipelines the async H2D transfer, it is
+          not a completion guarantee (by reuse time the transfer has
+          long finished, so the block is effectively free).
+      aliases (CPU backend)   the "transfer" is free but the batch IS
+          the staging memory, with no event to wait on for its
+          consumers — so buffers are freshly allocated per stack and
+          never reused (same copy count as the concatenate path, still
+          a single device_put for the whole tree).
+    """
+
+    def __init__(self):
+        self._slots: Dict[Any, list] = {}
+        self._reuse = _device_put_copies()
+
+    def stack(self, items: List[TrajectoryItem]) -> Optional[PyTree]:
+        """Staged stack of >=2 same-shaped numpy trajectories; None if
+        the items are not uniform host trees (caller falls back)."""
+        datas = [it.data for it in items]
+        leaves0, treedef = jax.tree.flatten(datas[0])
+        if not all(isinstance(x, np.ndarray) for x in leaves0):
+            return None
+        shapes = tuple((x.shape, x.dtype.name) for x in leaves0)
+        for d in datas[1:]:
+            ls, td = jax.tree.flatten(d)
+            if td != treedef or \
+                    tuple((x.shape, x.dtype.name) for x in ls) != shapes:
+                return None                 # ragged: not the hot path
+        k = len(items)
+
+        def alloc():
+            return [np.empty((x.shape[0] * k,) + x.shape[1:], x.dtype)
+                    for x in leaves0]
+
+        if self._reuse:
+            key = (k, treedef, shapes)
+            slot = self._slots.get(key)
+            if slot is None:
+                # [two buffer sets, next index, last batch per set]
+                slot = self._slots[key] = [(alloc(), alloc()), 0,
+                                           [None, None]]
+            idx = slot[1]
+            bufs = slot[0][idx]
+            slot[1] ^= 1
+            if slot[2][idx] is not None:
+                jax.block_until_ready(slot[2][idx])
+        else:
+            bufs = alloc()
+        for i, d in enumerate(datas):
+            for buf, leaf in zip(bufs, jax.tree.leaves(d)):
+                b = leaf.shape[0]
+                buf[i * b:(i + 1) * b] = leaf
+        out = jax.device_put(jax.tree.unflatten(treedef, bufs))
+        if self._reuse:
+            slot[2][idx] = out
+        return out
+
+
+def _stack(items: List[TrajectoryItem],
+           stager: Optional[_HostStager] = None) -> PyTree:
     if len(items) == 1:
         return items[0].data
 
+    if stager is not None:
+        staged = stager.stack(items)
+        if staged is not None:
+            return staged
+
     def cat(*xs):
-        # serialized transports deliver numpy views: concatenate on the
-        # host (one copy, feeding the jit's host->device transfer)
-        # instead of converting every leaf to a device array first
+        # fallback: host concatenate for numpy leaves (one copy, feeding
+        # the jit's host->device transfer), device concatenate otherwise
         if isinstance(xs[0], np.ndarray):
             return np.concatenate(xs, axis=0)
         return jnp.concatenate(xs, axis=0)
@@ -98,15 +254,21 @@ def run_async_training(
     *,
     num_actors: int = 2,
     actor_backend: str = "thread",
+    actor_mode: str = "unroll",
     transport: str = "inproc",
     queue_capacity: int = 8,
     queue_policy: str = "block",
     max_batch_trajs: int = 4,
+    batch_linger_s: float = 0.0,
     seed: int = 0,
     arch: Optional[ArchConfig] = None,
     warm_buckets: bool = False,
     initial_params: Optional[PyTree] = None,
     start_step: int = 0,
+    donate: bool = True,
+    infer_flush_timeout_s: float = 0.02,
+    infer_max_batch_requests: Optional[int] = None,
+    infer_streams: int = 1,
     on_update: Optional[Callable[[int, PyTree, Dict, Dict], None]] = None,
 ) -> Tuple[MultiTracker, Dict, Dict]:
     """Train until ``steps`` total learner updates with real async acting.
@@ -121,6 +283,31 @@ def run_async_training(
     every byte of the serialization boundary without paying process
     startup, which is exactly what the transport tests exploit.
 
+    ``actor_mode='inference'`` replaces the per-actor jitted unrolls
+    with one ``InferenceService`` on the learner's device (conv-LSTM
+    agents only): actors become host-side env steppers, observation
+    batches are dynamically batched across actors into power-of-two
+    buckets with a ``infer_flush_timeout_s`` flush deadline, and the
+    telemetry grows an ``inference`` section. Works over both backends:
+    thread clients submit in-process, process clients ship serde frames.
+    ``infer_streams`` (process backend only; thread acting is
+    multiplexed by one driver thread) splits each actor process's env
+    batch into that many software-pipelined service streams, so one
+    stream's env stepping overlaps the other's in-flight flush; it
+    falls back to 1 when ``num_envs`` doesn't divide evenly. Worth it
+    only where per-call dispatch is cheap relative to the forward
+    (accelerators) — halving the request granularity doubles the
+    per-frame dispatch count, which is the binding constraint on small
+    CPU hosts (default 1).
+
+    ``donate=True`` (default) jits the train step with
+    ``donate_argnums`` for params and opt_state — in-place updates, no
+    fresh trees per update. The params the store publishes (and hands to
+    ``on_update``) are a jitted device *copy*, so everything outside the
+    learner loop keeps working on buffers the learner will never donate.
+    Consequently ``initial_params`` is consumed: the caller's tree is
+    donated at the first update and must not be reused afterwards.
+
     ``initial_params`` + ``start_step`` resume from a checkpoint: the
     update counter (and the parameter-store version) continues from
     ``start_step``, so lr schedules and checkpoint numbering line up with
@@ -128,9 +315,17 @@ def run_async_training(
 
     Returns (tracker, last-update metrics, telemetry). ``on_update`` (if
     given) is called after every learner update with
-    ``(update_index, params, metrics, snapshot_fn)`` where ``snapshot_fn``
-    is a zero-arg callable producing the telemetry dict on demand — the
-    hook for logging and checkpointing without re-implementing the loop.
+    ``(update_index, params, metrics, snapshot_fn)`` where ``params`` is
+    the published (holdable) snapshot and ``snapshot_fn`` is a zero-arg
+    callable producing the telemetry dict on demand — the hook for
+    logging and checkpointing without re-implementing the loop.
+
+    ``batch_linger_s`` is the learner's flush deadline: wait up to this
+    long for the dynamic batch to fill its largest bucket before
+    training on a partial one. Default 0 (greedy take-what's-queued) —
+    on a core-starved host the learner's idle wait helps acting but the
+    added latency cancels the gain; on many-core hosts a small linger
+    trades a bounded staleness increase for fewer, fuller updates.
 
     ``warm_buckets=True`` pre-compiles the train step for every batch
     bucket before the timed region, so benchmarks measure steady-state
@@ -145,6 +340,9 @@ def run_async_training(
     if actor_backend not in ("thread", "process"):
         raise ValueError(f"actor_backend must be 'thread' or 'process', "
                          f"got {actor_backend!r}")
+    if actor_mode not in ACTOR_MODES:
+        raise ValueError(f"actor_mode must be one of {ACTOR_MODES}, got "
+                         f"{actor_mode!r}")
     if actor_backend == "process" and transport != "shm":
         raise ValueError("process actors cannot share live pytrees; use "
                          "transport='shm'")
@@ -159,21 +357,52 @@ def run_async_training(
         params = pcommon.init_params(specs, jax.random.key(seed))
     train_step, opt = learner_lib.build_train_step(arch, icfg,
                                                    env.num_actions)
-    train_step = jax.jit(train_step)
+    if donate:
+        train_step = jax.jit(train_step, donate_argnums=(0, 1))
+    else:
+        train_step = jax.jit(train_step)
+    # one jitted whole-tree device copy: the decoupling between the
+    # learner's donated working tree and every reference that escapes
+    # (store, service, on_update). XLA never aliases non-donated outputs
+    # to inputs, so the copy's buffers are independent by construction.
+    _snapshot = jax.jit(lambda tree: jax.tree.map(jnp.copy, tree))
     opt_state = opt.init(params)
 
-    store = ParameterStore(params, version=start_step)
+    store = ParameterStore(_snapshot(params) if donate else params,
+                           version=start_step)
+    service = None
+    if actor_mode == "inference":
+        from repro.distributed.inference import InferenceService, \
+            _pow2_floor
+        if infer_streams < 1 or num_envs % infer_streams:
+            infer_streams = 1       # pipelining needs an even env split
+        service = InferenceService(
+            env, arch, icfg, store,
+            num_clients=num_actors * infer_streams,
+            flush_timeout_s=infer_flush_timeout_s,
+            # bucket = one request per *actor*: with pipelined streams
+            # this leaves the other stream-group pending, so its flush
+            # overlaps the actors' env stepping instead of merging into
+            # one monolithic phase
+            max_batch_requests=(infer_max_batch_requests or
+                                _pow2_floor(num_actors)),
+            seed=seed)
     queue = make_transport(transport, queue_capacity, queue_policy)
     if actor_backend == "process":
         from repro.distributed.procpool import ProcessActorPool
         pool = ProcessActorPool(
             env_name if isinstance(env_name, str) else env.name,
-            arch, icfg, num_envs, num_actors, store, queue, seed=seed)
+            arch, icfg, num_envs, num_actors, store, queue, seed=seed,
+            service=service, infer_streams=infer_streams)
     else:
+        # thread backend: inference acting is multiplexed by one driver
+        # thread (see ActorPool._run_driver), so stream pipelining does
+        # not apply
         pool = ActorPool(env, arch, icfg, num_envs, num_actors, store,
-                         queue, seed=seed)
+                         queue, seed=seed, service=service)
     tracker = MultiTracker(num_actors, num_envs)
     buckets = _buckets(max_batch_trajs)
+    stager = _HostStager()
     frames_per_traj = num_envs * icfg.unroll_length
 
     lag_hist: collections.Counter = collections.Counter()
@@ -203,7 +432,7 @@ def run_async_training(
         else:
             dt, u0, f0 = 0.0, 0, 0
         n_lags = sum(lag_hist.values())
-        return {
+        snap = {
             "learner_updates": updates,
             "frames_consumed": frames_consumed,
             "updates_per_sec": ((updates - u0) / dt if dt > 0 else 0.0),
@@ -220,46 +449,53 @@ def run_async_training(
             "queue": queue.snapshot(),
             "actors": pool.stats(),
             "param_version": store.version,
+            "actor_mode": actor_mode,
+            "donate": donate,
         }
+        if service is not None:
+            snap["inference"] = service.snapshot()
+        return snap
 
+    if service is not None:
+        service.start()
     pool.start()
     try:
         if warm_buckets:
             first = None
             while first is None:
                 pool.raise_errors()
+                if service is not None:
+                    service.raise_errors()
                 first = queue.get(timeout=0.5)
             for b in buckets:
                 warm = _stack([first] * b) if b > 1 else first.data
-                out = train_step(params, opt_state, jnp.int32(0), warm)
+                # warm on throwaway copies: with donation the warm call
+                # would otherwise consume the real params/opt_state
+                out = train_step(_snapshot(params), _snapshot(opt_state),
+                                 jnp.int32(0), warm)
                 jax.block_until_ready(out[0])   # compile only; discard
             queue.requeue_front(first)
 
         while updates < steps:
             pool.raise_errors()
+            if service is not None:
+                service.raise_errors()
             item = queue.get(timeout=0.5)
             if item is None:
                 continue
-            items = [item]
-            while len(items) < buckets[0]:
-                nxt = queue.get_nowait()
-                if nxt is None:
-                    break
-                items.append(nxt)
-            k = next(b for b in buckets if b <= len(items))
-            for extra in reversed(items[k:]):
-                queue.requeue_front(extra)      # oldest-first order kept
-            items = items[:k]
+            items = _collect_batch(queue, buckets, item, batch_linger_s)
+            k = len(items)
 
             version_now = store.version
             for it in items:
                 lag_hist[version_now - it.param_version] += 1
                 tracker.update(it.actor_id, it.data["rewards"],
                                it.data["done"])
-            batch = _stack(items)
+            batch = _stack(items, stager)
             params, opt_state, metrics = train_step(
                 params, opt_state, jnp.int32(updates), batch)
-            store.publish(params)
+            published = _snapshot(params) if donate else params
+            store.publish(published)
             updates += 1
             frames_consumed += k * frames_per_traj
             batch_hist[k] += 1
@@ -276,18 +512,23 @@ def run_async_training(
                     steady_updates0 = updates
                     steady_frames0 = frames_consumed
             if on_update is not None:
-                on_update(updates, params, metrics, telemetry_snapshot)
+                on_update(updates, published, metrics, telemetry_snapshot)
         # snapshot before teardown: pool.join waits out in-flight unrolls
         # and put timeouts, which would silently pad the steady-state dt
         jax.block_until_ready(params)
         final_telemetry = telemetry_snapshot()
     finally:
         # order matters: signal stop (a serializing transport flips to
-        # discard mode so producer processes can always flush and exit),
-        # join the workers, and only then tear the transport down — a
-        # wire closed under a live producer can tear frames
+        # discard mode so producer processes can always flush and exit;
+        # the inference service wakes every blocked client with a None
+        # reply), join the workers, and only then tear the transport
+        # down — a wire closed under a live producer can tear frames
         pool.stop()
+        if service is not None:
+            service.stop()
         pool.join()
         queue.close()
     pool.raise_errors()
+    if service is not None:
+        service.raise_errors()
     return tracker, metrics, final_telemetry

@@ -173,6 +173,70 @@ def decode_tree(buf: bytes, copy: bool = False
     return tree, header.get("meta", {})
 
 
+def _fill_node(node: Dict[str, Any], payload: memoryview, dst: PyTree,
+               path: str) -> None:
+    t = node["t"]
+    if t == "none":
+        if dst is not None:
+            raise SerdeError(f"structure mismatch at {path}: buffer has "
+                             f"None, destination has {type(dst).__name__}")
+        return
+    if t == "dict":
+        if not isinstance(dst, dict) or list(dst) != node["keys"]:
+            raise SerdeError(f"structure mismatch at {path}: dict keys "
+                             f"differ")
+        for k, c in zip(node["keys"], node["children"]):
+            _fill_node(c, payload, dst[k], f"{path}/{k}")
+        return
+    if t in ("list", "tuple"):
+        if not isinstance(dst, (list, tuple)) or \
+                len(dst) != len(node["children"]):
+            raise SerdeError(f"structure mismatch at {path}: sequence "
+                             f"arity differs")
+        for i, c in enumerate(node["children"]):
+            _fill_node(c, payload, dst[i], f"{path}[{i}]")
+        return
+    if t == "a":
+        dtype = _DTYPES.get(node["dtype"])
+        if dtype is None:
+            raise SerdeError(f"unknown dtype in spec: {node['dtype']!r}")
+        if not isinstance(dst, np.ndarray) or dst.dtype != dtype or \
+                list(dst.shape) != node["shape"]:
+            raise SerdeError(f"leaf mismatch at {path}: buffer is "
+                             f"{node['dtype']}{node['shape']}, destination "
+                             f"is {getattr(dst, 'dtype', None)}"
+                             f"{list(getattr(dst, 'shape', ()))}")
+        off, n = node["off"], node["n"]
+        src = np.frombuffer(payload[off:off + n],
+                            dtype=dtype).reshape(node["shape"])
+        np.copyto(dst, src)
+        return
+    raise SerdeError(f"unknown spec node type {t!r}")
+
+
+def decode_tree_into(buf: bytes, dst: PyTree) -> Dict[str, Any]:
+    """Decode ``buf`` *into* an existing tree of writable numpy leaves.
+
+    The steady-state receive path for repeated same-shaped payloads
+    (e.g. a parameter subscriber decoding every published version):
+    instead of allocating a fresh tree per message (``decode_tree(buf,
+    copy=True)``), the payload bytes are copied straight into ``dst``'s
+    preallocated leaves. Structure, dtypes, and shapes must match the
+    buffer's spec exactly — a mismatch raises ``SerdeError`` with the
+    offending path, and the caller falls back to a fresh decode.
+    Returns the header meta."""
+    if len(buf) < _HDR.size:
+        raise SerdeError(f"buffer too short ({len(buf)} bytes)")
+    magic, hlen = _HDR.unpack_from(buf)
+    if magic != MAGIC:
+        raise SerdeError(f"bad magic {magic!r} (expected {MAGIC!r})")
+    start = _HDR.size
+    header = json.loads(bytes(buf[start:start + hlen]).decode("utf-8"))
+    payload = memoryview(buf)[start + hlen:]
+    _fill_node(header["tree"], payload, dst, "$")
+    return header.get("meta", {})
+
+
 # ---------------------------------------------------------------------------
 # TrajectoryItem convenience layer
 

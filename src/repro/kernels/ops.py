@@ -23,6 +23,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _interpret() -> bool:
+    # one resolution for every kernel: REPRO_PALLAS_INTERPRET override,
+    # else compiled on TPU / interpreted elsewhere
+    return vtrace_k.resolve_interpret(None)
+
+
 def _resolve(impl: str) -> str:
     if impl == "auto":
         return "pallas" if _on_tpu() else "ref"
@@ -50,7 +56,9 @@ def vtrace(log_rhos, discounts, rewards, values, bootstrap_value,
     if impl_r == "ref":
         vs, pg = ref.vtrace_ref(*args)
     else:
-        vs, pg = vtrace_k.vtrace_pallas(*args, interpret=not _on_tpu())
+        # interpret resolution (env override > backend detect) lives in
+        # the kernel, so a TPU run compiles for real by default
+        vs, pg = vtrace_k.vtrace_pallas(*args)
     return vs.T, pg.T
 
 
@@ -63,7 +71,7 @@ def linear_scan(a, b, h0=None, impl: str = "auto") -> jax.Array:
     if impl_r == "ref":
         return ref.linear_scan_ref(a, b, h0)
     return linear_scan_k.linear_scan_pallas(a, b, h0,
-                                            interpret=not _on_tpu())
+                                            interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "causal", "window"))
@@ -75,7 +83,7 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
         return ref.flash_attention_ref(q, k, v, causal, window)
     return flash_k.flash_attention_pallas(q, k, v, causal=causal,
                                           window=window,
-                                          interpret=not _on_tpu())
+                                          interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
@@ -85,4 +93,4 @@ def decode_attention(q, k, v, bias, impl: str = "auto") -> jax.Array:
     if impl_r == "ref":
         return ref.decode_attention_ref(q, k, v, bias)
     return decode_k.decode_attention_pallas(q, k, v, bias,
-                                            interpret=not _on_tpu())
+                                            interpret=_interpret())

@@ -14,6 +14,8 @@ targets v_s and the policy-gradient advantages.
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +24,26 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_T_CHUNK = 256
 DEFAULT_B_BLOCK = 128
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Decide whether a Pallas kernel runs interpreted or compiled.
+
+    Resolution order: explicit caller argument (``True``/``False``) >
+    ``REPRO_PALLAS_INTERPRET`` env override ("1"/"0") > backend
+    auto-detect — the real kernel on TPU, the interpreter everywhere
+    else (CPU has no Mosaic lowering). The env override exists so a TPU
+    run can be flipped to interpret mode for debugging (and a test rig
+    can pin either mode) without touching call sites.
+    """
+    if interpret is not None:
+        return bool(interpret)
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None and env != "":
+        return env != "0"
+    return jax.default_backend() != "tpu"
 
 
 def _vtrace_kernel(rho_ref, c_ref, disc_ref, rew_ref, v_ref, vtp1_ref,
@@ -52,8 +74,13 @@ def _vtrace_kernel(rho_ref, c_ref, disc_ref, rew_ref, v_ref, vtp1_ref,
 def vtrace_pallas(rho, c, discounts, rewards, values, values_tp1,
                   t_chunk: int = DEFAULT_T_CHUNK,
                   b_block: int = DEFAULT_B_BLOCK,
-                  interpret: bool = True):
-    """All inputs (T, B) float32. Returns (vs, pg_adv), each (T, B)."""
+                  interpret: Optional[bool] = None):
+    """All inputs (T, B) float32. Returns (vs, pg_adv), each (T, B).
+
+    ``interpret=None`` (the default) auto-detects: compiled kernel on
+    TPU, interpreter fallback elsewhere; see ``resolve_interpret``.
+    """
+    interpret = resolve_interpret(interpret)
     t, b = rho.shape
     t_chunk = min(t_chunk, t)
     b_block = min(b_block, b)

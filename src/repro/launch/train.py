@@ -65,6 +65,22 @@ def main() -> int:
                    help="where actors live: threads of this interpreter "
                         "(zero-copy) or spawned processes (serialized "
                         "trajectories, no GIL contention)")
+    p.add_argument("--actor-mode", default="unroll",
+                   choices=["unroll", "inference"],
+                   help="unroll: every actor runs its own jitted n-step "
+                        "unroll with a private params copy. inference: "
+                        "actors are host-side env steppers submitting to "
+                        "one dynamic-batching InferenceService on the "
+                        "learner's device (paper §3.1; conv-LSTM archs)")
+    p.add_argument("--infer-flush-ms", type=float, default=20.0,
+                   help="inference service flush deadline: a pending "
+                        "request is never delayed past this waiting for "
+                        "a fuller batch (actor_mode=inference)")
+    p.add_argument("--no-donate", action="store_true",
+                   help="disable donate_argnums on the async learner's "
+                        "train step (donation updates params/opt_state "
+                        "in place; published params become a device "
+                        "copy)")
     p.add_argument("--transport", default="",
                    choices=["", "inproc", "shm"],
                    help="trajectory transport; default inproc for thread "
@@ -189,9 +205,11 @@ def _run_async(args, env, arch, icfg) -> int:
     specs = bb.backbone_specs(arch, env.num_actions)
     print(f"arch={arch.name} params={common.param_count(specs):,} "
           f"env={env.name} actions={env.num_actions} runtime=async "
-          f"actors={args.actor_threads}({args.actor_backend}) "
-          f"transport={transport} queue={args.queue_capacity}/"
-          f"{args.queue_policy} max_batch_trajs={args.max_batch_trajs}")
+          f"actors={args.actor_threads}({args.actor_backend}/"
+          f"{args.actor_mode}) transport={transport} "
+          f"queue={args.queue_capacity}/{args.queue_policy} "
+          f"max_batch_trajs={args.max_batch_trajs} "
+          f"donate={not args.no_donate}")
     initial_params, start_step = None, 0
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         like = common.init_params(specs, jax.random.key(args.seed))
@@ -206,35 +224,46 @@ def _run_async(args, env, arch, icfg) -> int:
             tel = snapshot_fn()
             lag = tel["lag"]
             q = tel["queue"]
+            extra = ""
+            if "inference" in tel:
+                inf = tel["inference"]
+                extra = (f" infer(batch/wait_p95)="
+                         f"{inf['mean_batch']:.1f}/"
+                         f"{inf['queue_wait_ms_p95']:.1f}ms")
             print(f"update {step:6d} "
                   f"loss={float(metrics['loss/total']):10.2f} "
                   f"lag(mean/max)={lag['mean']:.2f}/{lag['max']} "
                   f"queue(occ/drop/stall)={q['mean_occupancy']:.1f}/"
                   f"{q['dropped']}/{q['put_stalls']} "
                   f"learner_fps={tel['frames_per_sec']:7.0f} "
-                  f"actor_fps={tel['actors']['actor_fps']:7.0f}")
+                  f"actor_fps={tel['actors']['actor_fps']:7.0f}" + extra)
         if args.ckpt_dir and step % args.ckpt_every == 0:
             ckpt.save(args.ckpt_dir, step, params)
 
+    env_arg = args.env if args.actor_backend == "process" else env
     tracker, metrics, tel = run_async_training(
-        env, icfg, args.num_envs, args.steps,
+        env_arg, icfg, args.num_envs, args.steps,
         num_actors=args.actor_threads,
         actor_backend=args.actor_backend,
+        actor_mode=args.actor_mode,
         transport=transport,
         queue_capacity=args.queue_capacity,
         queue_policy=args.queue_policy,
         max_batch_trajs=args.max_batch_trajs,
+        donate=not args.no_donate,
+        infer_flush_timeout_s=args.infer_flush_ms / 1e3,
         seed=args.seed, arch=arch, initial_params=initial_params,
         start_step=start_step, on_update=on_update)
     if args.ckpt_dir and last_params[0] is not None:
         ckpt.save(args.ckpt_dir, args.steps, last_params[0])
     print(f"final return(100) = {tracker.mean_return():.3f}")
-    print("telemetry:", json.dumps(
-        {k: tel[k] for k in ("learner_updates", "frames_consumed",
-                             "updates_per_sec", "frames_per_sec",
-                             "batch_size_hist", "lag", "queue",
-                             "actors", "param_version")},
-        default=float))
+    keys = ["learner_updates", "frames_consumed", "updates_per_sec",
+            "frames_per_sec", "batch_size_hist", "lag", "queue",
+            "actors", "param_version"]
+    if "inference" in tel:
+        keys.append("inference")
+    print("telemetry:", json.dumps({k: tel[k] for k in keys},
+                                   default=float))
     return 0
 
 

@@ -50,6 +50,33 @@ def test_vtrace_kernel_property(t, b, chunk, seed):
     np.testing.assert_allclose(pg_r, pg_k, atol=1e-4, rtol=1e-4)
 
 
+def test_vtrace_interpret_resolution(monkeypatch):
+    """Dispatch order: explicit arg > REPRO_PALLAS_INTERPRET env > backend
+    auto-detect (interpret everywhere but TPU)."""
+    from repro.kernels import vtrace as vk
+
+    monkeypatch.delenv(vk.INTERPRET_ENV, raising=False)
+    on_tpu = jax.default_backend() == "tpu"
+    assert vk.resolve_interpret(None) is (not on_tpu)
+    assert vk.resolve_interpret(True) is True
+    assert vk.resolve_interpret(False) is False
+    monkeypatch.setenv(vk.INTERPRET_ENV, "0")
+    assert vk.resolve_interpret(None) is False
+    monkeypatch.setenv(vk.INTERPRET_ENV, "1")
+    assert vk.resolve_interpret(None) is True
+    # explicit argument still beats the env override
+    assert vk.resolve_interpret(False) is False
+
+
+def test_losses_vtrace_impl_auto_resolution():
+    from repro.core.losses import resolve_vtrace_impl
+
+    expected = "pallas" if jax.default_backend() == "tpu" else "scan"
+    assert resolve_vtrace_impl("auto") == expected
+    for explicit in ("scan", "pallas", "reference"):
+        assert resolve_vtrace_impl(explicit) == explicit
+
+
 # ---------------------------------------------------------------------------
 # linear scan kernel
 

@@ -137,6 +137,47 @@ def test_decode_is_zero_copy_and_copy_flag_writable():
     assert owned["x"][0] == 99
 
 
+def test_decode_tree_into_reuses_buffers_and_matches_fresh_decode():
+    """The subscriber's steady-state path: repeated payloads land in the
+    same preallocated leaves (no per-pull tree alloc), bit-identical to
+    a fresh copying decode."""
+    rng = np.random.default_rng(0)
+    make = lambda: {  # noqa: E731
+        "w": rng.standard_normal((3, 4)).astype(np.float32),
+        "nest": {"b": rng.integers(0, 99, (5,)).astype(np.int64)},
+        "state": (rng.standard_normal(2).astype(ml_dtypes.bfloat16), None),
+    }
+    first = make()
+    dst, _ = serde.decode_tree(serde.encode_tree(first), copy=True)
+    leaves_before = [dst["w"], dst["nest"]["b"], dst["state"][0]]
+    for _ in range(3):
+        tree = make()
+        meta = serde.decode_tree_into(
+            serde.encode_tree(tree, meta={"v": 7}), dst)
+        assert meta == {"v": 7}
+        fresh, _ = serde.decode_tree(serde.encode_tree(tree))
+        _assert_same_tree(fresh, dst)
+        _assert_leaves_bitexact(fresh, dst)
+    # same ndarray objects throughout: filled in place, never replaced
+    assert dst["w"] is leaves_before[0]
+    assert dst["nest"]["b"] is leaves_before[1]
+    assert dst["state"][0] is leaves_before[2]
+
+
+def test_decode_tree_into_rejects_mismatches():
+    buf = serde.encode_tree({"w": np.zeros((2, 2), np.float32)})
+    with pytest.raises(serde.SerdeError, match="dict keys"):
+        serde.decode_tree_into(buf, {"v": np.zeros((2, 2), np.float32)})
+    with pytest.raises(serde.SerdeError, match="leaf mismatch"):
+        serde.decode_tree_into(buf, {"w": np.zeros((2, 3), np.float32)})
+    with pytest.raises(serde.SerdeError, match="leaf mismatch"):
+        serde.decode_tree_into(buf, {"w": np.zeros((2, 2), np.float64)})
+    with pytest.raises(serde.SerdeError, match="arity"):
+        serde.decode_tree_into(
+            serde.encode_tree({"s": (np.zeros(1, np.float32),)}),
+            {"s": (np.zeros(1, np.float32), np.zeros(1, np.float32))})
+
+
 def test_spec_describes_offsets_and_dtypes():
     tree = {"a": np.zeros((2, 2), np.float32),
             "b": np.zeros((3,), ml_dtypes.bfloat16)}
