@@ -17,6 +17,9 @@ Variants mirror Figure 2:
   impala_proc     actor *processes* over the serialized shm transport —
                   acting leaves the learner's interpreter entirely, the
                   trajectory pipeline crosses a real byte boundary
+  impala_socket   actor processes dialing the learner over TCP loopback
+                  (the cross-machine deployment shape, on one box):
+                  CRC-framed trajectories up, versioned params down
   impala_infserve       thread actors in *inference mode*: host-side env
                   stepping against the dynamic-batching
                   InferenceService (one batched policy forward on the
@@ -163,6 +166,12 @@ def run() -> None:
         emit(f"throughput/{env_name}/impala_proc",
              1e6 / max(fps["impala_proc"], 1e-9),
              f"fps={fps['impala_proc']:.0f}")
+        fps["impala_socket"] = _measure_async(
+            env_name, iters=async_iters, num_actors=async_actors,
+            actor_backend="remote", transport="socket")
+        emit(f"throughput/{env_name}/impala_socket",
+             1e6 / max(fps["impala_socket"], 1e-9),
+             f"fps={fps['impala_socket']:.0f}")
         fps["impala_infserve"] = _measure_async(
             env_name, iters=async_iters, num_actors=async_actors,
             actor_mode="inference")
@@ -182,6 +191,8 @@ def run() -> None:
              f"x{fps['impala_async'] / max(fps['a2c_sync_traj'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/proc_speedup_vs_async", 0.0,
              f"x{fps['impala_proc'] / max(fps['impala_async'], 1e-9):.2f}")
+        emit(f"throughput/{env_name}/socket_vs_proc", 0.0,
+             f"x{fps['impala_socket'] / max(fps['impala_proc'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/infserve_speedup_vs_async", 0.0,
              f"x{fps['impala_infserve'] / max(fps['impala_async'], 1e-9):.2f}")
     _write_json(fps_by_env)

@@ -2,10 +2,16 @@
 
 Decoupled acting and learning (paper §3) as a layered pipeline:
 
-  serde       TrajectoryItem <-> spec-described contiguous byte buffer
+  serde       TrajectoryItem <-> spec-described contiguous byte buffer,
+              plus the CRC-checked wire frame header TCP messages use
   transport   put/get/backpressure/counters behind one interface —
-              in-process deque (zero-copy) or cross-process wire
-              (serialized buffers, parent-side policy)
+              in-process deque (zero-copy), cross-process wire
+              (serialized buffers, parent-side policy), or TCP socket
+              (socket_transport: remote machines, reconnect, torn-frame
+              detection)
+  netserve    what a remote machine needs beyond the pipe: the CONFIG
+              handshake that ships the whole run config, the inference
+              service over sockets, and the remote actor entry point
   runner      the actor loop bodies (per-actor unroll, and the
               inference-mode host env stepper), shared by thread and
               process workers
@@ -49,6 +55,10 @@ _EXPORTS = {
     "InprocTransport": "repro.distributed.transport",
     "ShmTransport": "repro.distributed.transport",
     "make_transport": "repro.distributed.transport",
+    "SocketTransport": "repro.distributed.socket_transport",
+    "SocketActorClient": "repro.distributed.socket_transport",
+    "SocketActorPool": "repro.distributed.procpool",
+    "remote_actor_main": "repro.distributed.netserve",
 }
 
 __all__ = sorted(_EXPORTS)
@@ -69,6 +79,10 @@ def __dir__():
 
 if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
     from repro.distributed.actor_pool import ActorPool
+    from repro.distributed.netserve import remote_actor_main
+    from repro.distributed.procpool import SocketActorPool
+    from repro.distributed.socket_transport import (SocketActorClient,
+                                                    SocketTransport)
     from repro.distributed.inference import (InferenceClient,
                                              InferenceReply,
                                              InferenceService)

@@ -440,16 +440,25 @@ class InferenceService:
         with self._cond:
             self._paused = max(0, self._paused - 1)
 
+    def attach_frontend(self, fe, num_clients: int = 0) -> None:
+        """Register a frontend (process pipes, sockets, ...) with the
+        service: count its clients towards the ready rule and make sure
+        the background flusher runs — frontend submits have no waiting
+        thread in this process. The one place the frontend lifecycle
+        dance lives, whatever wire the frontend speaks."""
+        with self._lock:
+            self._clients += num_clients
+        self._frontends.append(fe)
+        self._loop_needed = True
+        if self._started and not self._thread.is_alive():
+            self._thread.start()
+
     def process_frontend(self, ctx, num_clients: int,
                          wire_capacity: Optional[int] = None
                          ) -> "ProcessFrontend":
         fe = ProcessFrontend(self, ctx, num_clients, wire_capacity)
-        self._frontends.append(fe)
-        # frontend submits have no waiting thread in this process:
-        # the background flusher must run
-        self._loop_needed = True
-        if self._started and not self._thread.is_alive():
-            self._thread.start()
+        # clients counted per register() call, not up front
+        self.attach_frontend(fe, num_clients=0)
         return fe
 
     # ------------------------------------------------------------------

@@ -1,6 +1,14 @@
-"""Actor *process* pool: spawn-based workers behind the same interface
+"""Actor *process* pools: spawn-based workers behind the same interface
 as ``ActorPool`` (paper §3's actors on separate interpreters — acting no
 longer competes with the learner for the GIL).
+
+Two pools live here. ``ProcessActorPool`` wires its children over
+multiprocessing primitives (shm transport + param/control pipes).
+``SocketActorPool`` wires them over TCP (``SocketTransport``): children
+— or entirely separate machines — dial the learner's listen address,
+receive the whole run config in the handshake, and run the *same* loop
+bodies; with ``spawn_local=False`` the pool spawns nothing and simply
+waits for remote actors to connect.
 
 Each worker process builds its own env batch, RNG stream, and jit cache
 from picklable ingredients (env *name*, config dataclasses, seed) — no
@@ -192,6 +200,119 @@ class ProcessActorPool(PoolAccounting):
         if not self._stop.is_set():
             # a child that crashed before it could report (import error,
             # OOM kill, ...) must not leave the learner polling forever
+            for p in self._procs:
+                if p.exitcode is not None and p.exitcode != 0:
+                    raise RuntimeError(
+                        f"actor process {p.name} exited with code "
+                        f"{p.exitcode} before reporting an error")
+
+
+class SocketActorPool(PoolAccounting):
+    """Remote actors over TCP behind the pool interface.
+
+    The pool owns no channels of its own — it *configures* the
+    ``SocketTransport`` it is given: the CONFIG-handshake payload (env
+    name, arch/impala config, seed, mode) so a connecting machine needs
+    nothing but the address, the param source
+    (``ParameterStore.pull_serialized``, encoded once per version for
+    all subscribers), the inference frontend when the run is in
+    inference mode, and the per-actor attribution hooks.
+
+    ``spawn_local=True`` (the default, and the benchmark / single-box
+    path) spawns ``num_actors`` loopback children running
+    ``netserve.remote_actor_child``; ``spawn_local=False`` is the real
+    deployment shape — the learner listens, and ``num_actors`` remote
+    machines run ``launch.train --connect host:port`` (or
+    ``examples/train_remote.py actor``) whenever they come up.
+    """
+
+    backend = "remote"
+
+    def __init__(self, env_name: str, arch_cfg, icfg, num_envs: int,
+                 num_actors: int, store: ParameterStore,
+                 transport, seed: int = 0, service=None,
+                 infer_streams: int = 1, spawn_local: bool = True):
+        from repro.distributed import netserve
+        from repro.distributed.socket_transport import SocketTransport
+
+        if num_actors < 1:
+            raise ValueError("num_actors must be >= 1")
+        if not isinstance(transport, SocketTransport):
+            raise ValueError("SocketActorPool requires a SocketTransport "
+                             "(--transport socket)")
+        if not isinstance(env_name, str):
+            raise ValueError("remote actors rebuild the env by name; "
+                             "pass an env name, not an Env object")
+        self.env_name = env_name
+        self.num_envs = num_envs
+        self.store = store
+        self.queue = transport
+        self.seed = seed
+        self.spawn_local = spawn_local
+        self._ctx = mp.get_context("spawn")
+        self._stop = self._ctx.Event()
+        self._procs: List[mp.process.BaseProcess] = []
+        self.errors: List[str] = []             # remote tracebacks
+        self._init_accounting(num_actors, num_envs * icfg.unroll_length)
+        self.service = service
+        self.infer_streams = infer_streams
+        mode = "inference" if service is not None else "unroll"
+        cfg = netserve.build_actor_config(
+            env_name=env_name, arch_cfg=arch_cfg, icfg=icfg,
+            num_envs=num_envs, seed=seed, mode=mode,
+            infer_streams=infer_streams)
+        transport.max_actors = num_actors
+        transport.config_extra = lambda actor_id: cfg
+        transport.param_source = store.pull_serialized
+        transport.on_item = self._note_arrival
+        transport.on_reject = self._note_loss
+        transport.on_drop = self._note_loss
+        transport.on_error = self.errors.append
+        self._frontend = (netserve.SocketInferenceFrontend(
+            service, transport, streams=infer_streams)
+            if service is not None else None)
+
+    # accounting runs on the transport's connection threads
+    def _note_arrival(self, item: TrajectoryItem) -> None:
+        self._note_accept(item)
+        self._note_frames(item.actor_id)
+
+    # ------------------------------------------------------------------
+
+    def start(self) -> None:
+        if not self.spawn_local:
+            return                      # remote machines dial in
+        from repro.distributed.netserve import remote_actor_child
+        for i in range(self.num_actors):
+            p = self._ctx.Process(
+                target=remote_actor_child,
+                args=(tuple(self.queue.address), self._stop),
+                name=f"actor-remote-{i}", daemon=True)
+            self._procs.append(p)
+            p.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._frontend is not None:
+            self._frontend.begin_shutdown()
+        # flips the transport to discard (data conns keep draining so a
+        # child mid-send can always finish its frame) and broadcasts the
+        # stop control frame to every connected actor
+        self.queue.begin_shutdown()
+
+    def join(self, timeout: float = 30.0) -> None:
+        deadline = time.monotonic() + timeout
+        for p in self._procs:
+            p.join(max(0.1, deadline - time.monotonic()))
+        for p in self._procs:
+            if p.is_alive():                # no orphans, ever
+                p.terminate()
+                p.join(timeout=5.0)
+
+    def raise_errors(self) -> None:
+        if self.errors:
+            raise RuntimeError("remote actor died:\n" + self.errors[0])
+        if not self._stop.is_set():
             for p in self._procs:
                 if p.exitcode is not None and p.exitcode != 0:
                     raise RuntimeError(

@@ -405,6 +405,232 @@ def run_inference_driver_loop(
 
 
 # ---------------------------------------------------------------------------
+# serialized-actor scaffolding, shared by the pipe (process) and socket
+# (remote) backends: the loop bodies above never see the wire — what
+# varies is only how params arrive (``pull_msg``) and where encoded
+# trajectory buffers go (``send_buf``)
+
+
+def run_serialized_unroll_actor(*, actor_id: int, env_name: str,
+                                arch_cfg, icfg, num_envs: int,
+                                seed: int,
+                                send_buf: Callable[[bytes], bool],
+                                pull_msg: Callable[[int],
+                                                   Optional[Tuple]],
+                                stop) -> None:
+    """One unroll-mode actor on the far side of a serialized boundary.
+
+    ``pull_msg(have_version)`` returns ``("params", version, buf)``,
+    ``("keep",)``, ``("stop",)`` or None — a pipe wrapper or a socket
+    pull; raising any channel error also means stop. ``send_buf(buf)``
+    blocks until the encoded trajectory is accepted by the wire (its
+    retry/backpressure/reconnect discipline lives with the channel) and
+    returns False only when shutting down. ``stop`` is any Event-alike
+    with ``is_set``/``wait``.
+
+    The unroll stays on the critical path alone: a *subscriber* thread
+    refreshes params in the background (the loop never waits on the
+    channel once the first version has landed), and a *sender* thread
+    owns encode + send behind a depth-1 buffer — enough to overlap the
+    send with the next unroll, shallow enough that wire backpressure
+    still stalls the actor within two trajectories."""
+    import queue as stdlib_queue
+    import threading
+
+    import jax
+    import numpy as np
+
+    from repro.core import actor as actor_lib
+    from repro.data.envs import make_env
+    from repro.distributed import serde
+
+    env = make_env(env_name)
+    builder = actor_lib.build_actor(env, arch_cfg, icfg, num_envs)
+    cache = {"params": None, "version": -1, "dead": False}
+    cache_lock = threading.Lock()
+    fresh = threading.Event()
+
+    def subscribe():
+        # version-gated pub/sub: ask for anything newer than we hold
+        # (a "keep" reply costs one tiny message), at a bounded rate —
+        # the throttle caps both server traffic and this child's
+        # decode+upload work; params are at most ``interval`` stale,
+        # which is exactly the off-policy gap V-trace corrects
+        interval = 0.1
+        # steady state decodes into one reused host mirror instead
+        # of allocating a fresh params-sized tree per pull; the
+        # first pull — or a structure change — takes the allocating
+        # path. The device upload MUST be jnp.array (guaranteed
+        # copy): jnp.asarray zero-copy *aliases* 64-byte-aligned
+        # host buffers on the CPU backend (measured), and an
+        # aliased param leaf would be torn by the next publish's
+        # decode while the unroll reads it
+        mirror = None
+        while not stop.is_set():
+            try:
+                msg = pull_msg(cache["version"])
+            except (EOFError, OSError, BrokenPipeError, ValueError):
+                # includes the channel closing under us during shutdown
+                break
+            if msg is None or msg[0] == "stop":
+                break
+            if msg[0] == "params":
+                _, version, buf = msg
+                # a retried pull can deliver a stale queued reply:
+                # installing an older version than we hold would step
+                # the behaviour policy backwards
+                if version > cache["version"]:
+                    if mirror is not None:
+                        try:
+                            serde.decode_tree_into(buf, mirror)
+                        except serde.SerdeError:
+                            mirror = None
+                    if mirror is None:
+                        mirror, _ = serde.decode_tree(buf, copy=True)
+                    params = jax.tree.map(jax.numpy.array, mirror)
+                    with cache_lock:
+                        cache["params"] = params
+                        cache["version"] = version
+                    fresh.set()
+            if stop.wait(interval):
+                break
+        with cache_lock:
+            cache["dead"] = True
+        fresh.set()
+
+    def pull_params():
+        while not fresh.wait(timeout=0.2):
+            if stop.is_set():
+                return None
+        with cache_lock:
+            if cache["dead"] and cache["params"] is None:
+                return None
+            return cache["params"], cache["version"]
+
+    outbox: stdlib_queue.Queue = stdlib_queue.Queue(maxsize=1)
+
+    def send_loop():
+        while True:
+            try:
+                item = outbox.get(timeout=0.1)
+            except stdlib_queue.Empty:
+                if stop.is_set():
+                    return
+                continue
+            if item is None:
+                return
+            buf = serde.encode_item(serde.TrajectoryItem(
+                jax.tree.map(np.asarray, item.data),
+                item.param_version, item.actor_id, item.produced_at))
+            if not send_buf(buf):
+                return                  # channel says we are done
+
+    def emit(item):
+        while not stop.is_set():
+            try:
+                outbox.put(item, timeout=0.1)
+                return True
+            except stdlib_queue.Full:
+                continue                # wire backpressure reached us
+        return False
+
+    sub = threading.Thread(target=subscribe, daemon=True,
+                           name="param-subscriber")
+    snd = threading.Thread(target=send_loop, daemon=True,
+                           name="traj-sender")
+    sub.start()
+    snd.start()
+    try:
+        run_actor_loop(actor_id=actor_id, builder=builder, seed=seed,
+                       pull_params=pull_params, emit=emit,
+                       should_stop=stop.is_set)
+    finally:
+        try:
+            outbox.put_nowait(None)
+        except stdlib_queue.Full:
+            pass
+        snd.join(timeout=5.0)
+
+
+def run_serialized_inference_actor(*, actor_id: int, env_name: str,
+                                   arch_cfg, icfg, num_envs: int,
+                                   seed: int,
+                                   send_buf: Callable[[bytes], bool],
+                                   infer_clients: List[Any],
+                                   stop) -> None:
+    """One inference-mode actor on the far side of a serialized
+    boundary: no parameters, no policy network — env stepping plus
+    frames both ways (observation requests up, action replies down,
+    finished trajectories out through ``send_buf``). ``infer_clients``
+    is one service client per pipeline stream (pipe- or socket-backed;
+    same surface). The trajectory sender runs behind the same depth-1
+    outbox as the unroll worker, overlapping encode+send with the next
+    unroll's inference round-trips."""
+    import queue as stdlib_queue
+    import threading
+
+    from repro.data.envs import make_env
+    from repro.distributed import serde
+
+    for cl in infer_clients:
+        cl.bind_stop(stop)
+    env = make_env(env_name)
+    outbox: stdlib_queue.Queue = stdlib_queue.Queue(maxsize=1)
+
+    def send_loop():
+        while True:
+            try:
+                item = outbox.get(timeout=0.1)
+            except stdlib_queue.Empty:
+                if stop.is_set():
+                    return
+                continue
+            if item is None:
+                return
+            buf = serde.encode_item(item)   # leaves already numpy
+            if not send_buf(buf):
+                return
+
+    def emit(item):
+        blocked = False
+        try:
+            while not stop.is_set():
+                try:
+                    outbox.put(item, timeout=0.1)
+                    return True
+                except stdlib_queue.Full:
+                    # wire backpressure reached us: drop out of the
+                    # service's ready rule while we wait
+                    if not blocked:
+                        blocked = True
+                        for cl in infer_clients:
+                            cl.pause()
+                    continue
+        finally:
+            if blocked:
+                for cl in infer_clients:
+                    cl.resume()
+        return False
+
+    snd = threading.Thread(target=send_loop, daemon=True,
+                           name="traj-sender")
+    snd.start()
+    try:
+        run_inference_actor_loop(
+            actor_id=actor_id, env=env, arch_cfg=arch_cfg, icfg=icfg,
+            num_envs=num_envs, seed=seed, clients=infer_clients,
+            emit=emit, should_stop=stop.is_set)
+    finally:
+        try:
+            outbox.put_nowait(None)
+        except stdlib_queue.Full:
+            pass
+        snd.join(timeout=5.0)
+        for cl in infer_clients:
+            cl.close()
+
+
+# ---------------------------------------------------------------------------
 # process worker entry point (spawn target — must be module-level)
 
 
@@ -433,137 +659,38 @@ def _tune_child_scheduling(actor_id: int) -> None:
             pass
 
 
+def _wire_send_buf(producer, stop_event) -> Callable[[bytes], bool]:
+    """Adapt a ``ShmProducer``-style offer-with-timeout handle to the
+    blocking ``send_buf`` contract the serialized actor bodies use."""
+    def send_buf(buf: bytes) -> bool:
+        while not stop_event.is_set():
+            if producer.send(buf, timeout=0.1):
+                return True
+        return False
+    return send_buf
+
+
 def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
                        num_envs: int, seed: int, producer,
                        param_conn, stop_event) -> None:
     """Entry point of one actor *process*. Builds its own env batch and
     jit cache (nothing jax crosses the process boundary), subscribes to
-    params by version from the parent's param server, and ships
-    serde-encoded trajectories through the wire.
-
-    The unroll is kept on the critical path alone: a *subscriber* thread
-    refreshes params in the background (the loop never waits on the
-    pipe once the first version has landed), and a *sender* thread owns
-    encode + wire put behind a depth-1 buffer — enough to overlap the
-    send with the next unroll, shallow enough that wire backpressure
-    still stalls the actor within two trajectories."""
-    import queue as stdlib_queue
-    import threading
-
+    params by version from the parent's param server over the pipe, and
+    ships serde-encoded trajectories through the wire — the loop,
+    subscriber, and sender all live in ``run_serialized_unroll_actor``,
+    shared verbatim with the socket (remote) backend."""
     try:
         _tune_child_scheduling(actor_id)
-        import jax
-        import numpy as np
 
-        from repro.core import actor as actor_lib
-        from repro.data.envs import make_env
-        from repro.distributed import serde
+        def pull_msg(have_version):
+            param_conn.send(("pull", actor_id, have_version))
+            return param_conn.recv()
 
-        env = make_env(env_name)
-        builder = actor_lib.build_actor(env, arch_cfg, icfg, num_envs)
-        cache = {"params": None, "version": -1, "dead": False}
-        cache_lock = threading.Lock()
-        fresh = threading.Event()
-
-        def subscribe():
-            # version-gated pub/sub: ask for anything newer than we hold
-            # (a "keep" reply costs one tiny message), at a bounded rate —
-            # the throttle caps both server traffic and this child's
-            # decode+upload work; params are at most ``interval`` stale,
-            # which is exactly the off-policy gap V-trace corrects
-            interval = 0.1
-            # steady state decodes into one reused host mirror instead
-            # of allocating a fresh params-sized tree per pull; the
-            # first pull — or a structure change — takes the allocating
-            # path. The device upload MUST be jnp.array (guaranteed
-            # copy): jnp.asarray zero-copy *aliases* 64-byte-aligned
-            # host buffers on the CPU backend (measured), and an
-            # aliased param leaf would be torn by the next publish's
-            # decode while the unroll reads it
-            mirror = None
-            while not stop_event.is_set():
-                try:
-                    param_conn.send(("pull", actor_id, cache["version"]))
-                    msg = param_conn.recv()
-                except (EOFError, OSError, BrokenPipeError, ValueError):
-                    # includes the main thread closing the conn under us
-                    # during shutdown
-                    break
-                if msg[0] == "stop":
-                    break
-                if msg[0] == "params":
-                    _, version, buf = msg
-                    if mirror is not None:
-                        try:
-                            serde.decode_tree_into(buf, mirror)
-                        except serde.SerdeError:
-                            mirror = None
-                    if mirror is None:
-                        mirror, _ = serde.decode_tree(buf, copy=True)
-                    params = jax.tree.map(jax.numpy.array, mirror)
-                    with cache_lock:
-                        cache["params"] = params
-                        cache["version"] = version
-                    fresh.set()
-                if stop_event.wait(interval):
-                    break
-            with cache_lock:
-                cache["dead"] = True
-            fresh.set()
-
-        def pull_params():
-            while not fresh.wait(timeout=0.2):
-                if stop_event.is_set():
-                    return None
-            with cache_lock:
-                if cache["dead"] and cache["params"] is None:
-                    return None
-                return cache["params"], cache["version"]
-
-        outbox: stdlib_queue.Queue = stdlib_queue.Queue(maxsize=1)
-
-        def send_loop():
-            while True:
-                try:
-                    item = outbox.get(timeout=0.1)
-                except stdlib_queue.Empty:
-                    if stop_event.is_set():
-                        return
-                    continue
-                if item is None:
-                    return
-                buf = serde.encode_item(serde.TrajectoryItem(
-                    jax.tree.map(np.asarray, item.data),
-                    item.param_version, item.actor_id, item.produced_at))
-                while not stop_event.is_set():
-                    if producer.send(buf, timeout=0.1):
-                        break
-
-        def emit(item):
-            while not stop_event.is_set():
-                try:
-                    outbox.put(item, timeout=0.1)
-                    return True
-                except stdlib_queue.Full:
-                    continue            # wire backpressure reached us
-            return False
-
-        sub = threading.Thread(target=subscribe, daemon=True,
-                               name="param-subscriber")
-        snd = threading.Thread(target=send_loop, daemon=True,
-                               name="traj-sender")
-        sub.start()
-        snd.start()
-        try:
-            run_actor_loop(actor_id=actor_id, builder=builder, seed=seed,
-                           pull_params=pull_params, emit=emit,
-                           should_stop=stop_event.is_set)
-        finally:
-            try:
-                outbox.put_nowait(None)
-            except stdlib_queue.Full:
-                pass
-            snd.join(timeout=5.0)
+        run_serialized_unroll_actor(
+            actor_id=actor_id, env_name=env_name, arch_cfg=arch_cfg,
+            icfg=icfg, num_envs=num_envs, seed=seed,
+            send_buf=_wire_send_buf(producer, stop_event),
+            pull_msg=pull_msg, stop=stop_event)
     except BaseException:
         try:
             param_conn.send(("error", actor_id, traceback.format_exc()))
@@ -584,78 +711,18 @@ def inference_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
     (observation requests up the shared wire, action replies back down
     per-stream private pipes, finished trajectories through the
     transport wire). ``infer_clients`` is one ``PipeInferenceClient``
-    per pipeline stream.
-
-    ``ctrl_conn`` is the control pipe to the parent's server thread,
-    used only for error reports here (nothing to pull — the service owns
-    the params). The trajectory sender runs behind the same depth-1
-    outbox as the unroll worker, overlapping encode+put with the next
-    unroll's inference round-trips."""
-    import queue as stdlib_queue
-    import threading
-
+    per pipeline stream; ``ctrl_conn`` is the control pipe to the
+    parent's server thread, used only for error reports here (nothing
+    to pull — the service owns the params). The loop body is
+    ``run_serialized_inference_actor``, shared verbatim with the socket
+    (remote) backend."""
     try:
         _tune_child_scheduling(actor_id)
-        from repro.data.envs import make_env
-        from repro.distributed import serde
-
-        for cl in infer_clients:
-            cl.bind_stop(stop_event)
-        env = make_env(env_name)
-        outbox: stdlib_queue.Queue = stdlib_queue.Queue(maxsize=1)
-
-        def send_loop():
-            while True:
-                try:
-                    item = outbox.get(timeout=0.1)
-                except stdlib_queue.Empty:
-                    if stop_event.is_set():
-                        return
-                    continue
-                if item is None:
-                    return
-                buf = serde.encode_item(item)   # leaves already numpy
-                while not stop_event.is_set():
-                    if producer.send(buf, timeout=0.1):
-                        break
-
-        def emit(item):
-            blocked = False
-            try:
-                while not stop_event.is_set():
-                    try:
-                        outbox.put(item, timeout=0.1)
-                        return True
-                    except stdlib_queue.Full:
-                        # wire backpressure reached us: drop out of the
-                        # service's ready rule while we wait
-                        if not blocked:
-                            blocked = True
-                            for cl in infer_clients:
-                                cl.pause()
-                        continue
-            finally:
-                if blocked:
-                    for cl in infer_clients:
-                        cl.resume()
-            return False
-
-        snd = threading.Thread(target=send_loop, daemon=True,
-                               name="traj-sender")
-        snd.start()
-        try:
-            run_inference_actor_loop(
-                actor_id=actor_id, env=env, arch_cfg=arch_cfg, icfg=icfg,
-                num_envs=num_envs, seed=seed, clients=infer_clients,
-                emit=emit, should_stop=stop_event.is_set)
-        finally:
-            try:
-                outbox.put_nowait(None)
-            except stdlib_queue.Full:
-                pass
-            snd.join(timeout=5.0)
-            for cl in infer_clients:
-                cl.close()
+        run_serialized_inference_actor(
+            actor_id=actor_id, env_name=env_name, arch_cfg=arch_cfg,
+            icfg=icfg, num_envs=num_envs, seed=seed,
+            send_buf=_wire_send_buf(producer, stop_event),
+            infer_clients=infer_clients, stop=stop_event)
     except BaseException:
         try:
             ctrl_conn.send(("error", actor_id, traceback.format_exc()))

@@ -256,6 +256,8 @@ def run_async_training(
     actor_backend: str = "thread",
     actor_mode: str = "unroll",
     transport: str = "inproc",
+    listen_addr: Optional[Tuple[str, int]] = None,
+    spawn_remote: bool = True,
     queue_capacity: int = 8,
     queue_policy: str = "block",
     max_batch_trajs: int = 4,
@@ -274,14 +276,27 @@ def run_async_training(
     """Train until ``steps`` total learner updates with real async acting.
 
     ``actor_backend`` picks where actors live: ``thread`` (workers in
-    this interpreter, zero-copy handoff) or ``process`` (spawned
+    this interpreter, zero-copy handoff), ``process`` (spawned
     interpreters, each with its own env batch, RNG stream, and jit
-    cache). ``transport`` picks how trajectories travel: ``inproc`` (the
-    live-pytree deque) or ``shm`` (serde-encoded buffers over a
-    cross-process wire). Process actors require the serializing
-    transport; thread actors accept either — ``thread``+``shm`` drives
-    every byte of the serialization boundary without paying process
-    startup, which is exactly what the transport tests exploit.
+    cache), or ``remote`` (actors dial a TCP listen address — the
+    paper's cross-machine deployment). ``transport`` picks how
+    trajectories travel: ``inproc`` (the live-pytree deque), ``shm``
+    (serde-encoded buffers over a cross-process wire), or ``socket``
+    (the same buffers as CRC-framed TCP messages). Process actors
+    require ``shm``; remote actors require ``socket`` — and
+    vice versa. Thread actors accept ``inproc`` or ``shm`` —
+    ``thread``+``shm`` drives every byte of the serialization boundary
+    without paying process startup, which is exactly what the transport
+    tests exploit.
+
+    With the socket transport, ``listen_addr`` is the (host, port) the
+    learner binds (default loopback, ephemeral port) and
+    ``spawn_remote`` picks between the single-box shape (True: spawn
+    ``num_actors`` loopback children that connect like any remote
+    machine would) and the real deployment shape (False: listen and
+    wait for ``num_actors`` external actors — each remote machine runs
+    ``launch.train --connect host:port`` and receives the entire run
+    config in the connection handshake).
 
     ``actor_mode='inference'`` replaces the per-actor jitted unrolls
     with one ``InferenceService`` on the learner's device (conv-LSTM
@@ -337,15 +352,24 @@ def run_async_training(
     if max_batch_trajs < 1:
         raise ValueError(f"max_batch_trajs must be >= 1, got "
                          f"{max_batch_trajs}")
-    if actor_backend not in ("thread", "process"):
-        raise ValueError(f"actor_backend must be 'thread' or 'process', "
-                         f"got {actor_backend!r}")
+    if actor_backend not in ("thread", "process", "remote"):
+        raise ValueError(f"actor_backend must be 'thread', 'process' or "
+                         f"'remote', got {actor_backend!r}")
     if actor_mode not in ACTOR_MODES:
         raise ValueError(f"actor_mode must be one of {ACTOR_MODES}, got "
                          f"{actor_mode!r}")
     if actor_backend == "process" and transport != "shm":
         raise ValueError("process actors cannot share live pytrees; use "
                          "transport='shm'")
+    if actor_backend == "remote" and transport != "socket":
+        raise ValueError("remote actors ship trajectories over TCP; use "
+                         "transport='socket'")
+    if transport == "socket" and actor_backend != "remote":
+        raise ValueError("transport='socket' requires "
+                         "actor_backend='remote'")
+    if actor_backend == "remote" and not isinstance(env_name, str):
+        raise ValueError("remote actors rebuild the env by name; pass "
+                         "an env name, not an Env object")
     env = make_env(env_name) if isinstance(env_name, str) else env_name
     if arch is None:
         from repro.core.driver import small_arch
@@ -387,8 +411,25 @@ def run_async_training(
             max_batch_requests=(infer_max_batch_requests or
                                 _pow2_floor(num_actors)),
             seed=seed)
-    queue = make_transport(transport, queue_capacity, queue_policy)
-    if actor_backend == "process":
+    transport_kw = {}
+    if transport == "socket":
+        transport_kw = {"listen": listen_addr or ("127.0.0.1", 0),
+                        "max_actors": num_actors}
+    queue = make_transport(transport, queue_capacity, queue_policy,
+                           **transport_kw)
+    if actor_backend == "remote":
+        from repro.distributed.procpool import SocketActorPool
+        pool = SocketActorPool(
+            env_name, arch, icfg, num_envs, num_actors, store, queue,
+            seed=seed, service=service, infer_streams=infer_streams,
+            spawn_local=spawn_remote)
+        if not spawn_remote:
+            host, port = queue.address
+            print(f"learner listening on {host}:{port} — waiting for "
+                  f"{num_actors} remote actor(s): "
+                  f"PYTHONPATH=src python -m repro.launch.train "
+                  f"--connect {host}:{port}", flush=True)
+    elif actor_backend == "process":
         from repro.distributed.procpool import ProcessActorPool
         pool = ProcessActorPool(
             env_name if isinstance(env_name, str) else env.name,

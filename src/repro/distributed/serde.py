@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import ml_dtypes
@@ -254,3 +255,96 @@ def decode_item(buf: bytes, copy: bool = False) -> TrajectoryItem:
     return TrajectoryItem(data, int(meta["param_version"]),
                           int(meta["actor_id"]),
                           float(meta["produced_at"]))
+
+
+# ---------------------------------------------------------------------------
+# wire framing (the socket transport's unit of transmission)
+#
+# ``encode_tree`` buffers are self-describing but carry no *boundary*: a
+# TCP stream needs one. Each message travels as a frame::
+#
+#     [4B magic 'RFR1'][1B kind][4B uint32 stream id]
+#     [4B uint32 payload length][4B crc32(payload)][payload]
+#
+# ``kind`` multiplexes message types over one connection (trajectory,
+# parameter pull/push, inference request/reply, control); ``stream_id``
+# is kind-specific routing (client id, parameter version, ...). The CRC
+# covers the kind/stream/length fields AND the payload — a flipped bit
+# in the routing fields would otherwise deliver a valid payload to the
+# wrong client — and turns silent wire corruption and misframing into a
+# loud ``SerdeError`` at the receiver; on a byte stream a single
+# flipped or lost bit would otherwise desynchronise *every* later
+# frame. A frame that ends early (peer killed mid-write) is detected by
+# length, never delivered.
+
+
+FRAME_MAGIC = b"RFR1"
+_FRAME_HDR = struct.Struct("<4sBIII")      # magic, kind, stream, len, crc
+_FRAME_META = struct.Struct("<BII")        # the crc-covered header part
+FRAME_HEADER_SIZE = _FRAME_HDR.size
+# sanity cap: no single message (trajectory, params, obs batch) comes
+# near this; a corrupt length field must not provoke a giant allocation
+MAX_FRAME_PAYLOAD = 1 << 30
+
+
+def frame_crc(kind: int, stream_id: int, payload: bytes) -> int:
+    """crc32 over (kind, stream_id, length, payload) — incremental, no
+    payload copy."""
+    meta = _FRAME_META.pack(kind, stream_id, len(payload))
+    return zlib.crc32(payload, zlib.crc32(meta))
+
+
+def pack_frame(kind: int, stream_id: int, payload: bytes = b"") -> bytes:
+    """One wire frame: header (magic/kind/stream/length/crc) + payload."""
+    if not 0 <= kind <= 0xFF:
+        raise SerdeError(f"frame kind must fit a byte, got {kind}")
+    if not 0 <= stream_id <= 0xFFFFFFFF:
+        raise SerdeError(f"stream id must fit uint32, got {stream_id}")
+    if len(payload) > MAX_FRAME_PAYLOAD:
+        raise SerdeError(f"payload too large ({len(payload)} bytes)")
+    return _FRAME_HDR.pack(FRAME_MAGIC, kind, stream_id, len(payload),
+                           frame_crc(kind, stream_id, payload)) + payload
+
+
+def parse_frame_header(hdr: bytes) -> Tuple[int, int, int, int]:
+    """Validate a 17-byte frame header; returns (kind, stream_id,
+    payload length, expected crc32). Raises ``SerdeError`` on bad magic
+    or an implausible length — the caller must treat either as a
+    desynchronised (torn) stream and drop the connection, because
+    there is no way to re-find frame boundaries in a byte stream."""
+    if len(hdr) != FRAME_HEADER_SIZE:
+        raise SerdeError(f"frame header must be {FRAME_HEADER_SIZE} "
+                         f"bytes, got {len(hdr)}")
+    magic, kind, stream_id, length, crc = _FRAME_HDR.unpack(hdr)
+    if magic != FRAME_MAGIC:
+        raise SerdeError(f"bad frame magic {magic!r} "
+                         f"(expected {FRAME_MAGIC!r})")
+    if length > MAX_FRAME_PAYLOAD:
+        raise SerdeError(f"implausible frame length {length}")
+    return kind, stream_id, length, crc
+
+
+def verify_frame_payload(kind: int, stream_id: int, payload: bytes,
+                         crc: int) -> None:
+    """CRC check over routing fields + payload; raises ``SerdeError``
+    on mismatch (corrupt frame)."""
+    actual = frame_crc(kind, stream_id, payload)
+    if actual != crc:
+        raise SerdeError(f"frame crc mismatch: header says {crc:#010x}, "
+                         f"computed {actual:#010x}")
+
+
+def unpack_frame(buf: bytes) -> Tuple[int, int, bytes, int]:
+    """Decode one complete frame from the head of ``buf``; returns
+    (kind, stream_id, payload, bytes consumed). Convenience for tests
+    and in-memory use — the socket path reads header and payload
+    separately off the stream."""
+    kind, stream_id, length, crc = parse_frame_header(
+        buf[:FRAME_HEADER_SIZE])
+    end = FRAME_HEADER_SIZE + length
+    if len(buf) < end:
+        raise SerdeError(f"frame truncated: need {end} bytes, "
+                         f"have {len(buf)}")
+    payload = bytes(buf[FRAME_HEADER_SIZE:end])
+    verify_frame_payload(kind, stream_id, payload, crc)
+    return kind, stream_id, payload, end

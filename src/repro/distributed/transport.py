@@ -14,6 +14,11 @@ rather than new runtimes:
                     bounded ``multiprocessing`` wire queue; a parent-side
                     drain thread decodes them and applies the configured
                     backpressure policy in a local ``TrajectoryQueue``.
+  SocketTransport   (``socket_transport.py``) the same buffers as
+                    length-prefixed, CRC-checked frames over TCP —
+                    actors on other machines; per-connection drain
+                    threads play the role ShmTransport's single drain
+                    thread plays here.
 
 Backpressure composes across the wire: with the ``block`` policy a slow
 learner stalls the drain thread, the wire queue fills, and producer
@@ -39,7 +44,7 @@ from repro.distributed import serde
 from repro.distributed.serde import TrajectoryItem
 from repro.distributed.tqueue import POLICIES, TrajectoryQueue
 
-TRANSPORTS = ("inproc", "shm")
+TRANSPORTS = ("inproc", "shm", "socket")
 
 
 class Transport(abc.ABC):
@@ -215,12 +220,18 @@ class ShmTransport(Transport):
                     if self.on_item is not None:
                         self.on_item(item)
                     break
+                # the closed check must come FIRST: a put that failed
+                # because close()/begin_shutdown() raced us is shutdown
+                # discard, and attributing it as a drop_newest rejection
+                # would charge the producing actor for a loss the policy
+                # never decided (found by the chaos harness's shutdown
+                # sweep; regression-tested in test_transport.py)
+                if self._inner.closed or self._discard:
+                    break
                 if self._inner.policy == "drop_newest":
                     if self.on_reject is not None:
                         self.on_reject(item)
                     break                   # genuine policy rejection
-                if self._inner.closed:
-                    break
                 # block policy: local queue full, learner slow — stall
                 # here so the wire fills and producers feel it
 
@@ -286,9 +297,17 @@ class ShmTransport(Transport):
         return snap
 
 
-def make_transport(kind: str, capacity: int, policy: str) -> Transport:
+def make_transport(kind: str, capacity: int, policy: str,
+                   **kw: Any) -> Transport:
+    """``kw`` passes transport-specific options through (the socket
+    transport's ``listen`` address / ``max_actors``)."""
     if kind == "inproc":
-        return InprocTransport(capacity, policy)
+        return InprocTransport(capacity, policy, **kw)
     if kind == "shm":
-        return ShmTransport(capacity, policy)
+        return ShmTransport(capacity, policy, **kw)
+    if kind == "socket":
+        # deferred import: the socket transport is its own module so
+        # this one stays import-light for producer children
+        from repro.distributed.socket_transport import SocketTransport
+        return SocketTransport(capacity, policy, **kw)
     raise ValueError(f"transport must be one of {TRANSPORTS}, got {kind!r}")

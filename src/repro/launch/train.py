@@ -61,10 +61,13 @@ def main() -> int:
                    help="actor worker count (async runtime; threads or "
                         "processes per --actor-backend)")
     p.add_argument("--actor-backend", default="thread",
-                   choices=["thread", "process"],
+                   choices=["thread", "process", "remote"],
                    help="where actors live: threads of this interpreter "
-                        "(zero-copy) or spawned processes (serialized "
-                        "trajectories, no GIL contention)")
+                        "(zero-copy), spawned processes (serialized "
+                        "trajectories, no GIL contention), or remote "
+                        "machines dialing a TCP listen address "
+                        "(--transport socket; without --listen the "
+                        "learner spawns loopback children itself)")
     p.add_argument("--actor-mode", default="unroll",
                    choices=["unroll", "inference"],
                    help="unroll: every actor runs its own jitted n-step "
@@ -82,10 +85,24 @@ def main() -> int:
                         "in place; published params become a device "
                         "copy)")
     p.add_argument("--transport", default="",
-                   choices=["", "inproc", "shm"],
+                   choices=["", "inproc", "shm", "socket"],
                    help="trajectory transport; default inproc for thread "
                         "actors, shm (serialized buffers over a "
-                        "cross-process wire) for process actors")
+                        "cross-process wire) for process actors, socket "
+                        "(CRC-framed TCP) for remote actors")
+    p.add_argument("--listen", default="",
+                   help="HOST:PORT the learner binds for remote actors "
+                        "(actor_backend=remote). Given: wait for "
+                        "--actor-threads external actors to dial in. "
+                        "Empty: loopback ephemeral port, learner spawns "
+                        "its own loopback actor children")
+    p.add_argument("--connect", default="",
+                   help="run as REMOTE ACTOR(S) instead of a learner: "
+                        "dial HOST:PORT, receive the whole run config "
+                        "in the handshake (env/arch/seed/mode), act "
+                        "until the learner says stop. --actor-threads "
+                        "sets how many actor processes this machine "
+                        "contributes")
     p.add_argument("--queue-capacity", type=int, default=8)
     p.add_argument("--queue-policy", default="block",
                    choices=["block", "drop_oldest", "drop_newest"])
@@ -99,6 +116,12 @@ def main() -> int:
     p.add_argument("--log-every", type=int, default=25)
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
+
+    if args.connect:
+        # remote actor mode: this process contributes actors to a
+        # learner elsewhere — every run parameter arrives in the
+        # connection handshake, so none of the learner flags apply here
+        return _run_remote_actors(args)
 
     from repro.configs.base import ImpalaConfig
     from repro.configs.registry import get_config, get_smoke_config
@@ -120,6 +143,53 @@ def main() -> int:
     if args.runtime == "async":
         return _run_async(args, env, arch, icfg)
     return _run_sync(args, env, arch, icfg)
+
+
+def _parse_hostport(spec: str, default_host: str = "127.0.0.1"):
+    host, sep, port = spec.rpartition(":")
+    if not sep or not port.isdigit():
+        raise SystemExit(f"expected HOST:PORT, got {spec!r}")
+    return (host or default_host, int(port))
+
+
+def _run_remote_actors(args) -> int:
+    import multiprocessing as mp
+
+    addr = _parse_hostport(args.connect)
+    n = max(1, args.actor_threads)
+    print(f"remote actor mode: {n} actor process(es) -> "
+          f"{addr[0]}:{addr[1]}")
+    if n == 1:
+        import os
+        from repro.distributed.netserve import remote_actor_main
+        err = remote_actor_main(addr)
+        if err:
+            print(err)
+            return 1
+        print("learner said stop; exiting cleanly")
+        # hard exit: XLA runtime threads can abort C++ teardown on a
+        # normal interpreter exit, flipping a clean run's exit code
+        os._exit(0)
+    ctx = mp.get_context("spawn")
+    from repro.distributed.netserve import remote_actor_child
+    stop = ctx.Event()
+    procs = [ctx.Process(target=remote_actor_child, args=(addr, stop),
+                         name=f"remote-actor-{i}") for i in range(n)]
+    for proc in procs:
+        proc.start()
+    try:
+        for proc in procs:
+            proc.join()
+    except KeyboardInterrupt:
+        stop.set()
+        for proc in procs:
+            proc.join(timeout=10)
+            if proc.is_alive():
+                proc.terminate()
+        return 0
+    # a failed actor (dial timeout, refusal, crash) exits nonzero;
+    # surface it like the single-actor path does
+    return 1 if any(p.exitcode not in (0, None) for p in procs) else 0
 
 
 def _run_sync(args, env, arch, icfg) -> int:
@@ -198,10 +268,19 @@ def _run_async(args, env, arch, icfg) -> int:
 
     if icfg.replay_fraction > 0:
         raise SystemExit("--replay-fraction requires --runtime sync")
-    transport = args.transport or (
-        "shm" if args.actor_backend == "process" else "inproc")
+    transport = args.transport or {
+        "process": "shm", "remote": "socket"}.get(args.actor_backend,
+                                                  "inproc")
     if args.actor_backend == "process" and transport != "shm":
         raise SystemExit("--actor-backend process requires --transport shm")
+    if args.actor_backend == "remote" and transport != "socket":
+        raise SystemExit("--actor-backend remote requires "
+                         "--transport socket")
+    listen_addr = (_parse_hostport(args.listen, default_host="0.0.0.0")
+                   if args.listen else None)
+    # an explicit --listen means real remote machines dial in; without
+    # it the learner spawns loopback actor children itself
+    spawn_remote = not args.listen
     specs = bb.backbone_specs(arch, env.num_actions)
     print(f"arch={arch.name} params={common.param_count(specs):,} "
           f"env={env.name} actions={env.num_actions} runtime=async "
@@ -240,13 +319,16 @@ def _run_async(args, env, arch, icfg) -> int:
         if args.ckpt_dir and step % args.ckpt_every == 0:
             ckpt.save(args.ckpt_dir, step, params)
 
-    env_arg = args.env if args.actor_backend == "process" else env
+    env_arg = (args.env if args.actor_backend in ("process", "remote")
+               else env)
     tracker, metrics, tel = run_async_training(
         env_arg, icfg, args.num_envs, args.steps,
         num_actors=args.actor_threads,
         actor_backend=args.actor_backend,
         actor_mode=args.actor_mode,
         transport=transport,
+        listen_addr=listen_addr,
+        spawn_remote=spawn_remote,
         queue_capacity=args.queue_capacity,
         queue_policy=args.queue_policy,
         max_batch_trajs=args.max_batch_trajs,

@@ -1,0 +1,210 @@
+"""Deterministic fault injection for the socket transport tests.
+
+``ChaosProxy`` is an in-process TCP proxy: the test points actors at
+the proxy's address, the proxy forwards to the real learner, and the
+test script injects faults *on command* — no timing-dependent monkey
+business, every failure is provoked exactly where the test wants it:
+
+  delay        per-forward latency on the actor->learner direction
+  split        forward in ``chunk_bytes`` pieces (frame headers and
+               payloads arrive shredded across many recv()s)
+  coalesce     with splitting off, consecutive client writes merge in
+               the proxy's read buffer (many frames per recv())
+  truncate     ``truncate_in(n)`` arms a countdown: forward exactly n
+               more upstream bytes — a boundary the test computes to be
+               MID-FRAME — then sever the link abruptly
+  sever        ``sever()`` kills every live link right now
+
+No jax, no repro imports: pure sockets, usable from any test process.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import List, Optional, Tuple
+
+
+class _Link:
+    """One proxied connection: client <-> proxy <-> upstream."""
+
+    def __init__(self, client: socket.socket, upstream: socket.socket):
+        self.client = client
+        self.upstream = upstream
+        self.alive = True
+        self.lock = threading.Lock()
+
+    def kill(self) -> None:
+        with self.lock:
+            if not self.alive:
+                return
+            self.alive = False
+        for sock in (self.client, self.upstream):
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+
+class ChaosProxy:
+    def __init__(self, upstream: Tuple[str, int],
+                 listen_host: str = "127.0.0.1"):
+        self._upstream = tuple(upstream)
+        self._lock = threading.Lock()
+        self._links: List[_Link] = []
+        self._stop = threading.Event()
+        # fault controls (read by pump threads under the lock)
+        self.delay_s = 0.0
+        self.chunk_bytes = 0            # 0 = forward whole reads
+        self._truncate_left: Optional[int] = None
+        # counters
+        self.severed = 0                # links killed by fault injection
+        self.forwarded_up = 0           # bytes that reached the learner
+
+        self._lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._lsock.bind((listen_host, 0))
+        self._lsock.listen(16)
+        self._lsock.settimeout(0.2)
+        self.address: Tuple[str, int] = self._lsock.getsockname()[:2]
+        self._acceptor = threading.Thread(target=self._accept_loop,
+                                          name="chaos-accept",
+                                          daemon=True)
+        self._acceptor.start()
+
+    # ------------------------------------------------------------------
+    # fault controls
+
+    def truncate_in(self, n: int) -> None:
+        """Arm: forward exactly ``n`` more client->learner bytes, then
+        sever the link that hits the boundary. The caller computes ``n``
+        to land mid-frame."""
+        with self._lock:
+            self._truncate_left = int(n)
+
+    def sever(self) -> None:
+        """Kill every live link now (both directions, abruptly)."""
+        with self._lock:
+            links = list(self._links)
+            self._links.clear()
+            self.severed += len(links) or 1     # count the cycle even
+            # if the client had not redialed yet (idempotent chaos)
+        for link in links:
+            link.kill()
+
+    def live_links(self) -> int:
+        with self._lock:
+            return sum(1 for li in self._links if li.alive)
+
+    # ------------------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                client, _ = self._lsock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            try:
+                upstream = socket.create_connection(self._upstream,
+                                                    timeout=5.0)
+            except OSError:
+                client.close()
+                continue
+            for sock in (client, upstream):
+                sock.settimeout(0.2)
+                try:
+                    sock.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                except OSError:
+                    pass
+            link = _Link(client, upstream)
+            with self._lock:
+                self._links.append(link)
+            threading.Thread(target=self._pump_up, args=(link,),
+                             name="chaos-up", daemon=True).start()
+            threading.Thread(target=self._pump_down, args=(link,),
+                             name="chaos-down", daemon=True).start()
+
+    def _pump_up(self, link: _Link) -> None:
+        """client -> upstream, with the fault injection applied."""
+        import time
+        while link.alive and not self._stop.is_set():
+            try:
+                data = link.client.recv(65536)
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            if not data:
+                break
+            with self._lock:
+                delay = self.delay_s
+                chunk = self.chunk_bytes
+                trunc = self._truncate_left
+            if trunc is not None:
+                take = min(trunc, len(data))
+                try:
+                    if take:
+                        link.upstream.sendall(data[:take])
+                        self.forwarded_up += take
+                except OSError:
+                    break
+                with self._lock:
+                    self._truncate_left = trunc - take
+                    exhausted = self._truncate_left <= 0
+                    if exhausted:
+                        self._truncate_left = None
+                        self.severed += 1
+                        if link in self._links:
+                            self._links.remove(link)
+                if exhausted:
+                    link.kill()         # the rest of `data` dies here
+                    return
+                continue
+            if delay:
+                time.sleep(delay)
+            try:
+                if chunk and chunk < len(data):
+                    for off in range(0, len(data), chunk):
+                        link.upstream.sendall(data[off:off + chunk])
+                else:
+                    link.upstream.sendall(data)
+                self.forwarded_up += len(data)
+            except OSError:
+                break
+        link.kill()
+
+    def _pump_down(self, link: _Link) -> None:
+        """upstream -> client, transparent."""
+        while link.alive and not self._stop.is_set():
+            try:
+                data = link.upstream.recv(65536)
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            if not data:
+                break
+            try:
+                link.client.sendall(data)
+            except OSError:
+                break
+        link.kill()
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+        with self._lock:
+            links = list(self._links)
+            self._links.clear()
+        for link in links:
+            link.kill()
+        self._acceptor.join(timeout=5.0)

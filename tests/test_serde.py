@@ -207,10 +207,13 @@ def test_module_imports_without_jax():
     r = subprocess.run(
         [sys.executable, "-c",
          "import sys; import repro.distributed.serde, "
-         "repro.distributed.transport; sys.exit(1 if 'jax' in "
+         "repro.distributed.transport, "
+         "repro.distributed.socket_transport, "
+         "repro.distributed.netserve; sys.exit(1 if 'jax' in "
          "sys.modules else 0)"],
         env=env, timeout=120)
-    assert r.returncode == 0, "serde/transport import pulled jax in"
+    assert r.returncode == 0, \
+        "serde/transport/socket/netserve import pulled jax in"
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,615 @@
+"""The TCP socket transport, hardened by fault injection.
+
+Cross-machine transport is where bugs are silent and catastrophic (torn
+frames, stale params, half-dead actors), so this suite leads with a
+deterministic chaos harness (``net_chaos.ChaosProxy``) and pins down:
+
+  * no torn frame EVER reaches the learner as data — a mid-frame sever
+    is counted (torn tail) and discarded, never decoded;
+  * a CRC/magic corruption drops the connection loudly instead of
+    desynchronising the stream;
+  * reconnect resumes the same actor slot with correct per-actor
+    counters, and 50 consecutive sever/reconnect cycles lose at most
+    one in-flight trajectory each, all exactly accounted;
+  * the frame header round-trips property-exactly (hypothesis, via the
+    optional shim) and rejects single-bit flips;
+  * the remote backend trains end to end — including the inference
+    service over sockets — and learns catch to the same bar as the
+    thread/process backends (skipped under BENCH_FAST: that is the CI
+    net-smoke job's fast path).
+
+No jax at module level: chaos/framing tests must not pay a jax import.
+"""
+import collections
+import json
+import os
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st as hyp_st
+from net_chaos import ChaosProxy
+from repro.distributed import serde
+from repro.distributed import socket_transport as st
+from repro.distributed.socket_transport import (SocketActorClient,
+                                                SocketTransport)
+
+FAST = os.environ.get("BENCH_FAST") == "1"
+
+ITEM_SHAPE = (16, 8)
+
+
+def _make_item(actor_id: int, seq: int) -> serde.TrajectoryItem:
+    data = {"x": np.full(ITEM_SHAPE, actor_id * 1000 + seq, np.float32),
+            "seq": np.int32(seq)}
+    return serde.TrajectoryItem(data, seq, actor_id, time.monotonic())
+
+
+def _make_buf(actor_id: int, seq: int) -> bytes:
+    return serde.encode_item(_make_item(actor_id, seq))
+
+
+def _traj_frame(actor_id: int, seq: int) -> bytes:
+    return serde.pack_frame(st.KIND_TRAJ, 0, _make_buf(actor_id, seq))
+
+
+def _hello_frame(role: str, actor_id: int) -> bytes:
+    return serde.pack_frame(
+        st.KIND_HELLO, 0,
+        json.dumps({"role": role, "actor_id": actor_id}).encode())
+
+
+def _dial_data(addr, actor_id: int) -> st.FrameChannel:
+    """A bare data-only producer: HELLO then raw trajectory frames —
+    full determinism for the framing-level chaos tests."""
+    chan = st.FrameChannel(socket.create_connection(addr, timeout=5.0))
+    assert chan.send(st.KIND_HELLO, 0, json.dumps(
+        {"role": "data", "actor_id": actor_id}).encode())
+    return chan
+
+
+def _wait_for(pred, timeout=30.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        assert time.monotonic() < deadline, f"timed out waiting: {msg}"
+        time.sleep(0.01)
+
+
+class _Collector:
+    """Learner-side sink: drains the transport on a thread and keeps
+    every decoded item for bit-exact checks."""
+
+    def __init__(self, transport: SocketTransport):
+        self.transport = transport
+        self.items = []
+        self.by_actor = collections.Counter()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            item = self.transport.get(timeout=0.1)
+            if item is None:
+                continue
+            with self._lock:
+                self.items.append(item)
+                self.by_actor[item.actor_id] += 1
+
+    def count(self, actor_id=None):
+        with self._lock:
+            if actor_id is None:
+                return len(self.items)
+            return self.by_actor[actor_id]
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# frame header: plain unit tests (run with or without hypothesis)
+
+
+def test_frame_roundtrip_including_empty_payload():
+    for kind, stream, payload in [(st.KIND_TRAJ, 0, b"hello"),
+                                  (0, 2**32 - 1, b""),
+                                  (255, 7, bytes(range(256)) * 5)]:
+        frame = serde.pack_frame(kind, stream, payload)
+        k, s, p, consumed = serde.unpack_frame(frame + b"trailing")
+        assert (k, s, p) == (kind, stream, payload)
+        assert consumed == len(frame)
+
+
+def test_frame_header_rejects_bad_magic_and_truncation():
+    frame = serde.pack_frame(st.KIND_TRAJ, 1, b"payload")
+    with pytest.raises(serde.SerdeError, match="magic"):
+        serde.unpack_frame(b"XXXX" + frame[4:])
+    with pytest.raises(serde.SerdeError, match="truncated"):
+        serde.unpack_frame(frame[:-1])
+    with pytest.raises(serde.SerdeError, match="header"):
+        serde.parse_frame_header(frame[:10])
+    with pytest.raises(serde.SerdeError):
+        serde.pack_frame(300, 0, b"")           # kind must fit a byte
+    with pytest.raises(serde.SerdeError):
+        serde.pack_frame(0, -1, b"")            # stream must fit u32
+
+
+def test_frame_crc_rejects_every_single_bit_flip_of_a_small_payload():
+    payload = b"\x00\x7f\xffabc"
+    frame = bytearray(serde.pack_frame(st.KIND_TRAJ, 3, payload))
+    start = serde.FRAME_HEADER_SIZE
+    for byte_idx in range(len(payload)):
+        for bit in range(8):
+            corrupt = bytearray(frame)
+            corrupt[start + byte_idx] ^= 1 << bit
+            with pytest.raises(serde.SerdeError, match="crc"):
+                serde.unpack_frame(bytes(corrupt))
+
+
+def test_frame_header_length_cap():
+    hdr = bytearray(serde.pack_frame(0, 0, b"")[:serde.FRAME_HEADER_SIZE])
+    hdr[9:13] = (serde.MAX_FRAME_PAYLOAD + 1).to_bytes(4, "little")
+    with pytest.raises(serde.SerdeError, match="length"):
+        serde.parse_frame_header(bytes(hdr))
+
+
+# ---------------------------------------------------------------------------
+# frame header: property tests (skip cleanly without hypothesis)
+
+
+@settings(max_examples=80, deadline=None)
+@given(kind=hyp_st.integers(0, 255),
+       stream=hyp_st.integers(0, 2**32 - 1),
+       payload=hyp_st.binary(min_size=0, max_size=2048))
+def test_property_frame_roundtrip(kind, stream, payload):
+    frame = serde.pack_frame(kind, stream, payload)
+    assert serde.unpack_frame(frame)[:3] == (kind, stream, payload)
+
+
+@settings(max_examples=60, deadline=None)
+@given(payload=hyp_st.binary(min_size=1, max_size=512),
+       bitpos=hyp_st.integers(0, 10**9))
+def test_property_frame_crc_rejects_bit_flips(payload, bitpos):
+    frame = bytearray(serde.pack_frame(st.KIND_TRAJ, 1, payload))
+    bitpos %= len(payload) * 8
+    frame[serde.FRAME_HEADER_SIZE + bitpos // 8] ^= 1 << (bitpos % 8)
+    with pytest.raises(serde.SerdeError):
+        serde.unpack_frame(bytes(frame))
+
+
+# ---------------------------------------------------------------------------
+# transport basics over a real loopback socket
+
+
+@pytest.mark.timeout_s(120)
+def test_socket_transport_roundtrip_and_counters():
+    t = SocketTransport(capacity=8, policy="block")
+    try:
+        chan = _dial_data(t.address, actor_id=3)
+        buf = _make_buf(3, 0)
+        assert chan.send(st.KIND_TRAJ, 0, buf)
+        got = t.get(timeout=10.0)
+        assert got is not None
+        assert got.actor_id == 3 and got.param_version == 0
+        assert got.data["x"].tobytes() == \
+            _make_item(3, 0).data["x"].tobytes()
+        _wait_for(lambda: t.snapshot()["frames_in"] == 1)
+        snap = t.snapshot()
+        assert snap["transport"] == "socket"
+        assert snap["bytes_in"] > len(buf)
+        assert snap["per_actor"][3]["frames"] == 1
+        assert snap["torn_tails"] == 0 and snap["decode_errors"] == 0
+        chan.send(st.KIND_CTRL, 0, st.CTRL_BYE)
+        chan.close()
+    finally:
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_client_handshake_assigns_ids_and_ships_config():
+    t = SocketTransport(capacity=8, policy="block", max_actors=2)
+    t.config_extra = lambda aid: {"env": "bandit", "note": f"actor{aid}"}
+    clients = []
+    try:
+        for expect in (0, 1):
+            c = SocketActorClient(t.address, backoff=(0.01, 0.1))
+            cfg = c.connect()
+            clients.append(c)
+            assert cfg is not None
+            assert cfg["actor_id"] == expect
+            assert cfg["env"] == "bandit"
+            assert cfg["note"] == f"actor{expect}"
+        # a third dialer must be turned away (max_actors=2) — its
+        # connect ends refused, flagged stopped via the stop frame
+        extra = SocketActorClient(t.address, backoff=(0.01, 0.1),
+                                  dial_timeout=5.0)
+        assert extra.connect() is None
+        assert extra.stopped
+        # trajectory flow end to end through the client
+        assert clients[0].send_traj(_make_buf(0, 0))
+        got = t.get(timeout=10.0)
+        assert got is not None and got.actor_id == 0
+    finally:
+        for c in clients:
+            c.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_dead_actor_slot_is_reclaimed_by_a_relaunched_actor():
+    """An external actor machine that crashed and was relaunched (fresh
+    nonce, no assigned id) must get the dead actor's slot back instead
+    of a refusal — a full house only refuses when every slot has a
+    LIVE actor."""
+    t = SocketTransport(capacity=8, policy="block", max_actors=1)
+    t.config_extra = lambda aid: {}
+    try:
+        first = SocketActorClient(t.address, backoff=(0.01, 0.1))
+        assert first.connect() is not None
+        assert first.actor_id == 0
+        first.close()           # the machine "crashes"
+        _wait_for(lambda: not t.snapshot()["per_actor"][0]["connected"],
+                  msg="slot released")
+        relaunch = SocketActorClient(t.address, backoff=(0.01, 0.1))
+        cfg = relaunch.connect()
+        assert cfg is not None and cfg["actor_id"] == 0
+        assert not relaunch.refused
+        # and with the slot live again, a surplus actor is refused
+        surplus = SocketActorClient(t.address, backoff=(0.01, 0.1),
+                                    dial_timeout=5.0)
+        assert surplus.connect() is None
+        assert surplus.refused
+        relaunch.close()
+    finally:
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_corrupt_frame_drops_connection_loudly_and_recovers():
+    t = SocketTransport(capacity=8, policy="block")
+    try:
+        chan = _dial_data(t.address, actor_id=1)
+        frame = bytearray(_traj_frame(1, 0))
+        frame[serde.FRAME_HEADER_SIZE + 4] ^= 0x40      # flip one bit
+        chan._sock.sendall(bytes(frame))
+        _wait_for(lambda: t.snapshot()["decode_errors"] == 1,
+                  msg="corruption detected")
+        assert t.get_nowait() is None       # nothing decoded from it
+        # the stream is desynchronised: that connection must be dead
+        _wait_for(lambda: not t.snapshot()["per_actor"][1]["connected"],
+                  msg="corrupt connection dropped")
+        # a fresh connection for the same actor works and counts as a
+        # reconnect
+        chan2 = _dial_data(t.address, actor_id=1)
+        assert chan2.send(st.KIND_TRAJ, 0, _make_buf(1, 1))
+        got = t.get(timeout=10.0)
+        assert got is not None and int(got.data["seq"]) == 1
+        assert t.snapshot()["per_actor"][1]["reconnects"] == 1
+        chan2.close()
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos: split / coalesce / truncate / sever
+
+
+@pytest.mark.timeout_s(180)
+def test_chaos_split_and_coalesced_delivery_is_bit_exact():
+    t = SocketTransport(capacity=64, policy="block")
+    proxy = ChaosProxy(t.address)
+    col = _Collector(t)
+    try:
+        # phase 1: shred every write into 3-byte pieces with latency —
+        # headers and payloads arrive across dozens of recv() calls
+        proxy.chunk_bytes = 3
+        proxy.delay_s = 0.001
+        chan = _dial_data(proxy.address, actor_id=5)
+        n_split = 6
+        for seq in range(n_split):
+            assert chan.send(st.KIND_TRAJ, 0, _make_buf(5, seq))
+        _wait_for(lambda: col.count(5) == n_split, msg="split frames")
+        # phase 2: coalesce — many whole frames in one kernel write
+        proxy.chunk_bytes = 0
+        proxy.delay_s = 0.0
+        batch = b"".join(_traj_frame(5, n_split + i) for i in range(8))
+        chan._sock.sendall(batch)
+        _wait_for(lambda: col.count(5) == n_split + 8,
+                  msg="coalesced frames")
+        seqs = sorted(int(it.data["seq"]) for it in col.items)
+        assert seqs == list(range(n_split + 8))
+        for it in col.items:
+            seq = int(it.data["seq"])
+            assert it.data["x"].tobytes() == \
+                _make_item(5, seq).data["x"].tobytes()
+        snap = t.snapshot()
+        assert snap["decode_errors"] == 0 and snap["torn_tails"] == 0
+        chan.send(st.KIND_CTRL, 0, st.CTRL_BYE)
+        chan.close()
+    finally:
+        col.stop()
+        proxy.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(180)
+def test_chaos_midframe_truncation_loses_exactly_the_inflight_frame():
+    """The acceptance property in miniature: sever a connection halfway
+    through frame #3 of 5. Frames 1-2 arrive intact, frame 3 is a torn
+    tail (counted, never decoded), and after reconnecting the producer
+    resends it — 5 of 5 land bit-exact with exactly one torn tail and
+    one reconnect on the books."""
+    t = SocketTransport(capacity=64, policy="block")
+    proxy = ChaosProxy(t.address)
+    col = _Collector(t)
+    try:
+        hello = _hello_frame("data", 7)
+        frames = [_traj_frame(7, seq) for seq in range(5)]
+        # cut mid-payload of the third frame
+        cut = len(hello) + len(frames[0]) + len(frames[1]) + \
+            len(frames[2]) // 2
+        proxy.truncate_in(cut)
+        chan = st.FrameChannel(
+            socket.create_connection(proxy.address, timeout=5.0))
+        chan._sock.sendall(hello)
+        for f in frames[:3]:
+            chan._sock.sendall(f)
+        _wait_for(lambda: col.count(7) == 2, msg="pre-cut frames")
+        _wait_for(lambda: t.snapshot()["torn_tails"] == 1,
+                  msg="torn tail counted")
+        assert proxy.severed == 1
+        chan.close()
+        # no torn frame ever reaches the learner: nothing but the two
+        # complete items decoded, no decode error (a torn tail is a
+        # detected disconnect, not a parse attempt)
+        assert col.count(7) == 2
+        assert t.snapshot()["decode_errors"] == 0
+        # reconnect into the same slot; resend the lost frame + the rest
+        chan2 = _dial_data(proxy.address, actor_id=7)
+        for f in frames[2:]:
+            chan2._sock.sendall(f)
+        _wait_for(lambda: col.count(7) == 5, msg="post-reconnect frames")
+        seqs = sorted(int(it.data["seq"]) for it in col.items)
+        assert seqs == [0, 1, 2, 3, 4]
+        snap = t.snapshot()
+        assert snap["per_actor"][7]["frames"] == 5
+        assert snap["per_actor"][7]["torn_tails"] == 1
+        assert snap["per_actor"][7]["reconnects"] == 1
+        chan2.send(st.KIND_CTRL, 0, st.CTRL_BYE)
+        chan2.close()
+    finally:
+        col.stop()
+        proxy.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(300)
+def test_chaos_fifty_sever_reconnect_cycles_exact_accounting():
+    """The acceptance criterion: 50 consecutive sever/reconnect cycles.
+    Zero torn frames reach the learner (decode_errors == 0 and every
+    delivered item is bit-exact), each cycle loses at most the one
+    in-flight trajectory, and the per-actor ledger closes exactly:
+    received + lost == sent for every actor."""
+    cycles = 50
+    t = SocketTransport(capacity=4096, policy="block")
+    t.config_extra = lambda aid: {}
+    proxy = ChaosProxy(t.address)
+    col = _Collector(t)
+    client = SocketActorClient(proxy.address, backoff=(0.005, 0.05))
+    try:
+        cfg = client.connect()
+        assert cfg is not None
+        aid = cfg["actor_id"]
+        def quiesce(idle_s=0.15, cap_s=5.0):
+            # wait until the learner's received count stops growing:
+            # whatever this burst will deliver has landed (a frame lost
+            # to the previous sever never arrives, so waiting for an
+            # absolute count would deadlock the harness, not the code
+            # under test)
+            deadline = time.monotonic() + cap_s
+            last, last_change = col.count(aid), time.monotonic()
+            while time.monotonic() < deadline:
+                time.sleep(0.02)
+                cur = col.count(aid)
+                if cur != last:
+                    last, last_change = cur, time.monotonic()
+                elif time.monotonic() - last_change >= idle_s:
+                    return
+
+        sent = 0
+        for _cycle in range(cycles):
+            for _ in range(3):
+                assert client.send_traj(_make_buf(aid, sent))
+                sent += 1
+            # quiesce so the sever below can cost at most the first
+            # frame written into the dead socket next cycle
+            quiesce()
+            proxy.sever()
+        # final stretch on a fresh link: everything sent now arrives
+        for _ in range(3):
+            assert client.send_traj(_make_buf(aid, sent))
+            sent += 1
+        _wait_for(lambda: col.count(aid) >= sent - cycles,
+                  msg="post-chaos catch-up")
+        time.sleep(0.3)                 # let stragglers land
+        received = col.count(aid)
+        lost = sent - received
+        snap = t.snapshot()
+        # exact per-actor accounting: every send is either delivered
+        # (and counted against this actor) or one of the <=1-per-cycle
+        # in-flight losses; nothing duplicated, nothing unattributed
+        assert 0 <= lost <= cycles, (sent, received, lost)
+        assert snap["per_actor"][aid]["frames"] == received
+        assert received == len(set(
+            int(it.data["seq"]) for it in col.items)), "duplicates"
+        # zero torn frames reached the learner: no decode ever failed,
+        # and every payload that did land is bit-identical to what the
+        # producer encoded
+        assert snap["decode_errors"] == 0
+        for it in col.items:
+            seq = int(it.data["seq"])
+            assert it.data["x"].tobytes() == \
+                _make_item(aid, seq).data["x"].tobytes()
+        assert snap["reconnects"] >= cycles
+        assert client.reconnects >= cycles
+    finally:
+        client.close()
+        col.stop()
+        proxy.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_shutdown_handshake_discards_cleanly_without_torn_frames():
+    """The shutdown-discard protocol over TCP: begin_shutdown keeps
+    draining (so a producer mid-send always completes), tells every
+    actor to stop, and counts what it discarded — no torn frames, no
+    hung producer."""
+    t = SocketTransport(capacity=8, policy="block")
+    t.config_extra = lambda aid: {}
+    client = SocketActorClient(t.address, backoff=(0.01, 0.1))
+    try:
+        cfg = client.connect()
+        assert cfg is not None
+        assert client.send_traj(_make_buf(cfg["actor_id"], 0))
+        _wait_for(lambda: t.snapshot()["frames_in"] >= 1)
+        t.begin_shutdown()
+        # the stop control frame reaches the client's ctrl reader
+        _wait_for(lambda: client.stopped, msg="stop frame delivered")
+        # sends during shutdown are drained and discarded, not torn;
+        # the client-side send either completes (discarded learner-side)
+        # or is refused locally because the client now knows it stopped
+        client.send_traj(_make_buf(cfg["actor_id"], 1))
+        client.close()          # says bye on both links
+        t.close()
+        snap = t.snapshot()
+        assert snap["torn_tails"] == 0
+        assert snap["decode_errors"] == 0
+    finally:
+        client.close(bye=False)
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# end to end through the runtime (jax from here on)
+
+
+def _icfg(**kw):
+    from repro.configs.base import ImpalaConfig
+    base = dict(num_actions=3, unroll_length=8, learning_rate=1e-3,
+                entropy_cost=0.003, rmsprop_eps=0.01)
+    base.update(kw)
+    return ImpalaConfig(**base)
+
+
+def _assert_no_orphans(t0):
+    import multiprocessing as mp
+    deadline = time.monotonic() + 30
+    while mp.active_children() and time.monotonic() < deadline:
+        time.sleep(0.2)
+    assert mp.active_children() == [], (
+        f"orphans after {time.monotonic() - t0:.0f}s")
+
+
+@pytest.mark.timeout_s(300)
+def test_remote_actors_train_over_loopback_and_close_cleanly():
+    from repro.distributed import run_async_training
+    t0 = time.monotonic()
+    tracker, metrics, tel = run_async_training(
+        "bandit", _icfg(), num_envs=4, steps=6, num_actors=2,
+        actor_backend="remote", transport="socket",
+        queue_capacity=4, queue_policy="block", max_batch_trajs=2, seed=0)
+    assert tel["learner_updates"] == 6
+    assert np.isfinite(float(metrics["loss/total"]))
+    assert tel["actors"]["backend"] == "remote"
+    q = tel["queue"]
+    assert q["transport"] == "socket"
+    assert q["frames_in"] >= 6 and q["bytes_in"] > 0
+    assert q["decode_errors"] == 0 and q["torn_tails"] == 0
+    assert q["actors_seen"] == 2
+    assert tel["lag"]["measured"] >= 6
+    _assert_no_orphans(t0)
+
+
+@pytest.mark.timeout_s(300)
+def test_remote_inference_actors_train_over_loopback():
+    """Inference mode over sockets: remote machines hold no params at
+    all — observations go up, actions and versions come down."""
+    from repro.distributed import run_async_training
+    t0 = time.monotonic()
+    tracker, metrics, tel = run_async_training(
+        "bandit", _icfg(), num_envs=4, steps=6, num_actors=2,
+        actor_backend="remote", actor_mode="inference",
+        transport="socket", queue_capacity=4, queue_policy="block",
+        max_batch_trajs=2, seed=0)
+    assert tel["learner_updates"] == 6
+    assert np.isfinite(float(metrics["loss/total"]))
+    inf = tel["inference"]
+    assert inf["flushes"] > 0
+    assert inf["requests"] >= 6 * _icfg().unroll_length
+    assert tel["queue"]["frames_in"] >= 6
+    assert tel["queue"]["decode_errors"] == 0
+    assert tel["lag"]["measured"] >= 6
+    _assert_no_orphans(t0)
+
+
+@pytest.mark.timeout_s(300)
+def test_remote_backend_validation():
+    from repro.distributed import run_async_training
+    with pytest.raises(ValueError, match="socket"):
+        run_async_training("bandit", _icfg(), num_envs=4, steps=1,
+                           actor_backend="remote", transport="shm")
+    with pytest.raises(ValueError, match="remote"):
+        run_async_training("bandit", _icfg(), num_envs=4, steps=1,
+                           actor_backend="thread", transport="socket")
+    from repro.data.envs import make_bandit
+    with pytest.raises(ValueError, match="name"):
+        run_async_training(make_bandit(), _icfg(), num_envs=4, steps=1,
+                           actor_backend="remote", transport="socket")
+
+
+@pytest.mark.skipif(FAST, reason="net-smoke fast path (BENCH_FAST=1)")
+@pytest.mark.timeout_s(540)
+def test_remote_actors_learn_catch_both_modes():
+    """Acceptance: the same catch run as the thread/process backends'
+    learning bar (test_process_actors / test_inference_service), with
+    actors on the far side of a real TCP loopback — in trajectory mode
+    AND in inference mode, under the SIGALRM watchdog."""
+    from repro.configs.base import ImpalaConfig
+    from repro.core.driver import small_arch
+    from repro.data.envs import make_catch
+    from repro.distributed import run_async_training
+
+    env = make_catch()
+    arch = small_arch(env)
+    cfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=20,
+                       learning_rate=6e-4, entropy_cost=0.003,
+                       rmsprop_eps=0.01)
+    results = {}
+    for mode in ("unroll", "inference"):
+        tracker, metrics, tel = run_async_training(
+            "catch", cfg, num_envs=32, steps=400, num_actors=2,
+            actor_backend="remote", actor_mode=mode, transport="socket",
+            queue_capacity=8, queue_policy="block", max_batch_trajs=4,
+            seed=0, arch=arch)
+        returns = tracker.completed
+        early = float(np.mean(returns[:500]))
+        late = float(np.mean(returns[-100:]))
+        results[mode] = (early, late, tel)
+        assert tel["learner_updates"] == 400, mode
+        assert np.isfinite(float(metrics["loss/total"])), mode
+        assert tel["lag"]["measured"] > 0, (mode, tel["lag"])
+        assert tel["queue"]["frames_in"] > 0, mode
+        assert tel["queue"]["decode_errors"] == 0, mode
+        assert tel["queue"]["torn_tails"] == 0, mode
+
+    for mode, (early, late, tel) in results.items():
+        # random play on catch is ~-0.6; require a decisive climb
+        assert late > early + 0.15, (mode, early, late)
+        assert late > -0.3, (mode, early, late)
+    assert results["inference"][2]["inference"]["requests"] > 0

@@ -154,6 +154,38 @@ def test_shm_stress_producers_vs_slow_consumer(policy):
     assert mp.active_children() == []
 
 
+@pytest.mark.timeout_s(60)
+def test_shm_drain_after_close_is_not_attributed_as_rejection():
+    """Regression for the drain-after-close ordering race the socket
+    chaos harness surfaced: under drop_newest, a drain-side put that
+    fails because the inner queue *closed* mid-shutdown was being
+    attributed as a policy rejection — charging the producing actor for
+    a loss the policy never decided. Reproduced deterministically by
+    closing the inner queue inside the race window (after the drain's
+    discard check, before its put)."""
+    t = ShmTransport(capacity=4, policy="drop_newest")
+    rejected = []
+    t.on_reject = lambda item: rejected.append(item.actor_id)
+    accepted = []
+    t.on_item = lambda item: accepted.append(item.actor_id)
+    try:
+        # simulate the window: the queue closes while the drain thread
+        # is already past its discard check for the next buffer
+        t._inner.close()
+        item = serde.TrajectoryItem({"x": np.zeros(2, np.float32)},
+                                    0, 5, 0.0)
+        assert t.put(item, timeout=1.0)     # onto the wire
+        deadline = time.monotonic() + 30
+        while t.wire_received < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert t.wire_received == 1
+        time.sleep(0.3)     # give a buggy drain the chance to attribute
+        assert rejected == [], "shutdown discard charged as rejection"
+        assert accepted == []
+    finally:
+        t.close()
+
+
 @pytest.mark.timeout_s(120)
 def test_shm_close_unblocks_producers_without_orphans():
     """Producers parked on a full wire must exit promptly once the
