@@ -26,6 +26,14 @@ Variants mirror Figure 2:
                   learner's device, §3.1), zero per-actor params
   impala_infserve_proc  the same service fed by actor processes: serde
                   observation/action frames over the service wire
+  impala_2learner two learner *processes* (a LearnerGroup), the actor
+                  slots sharded between them, gradients mean-reduced
+                  over the framed channel every round; fps counts the
+                  group's summed learner-consumed frames. On a 2-core
+                  box the two jitted train steps contend for the same
+                  cores the actors need (like impala_proc, the win
+                  needs cores); the variant is tracked so the scaling
+                  is measured, not assumed
 
 Besides the CSV rows, the run writes ``BENCH_throughput.json`` (variant
 -> frames/sec plus run metadata) so the perf trajectory is tracked
@@ -110,6 +118,23 @@ def _measure_async(env_name: str, num_envs: int = 32, unroll: int = 20,
     return tel["frames_per_sec"]
 
 
+def _measure_group(env_name: str, num_envs: int = 32, unroll: int = 20,
+                   iters: int = 20, num_learners: int = 2,
+                   num_actors: int = 4) -> float:
+    from repro.distributed import run_group_training
+
+    env = make_env(env_name)
+    icfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=unroll)
+    _, _, tel = run_group_training(
+        env_name, icfg, num_envs, iters, num_learners=num_learners,
+        num_actors=num_actors, actor_backend="thread",
+        queue_capacity=8, queue_policy="block", max_batch_trajs=4,
+        seed=0, arch=small_arch(env), warm_buckets=True)
+    # the group's throughput is the SUM of per-learner steady-state
+    # consumption (merge_telemetry already sums frames_per_sec)
+    return tel["frames_per_sec"]
+
+
 def _write_json(fps_by_env) -> None:
     out = {
         "benchmark": "throughput",
@@ -185,6 +210,12 @@ def run() -> None:
         emit(f"throughput/{env_name}/impala_infserve_proc",
              1e6 / max(fps["impala_infserve_proc"], 1e-9),
              f"fps={fps['impala_infserve_proc']:.0f}")
+        fps["impala_2learner"] = _measure_group(
+            env_name, iters=async_iters, num_learners=2,
+            num_actors=async_actors)
+        emit(f"throughput/{env_name}/impala_2learner",
+             1e6 / max(fps["impala_2learner"], 1e-9),
+             f"fps={fps['impala_2learner']:.0f}")
         emit(f"throughput/{env_name}/impala_speedup_vs_sync_step", 0.0,
              f"x{fps['impala'] / max(fps['a2c_sync_step'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/async_speedup_vs_sync_traj", 0.0,
@@ -195,4 +226,6 @@ def run() -> None:
              f"x{fps['impala_socket'] / max(fps['impala_proc'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/infserve_speedup_vs_async", 0.0,
              f"x{fps['impala_infserve'] / max(fps['impala_async'], 1e-9):.2f}")
+        emit(f"throughput/{env_name}/group2_vs_proc", 0.0,
+             f"x{fps['impala_2learner'] / max(fps['impala_proc'], 1e-9):.2f}")
     _write_json(fps_by_env)

@@ -124,6 +124,54 @@ def build_train_step(arch_cfg: ArchConfig, cfg: ImpalaConfig,
     return train_step, optimizer
 
 
+def build_grad_apply_steps(arch_cfg: ArchConfig, cfg: ImpalaConfig,
+                           num_actions: int,
+                           optimizer: opt_lib.Optimizer = None,
+                           vtrace_impl: str = "auto"):
+    """``train_step`` split at the gradient: ``grad_step(params, batch)
+    -> (grads, metrics)`` and ``apply_step(params, opt_state, step,
+    grads) -> (params, opt_state, metrics)`` — the shape a
+    data-parallel learner group needs, with a gradient exchange (mean
+    over the group) between the two halves.
+
+    Clipping happens in ``apply_step``, i.e. on the *exchanged mean*:
+    clip-after-average is the data-parallel-faithful choice (it equals
+    clipping the global-batch gradient a single learner with the
+    concatenated batch would have computed, up to the averaging
+    order), and it keeps every replica applying bit-identical updates
+    because they all clip the same broadcast buffer.
+
+    Composing the halves locally (``apply_step(params, opt_state, step,
+    grad_step(params, batch)[0])``) is mathematically the fused
+    ``train_step``; the fused path stays the single-learner default
+    because one jit program fuses better than two.
+    """
+    if optimizer is None:
+        optimizer = opt_lib.rmsprop(decay=cfg.rmsprop_decay,
+                                    eps=cfg.rmsprop_eps,
+                                    momentum=cfg.rmsprop_momentum)
+    lr_fn = opt_lib.linear_schedule(cfg.learning_rate, 0.0,
+                                    cfg.lr_anneal_steps)
+    loss_fn = build_loss_fn(arch_cfg, cfg, num_actions, vtrace_impl)
+
+    def grad_step(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def apply_step(params, opt_state, step, grads):
+        grads, grad_norm = opt_lib.clip_by_global_norm(
+            grads, cfg.grad_clip_norm)
+        lr = lr_fn(step)
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              lr)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, {"opt/grad_norm": grad_norm,
+                                   "opt/lr": lr}
+
+    return grad_step, apply_step, optimizer
+
+
 def opt_state_specs(param_specs: PyTree, cfg: ImpalaConfig,
                     mixed_precision: bool = False) -> PyTree:
     """Spec tree for the optimizer state (mirrors param specs)."""

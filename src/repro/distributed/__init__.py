@@ -19,10 +19,20 @@ Decoupled acting and learning (paper §3) as a layered pipeline:
               per-step policy forward on the learner's device, fed by
               thread clients or serde frames from actor processes
   pools       ActorPool (threads) / ProcessActorPool (spawned workers)
-  paramstore  versioned publish/pull, plus a serialized subscribe path
+  paramstore  versioned publish/pull (plus delegated ``publish_at`` for
+              learner groups), and a serialized subscribe path
               (encoded once per version) for process actors
-  runtime     the dynamic-batching, donating learner loop over any of
-              the above
+  learner     the Learner worker object: dynamic batch collection,
+              donated (or split grad/apply) train step, versioned
+              publish, telemetry — shared by the single-learner
+              runtime and the multi-learner group
+  group       LearnerGroup: N learner worker processes over disjoint
+              actor-slot shards, gradients mean-reduced over the
+              framed channel (GradientExchange: hub + spokes,
+              stale-grad drop rule), one designated publisher
+              numbering the version stream
+  runtime     composition root: build env/store/service/transport/pool
+              and run one Learner over them
 
 Exports resolve lazily (PEP 562): importing ``repro.distributed.serde``
 or ``.transport`` from an actor child process must not drag jax in.
@@ -41,8 +51,17 @@ _EXPORTS = {
     "tree_spec": "repro.distributed.serde",
     "ParameterStore": "repro.distributed.paramstore",
     "ACTOR_MODES": "repro.distributed.runtime",
-    "MultiTracker": "repro.distributed.runtime",
+    "Learner": "repro.distributed.learner",
+    "MultiTracker": "repro.distributed.learner",
     "run_async_training": "repro.distributed.runtime",
+    "GradientExchange": "repro.distributed.group",
+    "NullExchange": "repro.distributed.group",
+    "GradHub": "repro.distributed.group",
+    "SpokeExchange": "repro.distributed.group",
+    "GroupTracker": "repro.distributed.group",
+    "merge_telemetry": "repro.distributed.group",
+    "shard_slots": "repro.distributed.group",
+    "run_group_training": "repro.distributed.group",
     "run_actor_loop": "repro.distributed.runner",
     "run_inference_actor_loop": "repro.distributed.runner",
     "InferenceService": "repro.distributed.inference",
@@ -79,6 +98,11 @@ def __dir__():
 
 if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
     from repro.distributed.actor_pool import ActorPool
+    from repro.distributed.group import (GradHub, GradientExchange,
+                                         GroupTracker, NullExchange,
+                                         SpokeExchange, merge_telemetry,
+                                         run_group_training, shard_slots)
+    from repro.distributed.learner import Learner, MultiTracker
     from repro.distributed.netserve import remote_actor_main
     from repro.distributed.procpool import SocketActorPool
     from repro.distributed.socket_transport import (SocketActorClient,
@@ -90,8 +114,7 @@ if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
     from repro.distributed.procpool import ProcessActorPool
     from repro.distributed.runner import (run_actor_loop,
                                           run_inference_actor_loop)
-    from repro.distributed.runtime import (ACTOR_MODES, MultiTracker,
-                                           run_async_training)
+    from repro.distributed.runtime import ACTOR_MODES, run_async_training
     from repro.distributed.serde import (TrajectoryItem, decode_item,
                                          decode_tree, decode_tree_into,
                                          encode_item, encode_tree,

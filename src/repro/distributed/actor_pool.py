@@ -37,13 +37,21 @@ class PoolAccounting:
     dict the runtime's telemetry embeds. Loss attribution can arrive
     from several threads at once (a producer counting its own rejection,
     the queue's eviction callback, a transport drain thread), so the
-    ``rejected`` ledger is written under a lock."""
+    ``rejected`` ledger is written under a lock.
+
+    ``slot_base`` is the pool's first *global* actor slot id: a learner
+    group shards the run's slots over its learners, and each pool owns
+    the contiguous range [slot_base, slot_base + num_actors). Items
+    carry global ids (that is what keeps an actor's RNG/env-seed stream
+    independent of the sharding); the ledgers here are indexed locally,
+    so attribution subtracts the base."""
 
     backend = "?"
 
-    def _init_accounting(self, num_actors: int, frames_per_traj: int
-                         ) -> None:
+    def _init_accounting(self, num_actors: int, frames_per_traj: int,
+                         slot_base: int = 0) -> None:
         self.num_actors = num_actors
+        self.slot_base = slot_base
         self.frames = [0] * num_actors          # env frames produced
         self.trajectories = [0] * num_actors    # accepted into the queue
         self.rejected = [0] * num_actors        # lost (rejected/evicted)
@@ -53,11 +61,11 @@ class PoolAccounting:
         self._frames_per_traj = frames_per_traj
 
     def _note_accept(self, item: TrajectoryItem) -> None:
-        self.trajectories[item.actor_id] += 1
+        self.trajectories[item.actor_id - self.slot_base] += 1
 
     def _note_loss(self, item: TrajectoryItem) -> None:
         with self._acct_lock:
-            self.rejected[item.actor_id] += 1
+            self.rejected[item.actor_id - self.slot_base] += 1
 
     def _note_frames(self, idx: int) -> None:
         self.frames[idx] += self._frames_per_traj
@@ -77,6 +85,7 @@ class PoolAccounting:
                 fps = (total_frames - self._steady_frames0) / dt
         return {
             "num_actors": self.num_actors,
+            "slot_base": self.slot_base,
             "backend": self.backend,
             "frames": total_frames,
             "trajectories": sum(self.trajectories),
@@ -92,12 +101,18 @@ class ActorPool(PoolAccounting):
 
     def __init__(self, env, arch_cfg, icfg, num_envs: int, num_actors: int,
                  store: ParameterStore, queue: Transport, seed: int = 0,
-                 service=None):
+                 service=None, slot_base: int = 0):
         """``service`` (an ``InferenceService``) switches the pool to
         inference mode: no per-actor policy or params — one *driver*
         thread multiplexes all logical actors' host-side env stepping
         against the shared batched forward (paper §3.1's dynamic
-        batching); see ``_run_driver``."""
+        batching); see ``_run_driver``.
+
+        ``slot_base`` shifts this pool's actors onto the global slot
+        range [slot_base, slot_base + num_actors) — workers derive
+        their RNG stream from the *global* id, so a sharded learner
+        group acts out exactly the per-actor randomness one learner
+        owning all the slots would."""
         if num_actors < 1:
             raise ValueError("num_actors must be >= 1")
         self.env = env
@@ -117,7 +132,8 @@ class ActorPool(PoolAccounting):
                 self._builders.append(
                     actor_lib.build_actor(env, arch_cfg, icfg, num_envs))
         self.errors: List[BaseException] = []
-        self._init_accounting(num_actors, num_envs * icfg.unroll_length)
+        self._init_accounting(num_actors, num_envs * icfg.unroll_length,
+                              slot_base)
         # attribution hooks: evictions always come back through the
         # transport; accept/reject only when the policy runs drain-side
         self._counts_at_drain = not queue.rejects_at_put
@@ -153,7 +169,7 @@ class ActorPool(PoolAccounting):
     def _run(self, idx: int) -> None:
         try:
             run_actor_loop(
-                actor_id=idx,
+                actor_id=self.slot_base + idx,
                 builder=self._builders[idx],
                 seed=self.seed,
                 pull_params=self.store.pull,
@@ -173,13 +189,16 @@ class ActorPool(PoolAccounting):
         fold_in(seed, actor_id) RNG stream, own trajectory stream."""
         try:
             run_inference_driver_loop(
-                actor_ids=list(range(self.num_actors)),
+                actor_ids=list(range(self.slot_base,
+                                     self.slot_base + self.num_actors)),
                 env=self.env, arch_cfg=self._arch_cfg, icfg=self._icfg,
                 num_envs=self.num_envs, seed=self.seed,
                 service=self.service,
-                emit=self._emit,
+                emit=lambda aid, item: self._emit(aid - self.slot_base,
+                                                  item),
                 should_stop=self._stop.is_set,
-                on_unroll=self._note_frames)
+                on_unroll=lambda aid: self._note_frames(
+                    aid - self.slot_base))
         except BaseException as e:  # surface in the learner thread
             self.errors.append(e)
             self.queue.close()

@@ -116,7 +116,13 @@ class InferenceService:
 
     def __init__(self, env, arch_cfg, icfg, store: ParameterStore, *,
                  num_clients: int, flush_timeout_s: float = 0.02,
-                 max_batch_requests: Optional[int] = None, seed: int = 0):
+                 max_batch_requests: Optional[int] = None, seed: int = 0,
+                 rng_key=None):
+        """``rng_key`` (a jax PRNG key) overrides the seed-derived
+        sampling stream — a learner group passes each member's
+        ``fold_in(key(seed), learner_id)`` key so no two learners'
+        services ever share an action-sampling stream; single-learner
+        runs keep the plain ``seed`` path byte-for-byte."""
         if arch_cfg.family != "impala_cnn":
             raise ValueError(
                 "InferenceService batches the per-step conv-LSTM policy; "
@@ -130,7 +136,8 @@ class InferenceService:
         self.flush_timeout_s = flush_timeout_s
         self.max_batch_requests = _pow2_floor(
             max_batch_requests or num_clients)
-        self._key = jax.random.fold_in(jax.random.key(seed), 0x1f5)
+        base_key = jax.random.key(seed) if rng_key is None else rng_key
+        self._key = jax.random.fold_in(base_key, 0x1f5)
         self._flush_seq = 0
         self._flush_fns: Dict[int, Callable] = {}   # bucket -> jitted fn
         self._warmed = False

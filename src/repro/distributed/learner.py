@@ -1,0 +1,588 @@
+"""The learner worker, extracted from the ``run_async_training``
+monolith so one implementation serves both the single-learner runtime
+and the multi-learner ``LearnerGroup`` (paper §3's *several learners,
+each owning a shard of actors*).
+
+A ``Learner`` owns exactly the four things the old loop hard-coded:
+
+  batch collection   drain ONE ``Transport`` with dynamic batching
+                     (power-of-two buckets, oldest-first requeue of
+                     overflow, optional linger deadline) into per-bucket
+                     ping-ponged host staging buffers;
+  train step         the donated fused ``train_step`` when it trains
+                     alone, or a split ``grad_step`` / ``apply_step``
+                     pair when a ``GradientExchange`` sits between the
+                     backward pass and the optimizer (data-parallel
+                     learners apply the *exchanged mean*, so replicas
+                     stay bit-identical);
+  publish            every update lands in the learner's own
+                     ``ParameterStore`` — self-versioned when alone,
+                     at the exchange-delegated version when grouped
+                     (one designated publisher numbers the rounds, so
+                     every actor in the group sees a single monotonic
+                     version stream);
+  telemetry          the same snapshot keys the runtime always
+                     reported (updates, fps, batch/lag histograms,
+                     queue, actors, inference), plus ``learner_id`` /
+                     ``exchange`` sections only when grouped.
+
+Per-learner randomness is ``fold_in(key(seed), learner_id)`` —
+``self.key``, which seeds the grouped inference service's sampling
+stream — while parameter *initialization* stays at the raw
+``key(seed)`` on every learner: data-parallel replicas must start
+identical, and ``--learners 1`` must bit-match the single-learner run.
+
+Deliberately no jax import at module level: ``LearnerGroup`` worker
+processes import this module (like the transports) before paying the
+jax import, and the import-guard test pins that edge.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.metrics import EpisodeTracker
+from repro.distributed.paramstore import ParameterStore
+from repro.distributed.serde import TrajectoryItem
+
+PyTree = Any
+
+
+class MultiTracker:
+    """Episode-return accounting across actor-local env batches.
+
+    ``slot_base`` maps *global* actor slot ids (what a sharded pool
+    stamps into trajectories) onto this learner's local tracker list —
+    learner k of a group owns slots [base, base+n) and sees only those.
+    Completion times are recorded (CLOCK_MONOTONIC, comparable across
+    processes on one box) so a group can merge the per-learner streams
+    back into one chronological return history."""
+
+    def __init__(self, num_actors: int, num_envs: int,
+                 slot_base: int = 0):
+        self.trackers = [EpisodeTracker(num_envs) for _ in range(num_actors)]
+        self.slot_base = slot_base
+        self._merged: List[float] = []
+        self._merged_at: List[float] = []
+
+    def update(self, actor_id: int, rewards, dones) -> None:
+        t = self.trackers[actor_id - self.slot_base]
+        before = len(t.completed)
+        t.update(np.asarray(rewards), np.asarray(dones))
+        # merge in consumption order so mean_return's last-n window is
+        # chronological, not actor-grouped
+        fresh = t.completed[before:]
+        if fresh:
+            now = time.monotonic()
+            self._merged.extend(fresh)
+            self._merged_at.extend([now] * len(fresh))
+
+    @property
+    def completed(self) -> List[float]:
+        return list(self._merged)
+
+    @property
+    def completed_timed(self) -> List[Tuple[float, float]]:
+        """(monotonic completion time, return) pairs, consumption
+        order — what a group merge sorts on."""
+        return list(zip(self._merged_at, self._merged))
+
+    def mean_return(self, last_n: int = 100) -> float:
+        if not self._merged:
+            return float("nan")
+        return float(np.mean(self._merged[-last_n:]))
+
+
+def _buckets(max_batch_trajs: int) -> List[int]:
+    """Power-of-two stack sizes <= max, descending (compile-count bound)."""
+    out, b = [], 1
+    while b <= max_batch_trajs:
+        out.append(b)
+        b *= 2
+    return out[::-1]
+
+
+def _collect_batch(queue, buckets: List[int], first: TrajectoryItem,
+                   linger_s: float = 0.0) -> List[TrajectoryItem]:
+    """Starting from ``first`` (already popped), drain the queue up to
+    the largest bucket, then trim to the largest power-of-two that
+    fits — requeueing the overflow *at the front, newest first*, so the
+    queue keeps oldest-first order and the next batch starts with the
+    trajectories this one could not stack.
+
+    ``linger_s`` is the learner-side flush deadline (the mirror of the
+    inference service's): rather than greedily training on whatever is
+    queued, wait up to this long for the bucket to fill. A starved
+    learner taking singleton batches pays the update's fixed cost per
+    trajectory — and on a shared host, those extra updates steal the
+    very cores the actors need to refill the queue. The deadline bounds
+    the staleness this adds; a full bucket never waits."""
+    items = [first]
+    deadline = (time.monotonic() + linger_s) if linger_s > 0 else None
+    while len(items) < buckets[0]:
+        nxt = queue.get_nowait()
+        if nxt is None:
+            if deadline is None:
+                break
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            nxt = queue.get(timeout=remaining)
+            if nxt is None:
+                break
+        items.append(nxt)
+    k = next(b for b in buckets if b <= len(items))
+    for extra in reversed(items[k:]):
+        queue.requeue_front(extra)
+    return items[:k]
+
+
+def _device_put_copies() -> bool:
+    """Probe whether ``jax.device_put`` of a host buffer COPIES on this
+    backend. The CPU backend zero-copy *aliases* 64-byte-aligned numpy
+    buffers (measured on jax 0.4.37, ~half of all allocations): the
+    returned "device" array IS the host memory, so a staging buffer
+    that produced one can never be rewritten while any consumer might
+    still read the batch. Probed on a deterministically 64-aligned
+    view so the answer doesn't depend on allocator luck."""
+    import jax
+
+    raw = np.zeros(1024 + 16, np.float32)
+    off = (-raw.ctypes.data) % 64 // raw.itemsize
+    aligned = raw[off:off + 1024]
+    dev = jax.device_put(aligned)
+    jax.block_until_ready(dev)
+    aligned[0] = 1.0
+    return float(np.asarray(dev)[0]) == 0.0
+
+
+class _HostStager:
+    """Per-(bucket, structure) host staging buffers for the learner's
+    consume path.
+
+    Serialized transports deliver numpy (often read-only view) leaves;
+    stacking ``k`` trajectories with ``np.concatenate`` allocates one
+    intermediate per leaf per update. Instead each leaf is written in
+    place into a staging buffer and the whole tree moves with one
+    ``device_put``. Buffer lifetime depends on what ``device_put``
+    does, probed once:
+
+      copies (accelerators)   two preallocated sets per bucket,
+          **ping-ponged**, and before a set is *re*-written the batch
+          it produced two updates ago is ``block_until_ready``-ed — the
+          ping-pong alone only pipelines the async H2D transfer, it is
+          not a completion guarantee (by reuse time the transfer has
+          long finished, so the block is effectively free).
+      aliases (CPU backend)   the "transfer" is free but the batch IS
+          the staging memory, with no event to wait on for its
+          consumers — so buffers are freshly allocated per stack and
+          never reused (same copy count as the concatenate path, still
+          a single device_put for the whole tree).
+    """
+
+    def __init__(self):
+        self._slots: Dict[Any, list] = {}
+        self._reuse = _device_put_copies()
+
+    def stack(self, items: List[TrajectoryItem]) -> Optional[PyTree]:
+        """Staged stack of >=2 same-shaped numpy trajectories; None if
+        the items are not uniform host trees (caller falls back)."""
+        import jax
+
+        datas = [it.data for it in items]
+        leaves0, treedef = jax.tree.flatten(datas[0])
+        if not all(isinstance(x, np.ndarray) for x in leaves0):
+            return None
+        shapes = tuple((x.shape, x.dtype.name) for x in leaves0)
+        for d in datas[1:]:
+            ls, td = jax.tree.flatten(d)
+            if td != treedef or \
+                    tuple((x.shape, x.dtype.name) for x in ls) != shapes:
+                return None                 # ragged: not the hot path
+        k = len(items)
+
+        def alloc():
+            return [np.empty((x.shape[0] * k,) + x.shape[1:], x.dtype)
+                    for x in leaves0]
+
+        if self._reuse:
+            key = (k, treedef, shapes)
+            slot = self._slots.get(key)
+            if slot is None:
+                # [two buffer sets, next index, last batch per set]
+                slot = self._slots[key] = [(alloc(), alloc()), 0,
+                                           [None, None]]
+            idx = slot[1]
+            bufs = slot[0][idx]
+            slot[1] ^= 1
+            if slot[2][idx] is not None:
+                jax.block_until_ready(slot[2][idx])
+        else:
+            bufs = alloc()
+        for i, d in enumerate(datas):
+            for buf, leaf in zip(bufs, jax.tree.leaves(d)):
+                b = leaf.shape[0]
+                buf[i * b:(i + 1) * b] = leaf
+        out = jax.device_put(jax.tree.unflatten(treedef, bufs))
+        if self._reuse:
+            slot[2][idx] = out
+        return out
+
+
+def _stack(items: List[TrajectoryItem],
+           stager: Optional[_HostStager] = None) -> PyTree:
+    import jax
+    import jax.numpy as jnp
+
+    if len(items) == 1:
+        return items[0].data
+
+    if stager is not None:
+        staged = stager.stack(items)
+        if staged is not None:
+            return staged
+
+    def cat(*xs):
+        # fallback: host concatenate for numpy leaves (one copy, feeding
+        # the jit's host->device transfer), device concatenate otherwise
+        if isinstance(xs[0], np.ndarray):
+            return np.concatenate(xs, axis=0)
+        return jnp.concatenate(xs, axis=0)
+
+    return jax.tree.map(cat, *[it.data for it in items])
+
+
+class Learner:
+    """One learner worker: drains a ``Transport`` with dynamic
+    batching, trains, publishes versioned params, reports telemetry.
+
+    Construction builds the params/optimizer/train-step state and the
+    learner's own ``ParameterStore`` (available as ``self.store`` for
+    wiring the actor pool / inference service); ``attach`` binds the
+    pool (and optional service) once they exist; ``run`` executes the
+    training loop end to end, owning the start/stop/join/close
+    lifecycle exactly as ``run_async_training`` always did.
+
+    ``exchange`` (a ``group.GradientExchange``) switches the update
+    from the fused donated ``train_step`` to the data-parallel split:
+    jitted backward pass -> host gradient leaves -> synchronous
+    exchange (mean over the group, stale contributions dropped by the
+    hub's rule) -> donated ``apply_step`` of the *mean* -> publish at
+    the exchange-delegated version. Every learner applies the same
+    broadcast mean with the same optimizer state, so the replicas stay
+    bit-identical without ever shipping parameters between learners.
+    """
+
+    def __init__(self, *, arch, icfg, num_actions: int, num_envs: int,
+                 num_actors: int, transport, seed: int = 0,
+                 learner_id: int = 0, num_learners: int = 1,
+                 slot_base: int = 0, actor_mode: str = "unroll",
+                 max_batch_trajs: int = 4, batch_linger_s: float = 0.0,
+                 donate: bool = True, start_step: int = 0,
+                 initial_params: Optional[PyTree] = None,
+                 exchange=None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import learner as learner_lib
+        from repro.models import backbone as bb
+        from repro.models import common as pcommon
+
+        if max_batch_trajs < 1:
+            raise ValueError(f"max_batch_trajs must be >= 1, got "
+                             f"{max_batch_trajs}")
+        self.arch = arch
+        self.icfg = icfg
+        self.learner_id = learner_id
+        self.num_learners = num_learners
+        self.slot_base = slot_base
+        self.actor_mode = actor_mode
+        self.donate = donate
+        self.batch_linger_s = batch_linger_s
+        self.queue = transport
+        self._exchange = exchange
+        # learner-local randomness (NOT param init): fold the learner id
+        # into the run seed so two learners of one group never share a
+        # stream. Today this feeds the grouped inference service's
+        # action-sampling key (see runtime._setup); any future
+        # learner-local stochastic op must draw from it too.
+        self.key = jax.random.fold_in(jax.random.key(seed), learner_id)
+
+        specs = bb.backbone_specs(arch, num_actions)
+        if initial_params is not None:
+            params = initial_params
+        else:
+            # param init stays at the RAW seed on every learner:
+            # data-parallel replicas must start identical, and
+            # --learners 1 must bit-match the single-learner run
+            params = pcommon.init_params(specs, jax.random.key(seed))
+        if exchange is None:
+            train_step, opt = learner_lib.build_train_step(
+                arch, icfg, num_actions)
+            if donate:
+                train_step = jax.jit(train_step, donate_argnums=(0, 1))
+            else:
+                train_step = jax.jit(train_step)
+            self._train_step = train_step
+            self._grad_step = None
+            self._apply_step = None
+        else:
+            grad_step, apply_step, opt = learner_lib.build_grad_apply_steps(
+                arch, icfg, num_actions)
+            self._train_step = None
+            self._grad_step = jax.jit(grad_step)
+            if donate:
+                self._apply_step = jax.jit(apply_step,
+                                           donate_argnums=(0, 1))
+            else:
+                self._apply_step = jax.jit(apply_step)
+        # one jitted whole-tree device copy: the decoupling between the
+        # learner's donated working tree and every reference that
+        # escapes (store, service, on_update). XLA never aliases
+        # non-donated outputs to inputs, so the copy's buffers are
+        # independent by construction.
+        self._snapshot = jax.jit(lambda tree: jax.tree.map(jnp.copy, tree))
+        self._params = params
+        self._opt_state = opt.init(params)
+        self.store = ParameterStore(
+            self._snapshot(params) if donate else params,
+            version=start_step)
+        self.start_step = start_step
+        self.tracker = MultiTracker(num_actors, num_envs,
+                                    slot_base=slot_base)
+        self._buckets = _buckets(max_batch_trajs)
+        self._stager = _HostStager()
+        self._frames_per_traj = num_envs * icfg.unroll_length
+        self.pool = None
+        self.service = None
+
+        # telemetry state (same fields the runtime always tracked)
+        self.lag_hist: collections.Counter = collections.Counter()
+        self.batch_hist: collections.Counter = collections.Counter()
+        self.updates = start_step
+        self.frames_consumed = 0
+        self._steady_t0: Optional[float] = None
+        self._steady_updates0 = 0
+        self._steady_frames0 = 0
+        self._first_t0: Optional[float] = None
+        self._first_updates0 = 0
+        self._first_frames0 = 0
+        self.metrics: Dict = {}
+
+    # ------------------------------------------------------------------
+
+    def attach(self, pool, service=None) -> None:
+        """Bind the actor pool (and optional inference service) this
+        learner drives; both were built against ``self.store`` and
+        ``self.queue``."""
+        self.pool = pool
+        self.service = service
+
+    # ------------------------------------------------------------------
+
+    def telemetry_snapshot(self) -> Dict:
+        now = time.monotonic()
+        if self._steady_t0 is not None:
+            dt, u0, f0 = (now - self._steady_t0, self._steady_updates0,
+                          self._steady_frames0)
+        elif self._first_t0 is not None:
+            dt, u0, f0 = (now - self._first_t0, self._first_updates0,
+                          self._first_frames0)
+        else:
+            dt, u0, f0 = 0.0, 0, 0
+        n_lags = sum(self.lag_hist.values())
+        snap = {
+            "learner_updates": self.updates,
+            "frames_consumed": self.frames_consumed,
+            "updates_per_sec": ((self.updates - u0) / dt
+                                if dt > 0 else 0.0),
+            "frames_per_sec": ((self.frames_consumed - f0) / dt
+                               if dt > 0 else 0.0),
+            "batch_size_hist": dict(self.batch_hist),
+            "lag": {
+                "hist": dict(sorted(self.lag_hist.items())),
+                "mean": (sum(k * v for k, v in self.lag_hist.items())
+                         / n_lags if n_lags else 0.0),
+                "max": max(self.lag_hist) if self.lag_hist else 0,
+                "measured": n_lags,
+            },
+            "queue": self.queue.snapshot(),
+            "actors": (self.pool.stats() if self.pool is not None
+                       else {}),
+            "param_version": self.store.version,
+            "actor_mode": self.actor_mode,
+            "donate": self.donate,
+        }
+        if self.service is not None:
+            snap["inference"] = self.service.snapshot()
+        if self._exchange is not None:
+            # grouped only: the single-learner snapshot keys must stay
+            # exactly what run_async_training always reported
+            snap["learner_id"] = self.learner_id
+            snap["slot_base"] = self.slot_base
+            snap["exchange"] = self._exchange.snapshot()
+        return snap
+
+    # ------------------------------------------------------------------
+
+    def _raise_worker_errors(self) -> None:
+        self.pool.raise_errors()
+        if self.service is not None:
+            self.service.raise_errors()
+
+    def _warm(self, params, opt_state) -> None:
+        """Pre-compile the train step for every batch bucket on
+        throwaway copies (donation would otherwise consume the real
+        trees), so benchmarks measure steady state, not XLA."""
+        import jax
+        import jax.numpy as jnp
+
+        first = None
+        while first is None:
+            self._raise_worker_errors()
+            first = self.queue.get(timeout=0.5)
+        for b in self._buckets:
+            warm = _stack([first] * b) if b > 1 else first.data
+            if self._exchange is None:
+                out = self._train_step(self._snapshot(params),
+                                       self._snapshot(opt_state),
+                                       jnp.int32(0), warm)
+                jax.block_until_ready(out[0])   # compile only; discard
+            else:
+                grads, _ = self._grad_step(params, warm)
+                out = self._apply_step(self._snapshot(params),
+                                       self._snapshot(opt_state),
+                                       jnp.int32(0), grads)
+                jax.block_until_ready(out[0])
+        self.queue.requeue_front(first)
+
+    def _update_once(self, batch, jnp, jax):
+        """One training update on ``batch``: fused when alone, split
+        backward/exchange/apply when grouped. Returns (published
+        params, metrics) or None when the exchange shut down."""
+        if self._exchange is None:
+            self._params, self._opt_state, metrics = self._train_step(
+                self._params, self._opt_state, jnp.int32(self.updates),
+                batch)
+            published = (self._snapshot(self._params) if self.donate
+                         else self._params)
+            self.store.publish(published)
+            return published, metrics
+        grads, metrics = self._grad_step(self._params, batch)
+        leaves, treedef = jax.tree.flatten(grads)
+        # np.asarray forces the backward pass and lands the gradient
+        # leaves host-side (views on the CPU backend, copies elsewhere)
+        flat = [np.asarray(x) for x in leaves]
+        reduced = self._exchange.allreduce(flat, round_idx=self.updates)
+        if reduced is None:
+            return None                     # group shutting down
+        mean_leaves, version = reduced
+        mean = jax.tree.unflatten(treedef, list(mean_leaves))
+        self._params, self._opt_state, ametrics = self._apply_step(
+            self._params, self._opt_state, jnp.int32(self.updates), mean)
+        metrics = dict(metrics)
+        metrics.update(ametrics)
+        published = (self._snapshot(self._params) if self.donate
+                     else self._params)
+        # versioned publish delegation: the exchange's designated
+        # publisher numbers the rounds; every learner's store publishes
+        # at exactly that version, so the group's actors observe one
+        # monotonic version stream no matter which learner they pull
+        # from
+        self.store.publish_at(published, version)
+        return published, metrics
+
+    def run(self, steps: int, *, warm_buckets: bool = False,
+            on_update: Optional[Callable] = None,
+            should_stop: Optional[Callable[[], bool]] = None
+            ) -> Tuple[Dict, Dict]:
+        """Train until ``steps`` total updates (or ``should_stop``).
+        Owns the full worker lifecycle: starts the service/pool, runs
+        the loop, then stops/joins/closes in the only order that never
+        tears a frame. Returns (last metrics, final telemetry)."""
+        import jax
+        import jax.numpy as jnp
+
+        if self.pool is None:
+            raise RuntimeError("attach(pool) before run()")
+        if self.service is not None:
+            self.service.start()
+        self.pool.start()
+        try:
+            if warm_buckets:
+                self._warm(self._params, self._opt_state)
+
+            while self.updates < steps:
+                if should_stop is not None and should_stop():
+                    break
+                self._raise_worker_errors()
+                item = self.queue.get(timeout=0.5)
+                if item is None:
+                    continue
+                items = _collect_batch(self.queue, self._buckets, item,
+                                       self.batch_linger_s)
+                k = len(items)
+
+                version_now = self.store.version
+                for it in items:
+                    self.lag_hist[version_now - it.param_version] += 1
+                    self.tracker.update(it.actor_id, it.data["rewards"],
+                                        it.data["done"])
+                batch = _stack(items, self._stager)
+                stepped = self._update_once(batch, jnp, jax)
+                if stepped is None:
+                    break                   # exchange shut down under us
+                published, self.metrics = stepped
+                self.updates += 1
+                self.frames_consumed += k * self._frames_per_traj
+                self.batch_hist[k] += 1
+                if self._steady_t0 is None:
+                    jax.block_until_ready(self._params)
+                    if self._first_t0 is None:
+                        # first update includes the learner's jit compile
+                        self._first_t0 = time.monotonic()
+                        self._first_updates0 = self.updates
+                        self._first_frames0 = self.frames_consumed
+                    if all(f > 0 for f in self.pool.frames):
+                        # every worker is past import/compile and
+                        # producing
+                        self._steady_t0 = time.monotonic()
+                        self._steady_updates0 = self.updates
+                        self._steady_frames0 = self.frames_consumed
+                if on_update is not None:
+                    on_update(self.updates, published, self.metrics,
+                              self.telemetry_snapshot)
+            # snapshot before teardown: pool.join waits out in-flight
+            # unrolls and put timeouts, which would silently pad the
+            # steady-state dt
+            jax.block_until_ready(self._params)
+            final_telemetry = self.telemetry_snapshot()
+        finally:
+            # order matters: signal stop (a serializing transport flips
+            # to discard mode so producer processes can always flush and
+            # exit; the inference service wakes every blocked client
+            # with a None reply), join the workers, and only then tear
+            # the transport down — a wire closed under a live producer
+            # can tear frames
+            self.pool.stop()
+            if self.service is not None:
+                self.service.stop()
+            if self._exchange is not None:
+                self._exchange.close()
+            self.pool.join()
+            self.queue.close()
+        self._raise_worker_errors()
+        return self.metrics, final_telemetry
+
+    # ------------------------------------------------------------------
+
+    def published_host(self) -> PyTree:
+        """The latest published params as host numpy leaves — what a
+        group worker ships to the parent for checkpointing."""
+        params, _version = self.store.pull()
+        import jax
+
+        return jax.tree.map(np.asarray, params)

@@ -7,7 +7,14 @@ Three pieces:
                         (env name, ``ArchConfig``, ``ImpalaConfig``,
                         seed, actor id, mode) inside the CONFIG
                         handshake frame — a remote actor dials in
-                        knowing only the learner's address.
+                        knowing only the learner's address. In a
+                        learner group the handshake also carries the
+                        ``shard_map`` (every learner's listen address),
+                        and a learner whose shard is full *refuses with
+                        that map*, so the client spills to a learner
+                        with a free slot: dialing any one member of the
+                        group is enough to land on the learner that
+                        owns your slot.
   SocketInferenceFrontend / SocketInferenceClient
                         the ``InferenceService`` over TCP: observation
                         request frames ride the ctrl connection up,
@@ -338,7 +345,9 @@ def remote_actor_main(address, stop_event: Optional[Any] = None,
 
     Everything else — actor id, env, arch, impala config, seed, actor
     mode — arrives in the CONFIG handshake, so a remote machine needs
-    only this function and a reachable address. Returns None on a clean
+    only this function and a reachable address. ``address`` may be ANY
+    learner of a group: a full learner refuses with the shard map and
+    the client spills to one with a free slot. Returns None on a clean
     run, or the error traceback string (also reported to the learner
     over the ctrl link) on failure."""
     from repro.distributed import runner
@@ -351,12 +360,18 @@ def remote_actor_main(address, stop_event: Optional[Any] = None,
         net.close(bye=False)
         if net.refused:
             return (f"refused by learner at {address[0]}:{address[1]}: "
-                    "no free actor slot (all slots have live actors)")
+                    "no free actor slot (every learner in the shard "
+                    "map has live actors on all its slots)")
         if net.dial_failed:
             return (f"could not reach learner at "
                     f"{address[0]}:{address[1]} (dial timeout)")
         return None if net.stopped else "connect failed"
     stop = _ComposedStop(net, stop_event)
+    if tuple(net.connected_addr) != tuple(address):
+        # refused-with-shard-map spill landed us on another learner
+        h, p = net.connected_addr
+        print(f"actor {cfg.get('actor_id')}: spilled to learner "
+              f"{h}:{p}", flush=True)
     try:
         runner._tune_child_scheduling(int(cfg["actor_id"]))
         arch_cfg = cfg_from_jsonable(cfg["arch"])

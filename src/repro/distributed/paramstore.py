@@ -50,6 +50,25 @@ class ParameterStore:
             self.publishes += 1
             return self._version
 
+    def publish_at(self, params: PyTree, version: int) -> int:
+        """Versioned publish *delegation*: install new params at an
+        externally assigned version. In a learner group the designated
+        publisher (the gradient-exchange hub) numbers the rounds, and
+        every learner's store publishes at exactly that number — so
+        actors pulling from different learners observe one consistent,
+        monotonic version stream. Non-monotonic delegation is a
+        protocol bug, not a race to paper over: it raises."""
+        with self._lock:
+            if version <= self._version:
+                raise ValueError(
+                    f"delegated version {version} is not newer than "
+                    f"current {self._version} (versions must be "
+                    f"monotonic)")
+            self._params = params
+            self._version = version
+            self.publishes += 1
+            return self._version
+
     def pull(self) -> Tuple[PyTree, int]:
         """Returns the current (params, version) snapshot."""
         with self._lock:

@@ -55,13 +55,19 @@ class ProcessActorPool(PoolAccounting):
     def __init__(self, env_name: str, arch_cfg, icfg, num_envs: int,
                  num_actors: int, store: ParameterStore,
                  transport: ShmTransport, seed: int = 0, service=None,
-                 infer_streams: int = 1):
+                 infer_streams: int = 1, slot_base: int = 0):
         """``service`` (an ``InferenceService``) switches the children to
         inference mode: they hold no params and run no policy network —
         observation requests go up the service's process frontend wire,
         action replies come back over per-stream pipes
         (``infer_streams`` pipelined env half-batches per child), and
-        the param pipe carries only error reports."""
+        the param pipe carries only error reports.
+
+        ``slot_base`` shifts the children onto the global actor slot
+        range [slot_base, slot_base + num_actors): each child derives
+        its RNG stream (and its core-affinity pin) from the global id,
+        so sharding the slots over a learner group changes neither the
+        per-actor randomness nor which cores the children land on."""
         if num_actors < 1:
             raise ValueError("num_actors must be >= 1")
         if not isinstance(transport, ShmTransport):
@@ -83,7 +89,8 @@ class ProcessActorPool(PoolAccounting):
         # ``frames`` counts trajectories that *landed* parent-side: the
         # steady clock starts at the first arrival (post child startup +
         # compile), mirroring the thread pool's convention
-        self._init_accounting(num_actors, num_envs * icfg.unroll_length)
+        self._init_accounting(num_actors, num_envs * icfg.unroll_length,
+                              slot_base)
         self._arch_cfg = arch_cfg
         self._icfg = icfg
         self.service = service
@@ -102,7 +109,7 @@ class ProcessActorPool(PoolAccounting):
 
     def _note_arrival(self, item: TrajectoryItem) -> None:
         self._note_accept(item)
-        self._note_frames(item.actor_id)
+        self._note_frames(item.actor_id - self.slot_base)
 
     # ------------------------------------------------------------------
     # param server: version-gated pub/sub over pipes
@@ -143,18 +150,21 @@ class ProcessActorPool(PoolAccounting):
             parent_conn, child_conn = self._ctx.Pipe()
             self._conns.append(parent_conn)
             if self._frontend is not None:
+                # frontend client ids stay pool-local (the service is
+                # per-learner); the child's actor id is global
                 clients = [self._frontend.register(
                     i * self.infer_streams + s)
                     for s in range(self.infer_streams)]
                 target, args = inference_actor_main, (
-                    i, self.env_name, self._arch_cfg, self._icfg,
-                    self.num_envs, self.seed, self.queue.producer(),
-                    clients, child_conn, self._stop)
+                    self.slot_base + i, self.env_name, self._arch_cfg,
+                    self._icfg, self.num_envs, self.seed,
+                    self.queue.producer(), clients, child_conn,
+                    self._stop)
             else:
                 target, args = process_actor_main, (
-                    i, self.env_name, self._arch_cfg, self._icfg,
-                    self.num_envs, self.seed, self.queue.producer(),
-                    child_conn, self._stop)
+                    self.slot_base + i, self.env_name, self._arch_cfg,
+                    self._icfg, self.num_envs, self.seed,
+                    self.queue.producer(), child_conn, self._stop)
             p = self._ctx.Process(target=target, args=args,
                                   name=f"actor-proc-{i}", daemon=True)
             self._procs.append(p)
@@ -231,7 +241,8 @@ class SocketActorPool(PoolAccounting):
     def __init__(self, env_name: str, arch_cfg, icfg, num_envs: int,
                  num_actors: int, store: ParameterStore,
                  transport, seed: int = 0, service=None,
-                 infer_streams: int = 1, spawn_local: bool = True):
+                 infer_streams: int = 1, spawn_local: bool = True,
+                 slot_base: int = 0):
         from repro.distributed import netserve
         from repro.distributed.socket_transport import SocketTransport
 
@@ -253,7 +264,8 @@ class SocketActorPool(PoolAccounting):
         self._stop = self._ctx.Event()
         self._procs: List[mp.process.BaseProcess] = []
         self.errors: List[str] = []             # remote tracebacks
-        self._init_accounting(num_actors, num_envs * icfg.unroll_length)
+        self._init_accounting(num_actors, num_envs * icfg.unroll_length,
+                              slot_base)
         self.service = service
         self.infer_streams = infer_streams
         mode = "inference" if service is not None else "unroll"
@@ -275,7 +287,7 @@ class SocketActorPool(PoolAccounting):
     # accounting runs on the transport's connection threads
     def _note_arrival(self, item: TrajectoryItem) -> None:
         self._note_accept(item)
-        self._note_frames(item.actor_id)
+        self._note_frames(item.actor_id - self.slot_base)
 
     # ------------------------------------------------------------------
 

@@ -26,7 +26,12 @@ a wire.
 
 Each worker derives its RNG stream from ``fold_in(seed, actor_id)`` —
 identical across backends, so a thread-backend run and a process-backend
-run with the same seed act out the same per-actor randomness.
+run with the same seed act out the same per-actor randomness. The
+``actor_id`` here is always the *global* slot id: a learner group
+shards the run's slots over its learners (pool ``slot_base``), and
+because the loop bodies fold in the global id, actor g's randomness —
+and therefore its env-seed stream — is byte-identical however the
+slots are sharded.
 """
 from __future__ import annotations
 
@@ -640,7 +645,9 @@ def _tune_child_scheduling(actor_id: int) -> None:
     backpressure — a niced actor loses nothing, it would have stalled on
     the queue anyway) and each child sticks to one core so four children
     don't migrate across, and thrash the caches of, every core the
-    learner's train step is using."""
+    learner's train step is using. Pinning keys off the *global* slot
+    id, so the actor shards of a learner group land on disjoint cores
+    by construction (modulo wraparound on small hosts)."""
     import os
     # a small niceness wins: +3 keeps the learner ahead in the scheduler
     # without starving acting (larger values over-throttle producers on

@@ -10,6 +10,15 @@ learner-side), amortising the update's fixed cost over more frames.
 Batch sizes are bucketed to powers of two so XLA compiles at most
 log2(max_batch_trajs)+1 variants of the train step.
 
+The learner loop itself lives in ``distributed/learner.py`` as the
+``Learner`` object (batch collection, donated train step, publish,
+telemetry); this module is the *composition root* for the
+single-learner shape: build env/params/store/service/transport/pool,
+attach them to one ``Learner``, run it. The multi-learner shape —
+several ``Learner`` workers, each owning a shard of the actor slots,
+exchanging gradients over the framed channel — composes the same
+pieces in ``distributed/group.py``.
+
 Actors come in two modes. ``unroll`` (default) gives every actor its
 own jitted n-step unroll with a private copy of the params. With
 ``actor_mode='inference'`` the actors hold no params at all: they step
@@ -45,205 +54,172 @@ quantiles.
 """
 from __future__ import annotations
 
-import collections
-import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.configs.base import ArchConfig, ImpalaConfig
-from repro.core import learner as learner_lib
-from repro.core.metrics import EpisodeTracker
 from repro.data.envs import make_env
 from repro.distributed.actor_pool import ActorPool
-from repro.distributed.paramstore import ParameterStore
-from repro.distributed.serde import TrajectoryItem
+# re-exports: these lived here before the Learner extraction, and the
+# hot-path tests (and MultiTracker consumers) import them from runtime
+from repro.distributed.learner import (Learner, MultiTracker,  # noqa: F401
+                                       _buckets, _collect_batch,
+                                       _device_put_copies, _HostStager,
+                                       _stack)
+from repro.distributed.paramstore import ParameterStore  # noqa: F401
+from repro.distributed.serde import TrajectoryItem  # noqa: F401
 from repro.distributed.transport import make_transport
-from repro.models import backbone as bb
-from repro.models import common as pcommon
 
 PyTree = Any
 
 ACTOR_MODES = ("unroll", "inference")
 
 
-class MultiTracker:
-    """Episode-return accounting across actor-local env batches."""
-
-    def __init__(self, num_actors: int, num_envs: int):
-        self.trackers = [EpisodeTracker(num_envs) for _ in range(num_actors)]
-        self._merged: List[float] = []
-
-    def update(self, actor_id: int, rewards, dones) -> None:
-        t = self.trackers[actor_id]
-        before = len(t.completed)
-        t.update(np.asarray(rewards), np.asarray(dones))
-        # merge in consumption order so mean_return's last-n window is
-        # chronological, not actor-grouped
-        self._merged.extend(t.completed[before:])
-
-    @property
-    def completed(self) -> List[float]:
-        return list(self._merged)
-
-    def mean_return(self, last_n: int = 100) -> float:
-        if not self._merged:
-            return float("nan")
-        return float(np.mean(self._merged[-last_n:]))
-
-
-def _buckets(max_batch_trajs: int) -> List[int]:
-    """Power-of-two stack sizes <= max, descending (compile-count bound)."""
-    out, b = [], 1
-    while b <= max_batch_trajs:
-        out.append(b)
-        b *= 2
-    return out[::-1]
+def _validate(icfg, max_batch_trajs, actor_backend, actor_mode,
+              transport, env_name) -> None:
+    if icfg.replay_fraction > 0:
+        raise ValueError("experience replay is only wired into the sync "
+                         "runtime; run with --runtime sync")
+    if max_batch_trajs < 1:
+        raise ValueError(f"max_batch_trajs must be >= 1, got "
+                         f"{max_batch_trajs}")
+    if actor_backend not in ("thread", "process", "remote"):
+        raise ValueError(f"actor_backend must be 'thread', 'process' or "
+                         f"'remote', got {actor_backend!r}")
+    if actor_mode not in ACTOR_MODES:
+        raise ValueError(f"actor_mode must be one of {ACTOR_MODES}, got "
+                         f"{actor_mode!r}")
+    if actor_backend == "process" and transport != "shm":
+        raise ValueError("process actors cannot share live pytrees; use "
+                         "transport='shm'")
+    if actor_backend == "remote" and transport != "socket":
+        raise ValueError("remote actors ship trajectories over TCP; use "
+                         "transport='socket'")
+    if transport == "socket" and actor_backend != "remote":
+        raise ValueError("transport='socket' requires "
+                         "actor_backend='remote'")
+    if actor_backend == "remote" and not isinstance(env_name, str):
+        raise ValueError("remote actors rebuild the env by name; pass "
+                         "an env name, not an Env object")
 
 
-def _collect_batch(queue, buckets: List[int], first: TrajectoryItem,
-                   linger_s: float = 0.0) -> List[TrajectoryItem]:
-    """Starting from ``first`` (already popped), drain the queue up to
-    the largest bucket, then trim to the largest power-of-two that
-    fits — requeueing the overflow *at the front, newest first*, so the
-    queue keeps oldest-first order and the next batch starts with the
-    trajectories this one could not stack.
+def _setup(
+    env_name: str,
+    icfg: ImpalaConfig,
+    num_envs: int,
+    *,
+    num_actors: int = 2,
+    actor_backend: str = "thread",
+    actor_mode: str = "unroll",
+    transport: str = "inproc",
+    listen_addr: Optional[Tuple[str, int]] = None,
+    spawn_remote: bool = True,
+    queue_capacity: int = 8,
+    queue_policy: str = "block",
+    max_batch_trajs: int = 4,
+    batch_linger_s: float = 0.0,
+    seed: int = 0,
+    arch: Optional[ArchConfig] = None,
+    initial_params: Optional[PyTree] = None,
+    start_step: int = 0,
+    donate: bool = True,
+    infer_flush_timeout_s: float = 0.02,
+    infer_max_batch_requests: Optional[int] = None,
+    infer_streams: int = 1,
+    slot_base: int = 0,
+    learner_id: int = 0,
+    num_learners: int = 1,
+    exchange=None,
+    peer_addrs=None,
+) -> Learner:
+    """Build one learner worker's whole dependency graph — env, params,
+    train step, store, optional inference service, transport, actor
+    pool — and return the assembled ``Learner``.
 
-    ``linger_s`` is the learner-side flush deadline (the mirror of the
-    inference service's): rather than greedily training on whatever is
-    queued, wait up to this long for the bucket to fill. A starved
-    learner taking singleton batches pays the update's fixed cost per
-    trajectory — and on a shared host, those extra updates steal the
-    very cores the actors need to refill the queue. The deadline bounds
-    the staleness this adds; a full bucket never waits."""
-    items = [first]
-    deadline = (time.monotonic() + linger_s) if linger_s > 0 else None
-    while len(items) < buckets[0]:
-        nxt = queue.get_nowait()
-        if nxt is None:
-            if deadline is None:
-                break
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                break
-            nxt = queue.get(timeout=remaining)
-            if nxt is None:
-                break
-        items.append(nxt)
-    k = next(b for b in buckets if b <= len(items))
-    for extra in reversed(items[k:]):
-        queue.requeue_front(extra)
-    return items[:k]
-
-
-def _device_put_copies() -> bool:
-    """Probe whether ``jax.device_put`` of a host buffer COPIES on this
-    backend. The CPU backend zero-copy *aliases* 64-byte-aligned numpy
-    buffers (measured on jax 0.4.37, ~half of all allocations): the
-    returned "device" array IS the host memory, so a staging buffer
-    that produced one can never be rewritten while any consumer might
-    still read the batch. Probed on a deterministically 64-aligned
-    view so the answer doesn't depend on allocator luck."""
-    raw = np.zeros(1024 + 16, np.float32)
-    off = (-raw.ctypes.data) % 64 // raw.itemsize
-    aligned = raw[off:off + 1024]
-    dev = jax.device_put(aligned)
-    jax.block_until_ready(dev)
-    aligned[0] = 1.0
-    return float(np.asarray(dev)[0]) == 0.0
-
-
-class _HostStager:
-    """Per-(bucket, structure) host staging buffers for the learner's
-    consume path.
-
-    Serialized transports deliver numpy (often read-only view) leaves;
-    stacking ``k`` trajectories with ``np.concatenate`` allocates one
-    intermediate per leaf per update. Instead each leaf is written in
-    place into a staging buffer and the whole tree moves with one
-    ``device_put``. Buffer lifetime depends on what ``device_put``
-    does, probed once:
-
-      copies (accelerators)   two preallocated sets per bucket,
-          **ping-ponged**, and before a set is *re*-written the batch
-          it produced two updates ago is ``block_until_ready``-ed — the
-          ping-pong alone only pipelines the async H2D transfer, it is
-          not a completion guarantee (by reuse time the transfer has
-          long finished, so the block is effectively free).
-      aliases (CPU backend)   the "transfer" is free but the batch IS
-          the staging memory, with no event to wait on for its
-          consumers — so buffers are freshly allocated per stack and
-          never reused (same copy count as the concatenate path, still
-          a single device_put for the whole tree).
+    The single-learner ``run_async_training`` calls this with the
+    defaults; a ``LearnerGroup`` worker calls it with its shard
+    (``slot_base``/``num_actors``), its id, and a ``GradientExchange``.
+    Actor slot ids are *global* (``slot_base + i``) in every backend,
+    so a given actor's RNG/env-seed stream — ``fold_in(seed,
+    actor_id)`` — does not depend on how the slots are sharded over
+    learners.
     """
+    _validate(icfg, max_batch_trajs, actor_backend, actor_mode,
+              transport, env_name)
+    env = make_env(env_name) if isinstance(env_name, str) else env_name
+    if arch is None:
+        from repro.core.driver import small_arch
+        arch = small_arch(env)
 
-    def __init__(self):
-        self._slots: Dict[Any, list] = {}
-        self._reuse = _device_put_copies()
+    learner = Learner(
+        arch=arch, icfg=icfg, num_actions=env.num_actions,
+        num_envs=num_envs, num_actors=num_actors, transport=None,
+        seed=seed, learner_id=learner_id, num_learners=num_learners,
+        slot_base=slot_base, actor_mode=actor_mode,
+        max_batch_trajs=max_batch_trajs, batch_linger_s=batch_linger_s,
+        donate=donate, start_step=start_step,
+        initial_params=initial_params, exchange=exchange)
+    store = learner.store
 
-    def stack(self, items: List[TrajectoryItem]) -> Optional[PyTree]:
-        """Staged stack of >=2 same-shaped numpy trajectories; None if
-        the items are not uniform host trees (caller falls back)."""
-        datas = [it.data for it in items]
-        leaves0, treedef = jax.tree.flatten(datas[0])
-        if not all(isinstance(x, np.ndarray) for x in leaves0):
-            return None
-        shapes = tuple((x.shape, x.dtype.name) for x in leaves0)
-        for d in datas[1:]:
-            ls, td = jax.tree.flatten(d)
-            if td != treedef or \
-                    tuple((x.shape, x.dtype.name) for x in ls) != shapes:
-                return None                 # ragged: not the hot path
-        k = len(items)
-
-        def alloc():
-            return [np.empty((x.shape[0] * k,) + x.shape[1:], x.dtype)
-                    for x in leaves0]
-
-        if self._reuse:
-            key = (k, treedef, shapes)
-            slot = self._slots.get(key)
-            if slot is None:
-                # [two buffer sets, next index, last batch per set]
-                slot = self._slots[key] = [(alloc(), alloc()), 0,
-                                           [None, None]]
-            idx = slot[1]
-            bufs = slot[0][idx]
-            slot[1] ^= 1
-            if slot[2][idx] is not None:
-                jax.block_until_ready(slot[2][idx])
-        else:
-            bufs = alloc()
-        for i, d in enumerate(datas):
-            for buf, leaf in zip(bufs, jax.tree.leaves(d)):
-                b = leaf.shape[0]
-                buf[i * b:(i + 1) * b] = leaf
-        out = jax.device_put(jax.tree.unflatten(treedef, bufs))
-        if self._reuse:
-            slot[2][idx] = out
-        return out
-
-
-def _stack(items: List[TrajectoryItem],
-           stager: Optional[_HostStager] = None) -> PyTree:
-    if len(items) == 1:
-        return items[0].data
-
-    if stager is not None:
-        staged = stager.stack(items)
-        if staged is not None:
-            return staged
-
-    def cat(*xs):
-        # fallback: host concatenate for numpy leaves (one copy, feeding
-        # the jit's host->device transfer), device concatenate otherwise
-        if isinstance(xs[0], np.ndarray):
-            return np.concatenate(xs, axis=0)
-        return jnp.concatenate(xs, axis=0)
-
-    return jax.tree.map(cat, *[it.data for it in items])
+    service = None
+    if actor_mode == "inference":
+        from repro.distributed.inference import InferenceService, \
+            _pow2_floor
+        if infer_streams < 1 or num_envs % infer_streams:
+            infer_streams = 1       # pipelining needs an even env split
+        service = InferenceService(
+            env, arch, icfg, store,
+            num_clients=num_actors * infer_streams,
+            flush_timeout_s=infer_flush_timeout_s,
+            # bucket = one request per *actor*: with pipelined streams
+            # this leaves the other stream-group pending, so its flush
+            # overlaps the actors' env stepping instead of merging into
+            # one monolithic phase
+            max_batch_requests=(infer_max_batch_requests or
+                                _pow2_floor(num_actors)),
+            seed=seed,
+            # grouped: the service samples from this learner's folded
+            # key (Learner.key = fold_in(key(seed), learner_id)) so no
+            # two learners share an action-sampling stream; alone: the
+            # plain seed path, byte-identical to what it always was
+            rng_key=(learner.key if num_learners > 1 else None))
+    transport_kw = {}
+    if transport == "socket":
+        transport_kw = {"listen": listen_addr or ("127.0.0.1", 0),
+                        "max_actors": num_actors,
+                        "slot_base": slot_base}
+    queue = make_transport(transport, queue_capacity, queue_policy,
+                           **transport_kw)
+    learner.queue = queue
+    if actor_backend == "remote":
+        from repro.distributed.procpool import SocketActorPool
+        if peer_addrs is not None:
+            queue.peer_addrs = [tuple(a) for a in peer_addrs]
+        pool = SocketActorPool(
+            env_name, arch, icfg, num_envs, num_actors, store, queue,
+            seed=seed, service=service, infer_streams=infer_streams,
+            spawn_local=spawn_remote, slot_base=slot_base)
+        if not spawn_remote:
+            host, port = queue.address
+            print(f"learner listening on {host}:{port} — waiting for "
+                  f"{num_actors} remote actor(s): "
+                  f"PYTHONPATH=src python -m repro.launch.train "
+                  f"--connect {host}:{port}", flush=True)
+    elif actor_backend == "process":
+        from repro.distributed.procpool import ProcessActorPool
+        pool = ProcessActorPool(
+            env_name if isinstance(env_name, str) else env.name,
+            arch, icfg, num_envs, num_actors, store, queue, seed=seed,
+            service=service, infer_streams=infer_streams,
+            slot_base=slot_base)
+    else:
+        # thread backend: inference acting is multiplexed by one driver
+        # thread (see ActorPool._run_driver), so stream pipelining does
+        # not apply
+        pool = ActorPool(env, arch, icfg, num_envs, num_actors, store,
+                         queue, seed=seed, service=service,
+                         slot_base=slot_base)
+    learner.attach(pool, service)
+    return learner
 
 
 def run_async_training(
@@ -346,230 +322,18 @@ def run_async_training(
     bucket before the timed region, so benchmarks measure steady-state
     throughput rather than XLA compilation.
     """
-    if icfg.replay_fraction > 0:
-        raise ValueError("experience replay is only wired into the sync "
-                         "runtime; run with --runtime sync")
-    if max_batch_trajs < 1:
-        raise ValueError(f"max_batch_trajs must be >= 1, got "
-                         f"{max_batch_trajs}")
-    if actor_backend not in ("thread", "process", "remote"):
-        raise ValueError(f"actor_backend must be 'thread', 'process' or "
-                         f"'remote', got {actor_backend!r}")
-    if actor_mode not in ACTOR_MODES:
-        raise ValueError(f"actor_mode must be one of {ACTOR_MODES}, got "
-                         f"{actor_mode!r}")
-    if actor_backend == "process" and transport != "shm":
-        raise ValueError("process actors cannot share live pytrees; use "
-                         "transport='shm'")
-    if actor_backend == "remote" and transport != "socket":
-        raise ValueError("remote actors ship trajectories over TCP; use "
-                         "transport='socket'")
-    if transport == "socket" and actor_backend != "remote":
-        raise ValueError("transport='socket' requires "
-                         "actor_backend='remote'")
-    if actor_backend == "remote" and not isinstance(env_name, str):
-        raise ValueError("remote actors rebuild the env by name; pass "
-                         "an env name, not an Env object")
-    env = make_env(env_name) if isinstance(env_name, str) else env_name
-    if arch is None:
-        from repro.core.driver import small_arch
-        arch = small_arch(env)
-    specs = bb.backbone_specs(arch, env.num_actions)
-    if initial_params is not None:
-        params = initial_params
-    else:
-        params = pcommon.init_params(specs, jax.random.key(seed))
-    train_step, opt = learner_lib.build_train_step(arch, icfg,
-                                                   env.num_actions)
-    if donate:
-        train_step = jax.jit(train_step, donate_argnums=(0, 1))
-    else:
-        train_step = jax.jit(train_step)
-    # one jitted whole-tree device copy: the decoupling between the
-    # learner's donated working tree and every reference that escapes
-    # (store, service, on_update). XLA never aliases non-donated outputs
-    # to inputs, so the copy's buffers are independent by construction.
-    _snapshot = jax.jit(lambda tree: jax.tree.map(jnp.copy, tree))
-    opt_state = opt.init(params)
-
-    store = ParameterStore(_snapshot(params) if donate else params,
-                           version=start_step)
-    service = None
-    if actor_mode == "inference":
-        from repro.distributed.inference import InferenceService, \
-            _pow2_floor
-        if infer_streams < 1 or num_envs % infer_streams:
-            infer_streams = 1       # pipelining needs an even env split
-        service = InferenceService(
-            env, arch, icfg, store,
-            num_clients=num_actors * infer_streams,
-            flush_timeout_s=infer_flush_timeout_s,
-            # bucket = one request per *actor*: with pipelined streams
-            # this leaves the other stream-group pending, so its flush
-            # overlaps the actors' env stepping instead of merging into
-            # one monolithic phase
-            max_batch_requests=(infer_max_batch_requests or
-                                _pow2_floor(num_actors)),
-            seed=seed)
-    transport_kw = {}
-    if transport == "socket":
-        transport_kw = {"listen": listen_addr or ("127.0.0.1", 0),
-                        "max_actors": num_actors}
-    queue = make_transport(transport, queue_capacity, queue_policy,
-                           **transport_kw)
-    if actor_backend == "remote":
-        from repro.distributed.procpool import SocketActorPool
-        pool = SocketActorPool(
-            env_name, arch, icfg, num_envs, num_actors, store, queue,
-            seed=seed, service=service, infer_streams=infer_streams,
-            spawn_local=spawn_remote)
-        if not spawn_remote:
-            host, port = queue.address
-            print(f"learner listening on {host}:{port} — waiting for "
-                  f"{num_actors} remote actor(s): "
-                  f"PYTHONPATH=src python -m repro.launch.train "
-                  f"--connect {host}:{port}", flush=True)
-    elif actor_backend == "process":
-        from repro.distributed.procpool import ProcessActorPool
-        pool = ProcessActorPool(
-            env_name if isinstance(env_name, str) else env.name,
-            arch, icfg, num_envs, num_actors, store, queue, seed=seed,
-            service=service, infer_streams=infer_streams)
-    else:
-        # thread backend: inference acting is multiplexed by one driver
-        # thread (see ActorPool._run_driver), so stream pipelining does
-        # not apply
-        pool = ActorPool(env, arch, icfg, num_envs, num_actors, store,
-                         queue, seed=seed, service=service)
-    tracker = MultiTracker(num_actors, num_envs)
-    buckets = _buckets(max_batch_trajs)
-    stager = _HostStager()
-    frames_per_traj = num_envs * icfg.unroll_length
-
-    lag_hist: collections.Counter = collections.Counter()
-    batch_hist: collections.Counter = collections.Counter()
-    updates = start_step
-    frames_consumed = 0
-    # the steady-state window opens once every actor has landed at least
-    # one trajectory AND the learner is past its compile update — the
-    # one-time startup storm (jax import + per-worker XLA compile, paid
-    # once per process for the process backend) is not steady state.
-    # ``first_t0`` (set after the first update) is the fallback so
-    # degenerate runs that end mid-ramp still report an honest rate.
-    steady_t0: Optional[float] = None
-    steady_updates0 = 0
-    steady_frames0 = 0
-    first_t0: Optional[float] = None
-    first_updates0 = 0
-    first_frames0 = 0
-    metrics: Dict = {}
-
-    def telemetry_snapshot() -> Dict:
-        now = time.monotonic()
-        if steady_t0 is not None:
-            dt, u0, f0 = now - steady_t0, steady_updates0, steady_frames0
-        elif first_t0 is not None:
-            dt, u0, f0 = now - first_t0, first_updates0, first_frames0
-        else:
-            dt, u0, f0 = 0.0, 0, 0
-        n_lags = sum(lag_hist.values())
-        snap = {
-            "learner_updates": updates,
-            "frames_consumed": frames_consumed,
-            "updates_per_sec": ((updates - u0) / dt if dt > 0 else 0.0),
-            "frames_per_sec": ((frames_consumed - f0) / dt
-                               if dt > 0 else 0.0),
-            "batch_size_hist": dict(batch_hist),
-            "lag": {
-                "hist": dict(sorted(lag_hist.items())),
-                "mean": (sum(k * v for k, v in lag_hist.items()) / n_lags
-                         if n_lags else 0.0),
-                "max": max(lag_hist) if lag_hist else 0,
-                "measured": n_lags,
-            },
-            "queue": queue.snapshot(),
-            "actors": pool.stats(),
-            "param_version": store.version,
-            "actor_mode": actor_mode,
-            "donate": donate,
-        }
-        if service is not None:
-            snap["inference"] = service.snapshot()
-        return snap
-
-    if service is not None:
-        service.start()
-    pool.start()
-    try:
-        if warm_buckets:
-            first = None
-            while first is None:
-                pool.raise_errors()
-                if service is not None:
-                    service.raise_errors()
-                first = queue.get(timeout=0.5)
-            for b in buckets:
-                warm = _stack([first] * b) if b > 1 else first.data
-                # warm on throwaway copies: with donation the warm call
-                # would otherwise consume the real params/opt_state
-                out = train_step(_snapshot(params), _snapshot(opt_state),
-                                 jnp.int32(0), warm)
-                jax.block_until_ready(out[0])   # compile only; discard
-            queue.requeue_front(first)
-
-        while updates < steps:
-            pool.raise_errors()
-            if service is not None:
-                service.raise_errors()
-            item = queue.get(timeout=0.5)
-            if item is None:
-                continue
-            items = _collect_batch(queue, buckets, item, batch_linger_s)
-            k = len(items)
-
-            version_now = store.version
-            for it in items:
-                lag_hist[version_now - it.param_version] += 1
-                tracker.update(it.actor_id, it.data["rewards"],
-                               it.data["done"])
-            batch = _stack(items, stager)
-            params, opt_state, metrics = train_step(
-                params, opt_state, jnp.int32(updates), batch)
-            published = _snapshot(params) if donate else params
-            store.publish(published)
-            updates += 1
-            frames_consumed += k * frames_per_traj
-            batch_hist[k] += 1
-            if steady_t0 is None:
-                jax.block_until_ready(params)
-                if first_t0 is None:
-                    # first update includes the learner's jit compile
-                    first_t0 = time.monotonic()
-                    first_updates0 = updates
-                    first_frames0 = frames_consumed
-                if all(f > 0 for f in pool.frames):
-                    # every worker is past import/compile and producing
-                    steady_t0 = time.monotonic()
-                    steady_updates0 = updates
-                    steady_frames0 = frames_consumed
-            if on_update is not None:
-                on_update(updates, published, metrics, telemetry_snapshot)
-        # snapshot before teardown: pool.join waits out in-flight unrolls
-        # and put timeouts, which would silently pad the steady-state dt
-        jax.block_until_ready(params)
-        final_telemetry = telemetry_snapshot()
-    finally:
-        # order matters: signal stop (a serializing transport flips to
-        # discard mode so producer processes can always flush and exit;
-        # the inference service wakes every blocked client with a None
-        # reply), join the workers, and only then tear the transport
-        # down — a wire closed under a live producer can tear frames
-        pool.stop()
-        if service is not None:
-            service.stop()
-        pool.join()
-        queue.close()
-    pool.raise_errors()
-    if service is not None:
-        service.raise_errors()
-    return tracker, metrics, final_telemetry
+    learner = _setup(
+        env_name, icfg, num_envs,
+        num_actors=num_actors, actor_backend=actor_backend,
+        actor_mode=actor_mode, transport=transport,
+        listen_addr=listen_addr, spawn_remote=spawn_remote,
+        queue_capacity=queue_capacity, queue_policy=queue_policy,
+        max_batch_trajs=max_batch_trajs, batch_linger_s=batch_linger_s,
+        seed=seed, arch=arch, initial_params=initial_params,
+        start_step=start_step, donate=donate,
+        infer_flush_timeout_s=infer_flush_timeout_s,
+        infer_max_batch_requests=infer_max_batch_requests,
+        infer_streams=infer_streams)
+    metrics, final_telemetry = learner.run(
+        steps, warm_buckets=warm_buckets, on_update=on_update)
+    return learner.tracker, metrics, final_telemetry

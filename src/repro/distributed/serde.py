@@ -258,6 +258,41 @@ def decode_item(buf: bytes, copy: bool = False) -> TrajectoryItem:
 
 
 # ---------------------------------------------------------------------------
+# gradient exchange payloads (the learner group's KIND_GRAD /
+# KIND_GRAD_MEAN frames): a flat list of numpy gradient leaves plus the
+# round bookkeeping the hub's stale-drop rule needs. The tree structure
+# is NOT shipped — every learner of a data-parallel group holds the
+# same parameter treedef, so only the leaves (in flatten order) cross
+# the wire, and a structure mismatch surfaces as the usual SerdeError
+# at unflatten time.
+
+
+def encode_grads(leaves: List[np.ndarray], *, round_idx: int,
+                 learner_id: int, version: int = -1) -> bytes:
+    """One gradient-exchange payload: ``leaves`` in tree-flatten order,
+    stamped with the update round and sender. ``version`` rides on the
+    hub's KIND_GRAD_MEAN broadcast (the delegated publish version for
+    the round); spokes send -1."""
+    return encode_tree(list(leaves), meta={
+        "round": int(round_idx),
+        "learner": int(learner_id),
+        "version": int(version),
+    })
+
+
+def decode_grads(buf: bytes, copy: bool = False
+                 ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
+    """Inverse of ``encode_grads``: (leaves, meta) where meta carries
+    ``round``/``learner``/``version``. Zero-copy views by default —
+    the hub only reads them into its accumulation."""
+    leaves, meta = decode_tree(buf, copy=copy)
+    if not isinstance(leaves, list):
+        raise SerdeError(f"gradient payload must decode to a list of "
+                         f"leaves, got {type(leaves).__name__}")
+    return leaves, meta
+
+
+# ---------------------------------------------------------------------------
 # wire framing (the socket transport's unit of transmission)
 #
 # ``encode_tree`` buffers are self-describing but carry no *boundary*: a

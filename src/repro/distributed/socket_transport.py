@@ -70,6 +70,10 @@ KIND_INFER_REQ = 7   # actor -> learner: serde obs request (stream=client)
 KIND_INFER_REP = 8   # learner -> actor: serde reply (stream=client)
 KIND_CTRL = 9        # both ways: stop / bye / pause / resume
 KIND_ERROR = 10      # actor -> learner: traceback text
+# learner <-> learner (the gradient exchange rides the same CRC frame
+# format and torn-tail discipline as everything else on the wire)
+KIND_GRAD = 11       # spoke -> hub: serde grad leaves (stream=learner)
+KIND_GRAD_MEAN = 12  # hub -> spoke: reduced mean for one round
 
 CTRL_STOP = b"stop"
 CTRL_BYE = b"bye"
@@ -277,7 +281,8 @@ class SocketTransport:
     def __init__(self, capacity: int = 8, policy: str = "block",
                  listen: Address = ("127.0.0.1", 0),
                  max_actors: Optional[int] = None,
-                 data_buf_bytes: int = DATA_BUF_BYTES):
+                 data_buf_bytes: int = DATA_BUF_BYTES,
+                 slot_base: int = 0):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got "
                              f"{policy!r}")
@@ -285,6 +290,14 @@ class SocketTransport:
         self.policy = policy
         self.max_actors = max_actors
         self.data_buf_bytes = data_buf_bytes
+        # shard-aware slot assignment: this learner hands out global
+        # actor ids in [slot_base, slot_base + max_actors). peer_addrs
+        # (set by the pool/group before actors connect) is the shard
+        # map — every learner's listen address — shipped in the CONFIG
+        # handshake and in refusals, so an external actor that dialed a
+        # full learner spills to one with a free slot instead of dying.
+        self.slot_base = slot_base
+        self.peer_addrs: Optional[List[Address]] = None
         self._inner = TrajectoryQueue(capacity, policy)
         self.on_item: Optional[Callable[[TrajectoryItem], None]] = None
         self.on_reject: Optional[Callable[[TrajectoryItem], None]] = None
@@ -305,7 +318,7 @@ class SocketTransport:
         self._lock = threading.Lock()           # slots / counters
         self._slots: Dict[int, _ActorSlot] = {}
         self._slot_by_nonce: Dict[str, _ActorSlot] = {}
-        self._next_id = 0
+        self._next_id = slot_base
         self._threads: List[threading.Thread] = []
 
         # telemetry (conn-thread writes; snapshot() reads)
@@ -391,10 +404,22 @@ class SocketTransport:
         actor_id = int(hello.get("actor_id", -1))
         slot = self._bind(role, actor_id, chan,
                           nonce=hello.get("nonce"))
-        if slot is None:    # full house: refuse, distinctly from a
-            chan.send(KIND_CTRL, 0, CTRL_REFUSED)   # run-end stop, so
-            chan.close()    # the surplus actor exits NONZERO and an
-            return          # operator notices instead of seeing "clean"
+        if slot is None:
+            # full house: refuse, distinctly from a run-end stop, so
+            # the surplus actor exits NONZERO and an operator notices
+            # instead of seeing "clean". With a shard map bound, the
+            # refusal carries the OTHER learners' addresses so the
+            # actor spills to one with a free slot instead of dying —
+            # how an external machine dialing any one learner of a
+            # group finds the learner that owns its slot.
+            payload = CTRL_REFUSED
+            spill = [list(a) for a in (self.peer_addrs or [])
+                     if tuple(a) != tuple(self.address)]
+            if spill:
+                payload += b" " + json.dumps(spill).encode("utf-8")
+            chan.send(KIND_CTRL, 0, payload)
+            chan.close()
+            return
         try:
             if role == "ctrl":
                 gate = time.monotonic() + 10.0
@@ -405,6 +430,11 @@ class SocketTransport:
                 extra = self.config_extra
                 cfg = {"actor_id": slot.actor_id,
                        "data_buf": self.data_buf_bytes}
+                if self.peer_addrs is not None:
+                    # the group's shard map: every learner's listen
+                    # address, so the remote machine knows the whole
+                    # topology from one handshake
+                    cfg["shard_map"] = [list(a) for a in self.peer_addrs]
                 if extra is not None:
                     cfg.update(extra(slot.actor_id))
                 chan.send(KIND_CONFIG, 0,
@@ -446,7 +476,7 @@ class SocketTransport:
                 slot = (self._slot_by_nonce.get(nonce)
                         if nonce else None)
                 if slot is None and self.max_actors is not None and \
-                        self._next_id >= self.max_actors:
+                        self._next_id >= self.slot_base + self.max_actors:
                     # all ids handed out: RECLAIM a slot with no live
                     # connections — a crashed external actor relaunched
                     # by an operator must get its capacity back, not a
@@ -481,9 +511,10 @@ class SocketTransport:
             else:
                 slot = self._slots.get(actor_id)
                 if slot is None:
-                    if self.max_actors is not None and \
-                            actor_id >= self.max_actors:
-                        return None
+                    if actor_id < self.slot_base or (
+                            self.max_actors is not None and actor_id >=
+                            self.slot_base + self.max_actors):
+                        return None     # not this learner's shard
                     slot = self._slots[actor_id] = _ActorSlot(actor_id)
                     slot.owner_nonce = nonce
                     self._next_id = max(self._next_id, actor_id + 1)
@@ -780,6 +811,7 @@ class SocketActorClient:
                  dial_timeout: float = 60.0):
         import uuid
         self._addr = tuple(address)
+        self._tried_addrs: set = set()  # learners that refused us
         self._backoff = backoff
         self._dial_timeout = dial_timeout
         self._ext_stop = stop_event
@@ -808,6 +840,12 @@ class SocketActorClient:
     def stopped(self) -> bool:
         return self._stopped.is_set() or (
             self._ext_stop is not None and self._ext_stop.is_set())
+
+    @property
+    def connected_addr(self) -> Address:
+        """The learner this client actually ended up on — differs from
+        the dialed address after a refused-with-shard-map spill."""
+        return tuple(self._addr)
 
     def _stop_check(self) -> bool:
         return self.stopped
@@ -894,11 +932,34 @@ class SocketActorClient:
                 time.sleep(delay)
                 delay = min(delay * 2, self._backoff[1])
                 continue
-            if kind == KIND_CTRL and payload in (CTRL_STOP,
-                                                 CTRL_REFUSED):
-                self.refused = payload == CTRL_REFUSED
-                self._stopped.set()             # run closing / no slot
+            if kind == KIND_CTRL and (
+                    payload == CTRL_STOP or
+                    payload.startswith(CTRL_REFUSED)):
                 chan.close()
+                if payload.startswith(CTRL_REFUSED):
+                    # refused-with-shard-map: this learner's shard is
+                    # full, but the refusal names its peers — spill to
+                    # the first one we have not tried yet (how an
+                    # external actor that dialed any one learner of a
+                    # group finds the learner with a free slot)
+                    # a wildcard bind host (0.0.0.0/::/"") in the map
+                    # is not dialable from here — the group's learners
+                    # share one machine (port+k), so substitute the
+                    # host we actually reached this learner on
+                    spill = [((self._addr[0], p)
+                              if h in ("0.0.0.0", "::", "") else (h, p))
+                             for h, p in self._spill_addrs(payload)]
+                    self._tried_addrs.add(tuple(self._addr))
+                    nxt = next((a for a in spill
+                                if a not in self._tried_addrs), None)
+                    if nxt is not None:
+                        self._addr = nxt
+                        delay = self._backoff[0]
+                        continue
+                    self.refused = True
+                else:
+                    self.refused = False
+                self._stopped.set()             # run closing / no slot
                 return None
             if kind != KIND_CONFIG:
                 chan.close()
@@ -916,6 +977,19 @@ class SocketActorClient:
             self.dial_failed = True
             self._stopped.set()
         return None
+
+    @staticmethod
+    def _spill_addrs(payload: bytes) -> List[Tuple[str, int]]:
+        """Parse the optional shard-map suffix of a refusal payload
+        (``b"refused [[host, port], ...]"``); [] when absent/garbled."""
+        rest = payload[len(CTRL_REFUSED):].strip()
+        if not rest:
+            return []
+        try:
+            addrs = json.loads(rest.decode("utf-8"))
+            return [(str(h), int(p)) for h, p in addrs]
+        except (ValueError, TypeError):
+            return []
 
     def _ctrl_reader(self, chan: FrameChannel) -> None:
         while not self.stopped:

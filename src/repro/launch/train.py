@@ -59,7 +59,27 @@ def main() -> int:
     p.add_argument("--runtime", default="sync", choices=["sync", "async"])
     p.add_argument("--actor-threads", type=int, default=2,
                    help="actor worker count (async runtime; threads or "
-                        "processes per --actor-backend)")
+                        "processes per --actor-backend). With "
+                        "--learners N this is the TOTAL slot count, "
+                        "sharded contiguously over the learners")
+    p.add_argument("--learners", type=int, default=1,
+                   help="learner worker count (async runtime). 1 (the "
+                        "default) runs the single-learner loop in this "
+                        "process. N>1 spawns N learner processes, each "
+                        "owning a disjoint shard of the actor slots and "
+                        "its own transport; gradients are mean-reduced "
+                        "over a CRC-framed TCP channel every round and "
+                        "learner 0 (the designated publisher) numbers "
+                        "the param versions. With --listen HOST:PORT, "
+                        "learner k binds PORT+k and external actors may "
+                        "dial any of them (a full learner refuses with "
+                        "the shard map; the actor spills)")
+    p.add_argument("--grad-stale-s", type=float, default=180.0,
+                   help="learner-group stale-grad deadline: the hub "
+                        "reduces a round without a learner that missed "
+                        "this window (the dropped gradient is counted; "
+                        "the laggard still applies the broadcast mean, "
+                        "so replicas stay identical)")
     p.add_argument("--actor-backend", default="thread",
                    choices=["thread", "process", "remote"],
                    help="where actors live: threads of this interpreter "
@@ -276,6 +296,8 @@ def _run_async(args, env, arch, icfg) -> int:
     if args.actor_backend == "remote" and transport != "socket":
         raise SystemExit("--actor-backend remote requires "
                          "--transport socket")
+    if args.learners > 1:
+        return _run_group(args, env, arch, icfg, transport)
     listen_addr = (_parse_hostport(args.listen, default_host="0.0.0.0")
                    if args.listen else None)
     # an explicit --listen means real remote machines dial in; without
@@ -346,6 +368,84 @@ def _run_async(args, env, arch, icfg) -> int:
         keys.append("inference")
     print("telemetry:", json.dumps({k: tel[k] for k in keys},
                                    default=float))
+    return 0
+
+
+def _run_group(args, env, arch, icfg, transport) -> int:
+    """N>1 learner processes: sharded actors, gradient exchange over
+    the framed channel, one designated publisher. Checkpointing saves
+    the publisher's replica (replicas are identical) every
+    ``--ckpt-every`` updates and at the end; resume is not supported
+    yet. ``transport`` arrives resolved/validated from _run_async."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.distributed import run_group_training
+    from repro.models import backbone as bb
+    from repro.models import common
+
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        # the group path cannot resume yet (no initial_params plumbing
+        # into the workers) — refusing beats silently restarting from
+        # scratch AND overwriting the existing checkpoint at the end
+        raise SystemExit(
+            f"--learners {args.learners} does not support checkpoint "
+            f"resume yet, and {args.ckpt_dir!r} already holds a "
+            f"checkpoint (step {ckpt.latest_step(args.ckpt_dir)}). "
+            "Move it aside or pick a fresh --ckpt-dir.")
+    listen_addr = (_parse_hostport(args.listen, default_host="0.0.0.0")
+                   if args.listen else None)
+    spawn_remote = not args.listen
+    specs = bb.backbone_specs(arch, env.num_actions)
+    print(f"arch={arch.name} params={common.param_count(specs):,} "
+          f"env={env.name} actions={env.num_actions} runtime=async "
+          f"learners={args.learners} "
+          f"actors={args.actor_threads}({args.actor_backend}/"
+          f"{args.actor_mode}) transport={transport} "
+          f"queue={args.queue_capacity}/{args.queue_policy} "
+          f"max_batch_trajs={args.max_batch_trajs} "
+          f"donate={not args.no_donate}")
+    def on_progress(learner_id, snap):
+        lag = snap["lag"]
+        q = snap["queue"]
+        ex = snap.get("exchange", {})
+        print(f"learner {learner_id} update {snap['learner_updates']:6d} "
+              f"lag(mean/max)={lag['mean']:.2f}/{lag['max']} "
+              f"queue(occ/stall)={q.get('mean_occupancy', 0.0):.1f}/"
+              f"{q.get('put_stalls', 0)} "
+              f"fps={snap['frames_per_sec']:7.0f} "
+              f"reduce_ms={ex.get('reduce_wait_ms_mean', 0.0):.1f} "
+              f"stale={ex.get('stale_dropped', 0)}", flush=True)
+
+    tracker, metrics, tel, params = run_group_training(
+        args.env, icfg, args.num_envs, args.steps,
+        num_learners=args.learners,
+        num_actors=args.actor_threads,
+        actor_backend=args.actor_backend,
+        actor_mode=args.actor_mode,
+        transport=transport,
+        listen_addr=listen_addr,
+        spawn_remote=spawn_remote,
+        queue_capacity=args.queue_capacity,
+        queue_policy=args.queue_policy,
+        max_batch_trajs=args.max_batch_trajs,
+        donate=not args.no_donate,
+        stale_after_s=args.grad_stale_s,
+        infer_flush_timeout_s=args.infer_flush_ms / 1e3,
+        seed=args.seed, arch=arch,
+        telemetry_every=args.log_every, on_progress=on_progress,
+        ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        on_checkpoint=(lambda step, p: ckpt.save(args.ckpt_dir, step, p))
+        if args.ckpt_dir else None,
+        return_final_params=True)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, params)
+    print(f"final return(100) = {tracker.mean_return():.3f}")
+    keys = ["group", "learner_updates", "frames_consumed",
+            "updates_per_sec", "frames_per_sec", "lag", "actors",
+            "param_version"]
+    print("telemetry:", json.dumps({k: tel[k] for k in keys},
+                                   default=float))
+    per = tel["actors"]["per_learner_trajectories"]
+    print("per-learner trajectories:", json.dumps(per))
     return 0
 
 

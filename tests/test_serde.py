@@ -197,6 +197,31 @@ def test_errors_bad_magic_truncation_unknown_key_type():
         serde.encode_tree({1: np.zeros(2)})   # non-string dict key
 
 
+def test_grad_codec_round_trip_bit_exact():
+    """The gradient-exchange payload: leaves in flatten order plus the
+    round/learner/version bookkeeping; views must be bit-exact."""
+    rng = np.random.default_rng(0)
+    leaves = [_rand(rng, (3, 4), np.float32),
+              _rand(rng, (7,), ml_dtypes.bfloat16),
+              _rand(rng, (), np.float32)]
+    buf = serde.encode_grads(leaves, round_idx=12, learner_id=3)
+    out, meta = serde.decode_grads(buf)
+    assert meta["round"] == 12 and meta["learner"] == 3
+    assert meta["version"] == -1                    # spokes send -1
+    assert len(out) == len(leaves)
+    for a, b in zip(leaves, out):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+    # the hub's broadcast stamps the delegated version
+    buf2 = serde.encode_grads(out, round_idx=12, learner_id=0,
+                              version=13)
+    _out2, meta2 = serde.decode_grads(buf2)
+    assert meta2["version"] == 13
+    # a non-list payload is a protocol error, not a silent mis-decode
+    with pytest.raises(serde.SerdeError, match="list"):
+        serde.decode_grads(serde.encode_tree({"w": leaves[0]}))
+
+
 def test_module_imports_without_jax():
     """Actor children must be able to move buffers without paying a jax
     import; guard the dependency edge, not just the behaviour."""
@@ -209,11 +234,14 @@ def test_module_imports_without_jax():
          "import sys; import repro.distributed.serde, "
          "repro.distributed.transport, "
          "repro.distributed.socket_transport, "
-         "repro.distributed.netserve; sys.exit(1 if 'jax' in "
+         "repro.distributed.netserve, "
+         "repro.distributed.learner, "
+         "repro.distributed.group; sys.exit(1 if 'jax' in "
          "sys.modules else 0)"],
         env=env, timeout=120)
     assert r.returncode == 0, \
-        "serde/transport/socket/netserve import pulled jax in"
+        "serde/transport/socket/netserve/learner/group import pulled " \
+        "jax in"
 
 
 # ---------------------------------------------------------------------------

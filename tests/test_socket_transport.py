@@ -241,6 +241,85 @@ def test_client_handshake_assigns_ids_and_ships_config():
 
 
 @pytest.mark.timeout_s(120)
+def test_slot_base_allocates_global_shard_ids():
+    """A learner-group member hands out ids from ITS shard only:
+    slot_base=4 with 2 slots assigns 4 then 5, and an explicit id
+    outside the shard is refused — a data connection can never bind a
+    slot another learner owns."""
+    t = SocketTransport(capacity=8, policy="block", max_actors=2,
+                        slot_base=4)
+    t.config_extra = lambda aid: {}
+    clients = []
+    try:
+        for expect in (4, 5):
+            c = SocketActorClient(t.address, backoff=(0.01, 0.1))
+            cfg = c.connect()
+            clients.append(c)
+            assert cfg is not None and cfg["actor_id"] == expect
+        assert clients[0].send_traj(_make_buf(4, 0))
+        got = t.get(timeout=10.0)
+        assert got is not None and got.actor_id == 4
+        assert t.snapshot()["per_actor"][4]["frames"] == 1
+        # an id from another learner's shard is not bindable here
+        assert t._bind("data", 1, None) is None
+        assert t._bind("data", 6, None) is None
+    finally:
+        for c in clients:
+            c.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_refusal_with_shard_map_spills_to_peer_learner():
+    """Two learner transports sharding 1+1 slots: both publish the
+    shard map; an actor dialing the FULL learner is refused WITH the
+    map and lands on the peer's free slot instead of dying."""
+    t0 = SocketTransport(capacity=8, policy="block", max_actors=1,
+                         slot_base=0)
+    t1 = SocketTransport(capacity=8, policy="block", max_actors=1,
+                         slot_base=1)
+    shard_map = [t0.address, t1.address]
+    t0.peer_addrs = shard_map
+    t1.peer_addrs = shard_map
+    t0.config_extra = lambda aid: {}
+    t1.config_extra = lambda aid: {}
+    clients = []
+    try:
+        a = SocketActorClient(t0.address, backoff=(0.01, 0.1))
+        cfg = a.connect()
+        clients.append(a)
+        assert cfg is not None and cfg["actor_id"] == 0
+        # the handshake carries the whole topology
+        assert [tuple(x) for x in cfg["shard_map"]] == \
+            [tuple(x) for x in shard_map]
+        # learner 0 is now full: the next dialer spills to learner 1
+        b = SocketActorClient(t0.address, backoff=(0.01, 0.1),
+                              dial_timeout=10.0)
+        cfg_b = b.connect()
+        clients.append(b)
+        assert cfg_b is not None, "spill must land on the free learner"
+        assert cfg_b["actor_id"] == 1
+        assert tuple(b.connected_addr) == tuple(t1.address)
+        assert not b.refused
+        # and b's trajectories arrive at learner 1, not learner 0
+        assert b.send_traj(_make_buf(1, 0))
+        got = t1.get(timeout=10.0)
+        assert got is not None and got.actor_id == 1
+        assert t0.get_nowait() is None
+        # a third actor is refused by BOTH (map exhausted): it stops
+        # with refused set, the operator-visible failure
+        c = SocketActorClient(t0.address, backoff=(0.01, 0.1),
+                              dial_timeout=10.0)
+        assert c.connect() is None
+        assert c.refused
+    finally:
+        for cl in clients:
+            cl.close()
+        t0.close()
+        t1.close()
+
+
+@pytest.mark.timeout_s(120)
 def test_dead_actor_slot_is_reclaimed_by_a_relaunched_actor():
     """An external actor machine that crashed and was relaunched (fresh
     nonce, no assigned id) must get the dead actor's slot back instead
