@@ -717,11 +717,20 @@ def _learner_worker(learner_id: int, conn, stop_event,
             peer_addrs=spec.get("peer_addrs"))
 
         tel_every = int(spec.get("telemetry_every", 0))
+        tel_interval = float(spec.get("telemetry_interval_s", 0.0))
         ckpt_every = (int(spec.get("ckpt_every", 0))
                       if learner_id == spec.get("publisher", 0) else 0)
+        last_tel = [time.monotonic()]
 
         def on_update(step, params, _metrics, snapshot_fn):
-            if tel_every and step % tel_every == 0:
+            # step-counted sends drive on_progress logging; time-based
+            # sends keep the parent's live /metrics aggregation fresh
+            # even when a learner's update rate crawls
+            due = tel_every and step % tel_every == 0
+            if not due and tel_interval:
+                due = time.monotonic() - last_tel[0] >= tel_interval
+            if due:
+                last_tel[0] = time.monotonic()
                 try:
                     conn.send(("telemetry", snapshot_fn()))
                 except (OSError, BrokenPipeError):
@@ -740,7 +749,9 @@ def _learner_worker(learner_id: int, conn, stop_event,
 
         metrics, tel = learner.run(
             spec["steps"], warm_buckets=spec.get("warm_buckets", False),
-            on_update=on_update if (tel_every or ckpt_every) else None,
+            on_update=(on_update
+                       if (tel_every or tel_interval or ckpt_every)
+                       else None),
             should_stop=stop_event.is_set)
 
         import zlib
@@ -810,11 +821,13 @@ def run_group_training(
     infer_flush_timeout_s: float = 0.02,
     infer_streams: int = 1,
     telemetry_every: int = 0,
+    telemetry_interval_s: float = 0.0,
     on_progress=None,
     ckpt_every: int = 0,
     on_checkpoint=None,
     return_final_params: bool = False,
     join_timeout_s: float = 60.0,
+    obs=None,
 ):
     """Train ``steps`` synchronized rounds across ``num_learners``
     learner worker processes, the run's ``num_actors`` actor slots
@@ -837,9 +850,22 @@ def run_group_training(
 
     ``telemetry_every``/``on_progress`` stream per-learner snapshots to
     the caller mid-run (the CLI's live log lines);
-    ``ckpt_every``/``on_checkpoint`` stream the publisher's replica
-    (host numpy tree — replicas are identical, one copy suffices) every
-    that-many updates, the mid-run checkpoint hook.
+    ``telemetry_interval_s`` adds *time-based* snapshot shipping on top
+    (each worker also sends whenever that much wall time passed since
+    its last send). ``ckpt_every``/``on_checkpoint`` stream the
+    publisher's replica (host numpy tree — replicas are identical, one
+    copy suffices) every that-many updates, the mid-run checkpoint
+    hook.
+
+    ``obs`` (an ``repro.obs.ObsConfig``) with ``metrics_port`` set runs
+    the group hub's metrics endpoint in THIS process: the workers ship
+    their registries' snapshots up the existing pipes periodically
+    (``telemetry_interval_s``, defaulting to
+    ``obs.telemetry_interval_s``) and ``/metrics`` serves the
+    ``merge_telemetry`` of the latest per-learner snapshots — one port
+    exposes queue depth, fps, lag histograms, reconnects, torn tails
+    for the whole fleet, each learner's subtree labelled
+    ``learner="k"``. The bound address lands in ``obs.bound_address``.
 
     Returns ``(tracker, last_metrics, merged_telemetry)`` — shaped like
     ``run_async_training``'s triple, with the telemetry merged by
@@ -881,6 +907,11 @@ def run_group_training(
         "infer_flush_timeout_s": infer_flush_timeout_s,
         "infer_streams": infer_streams,
         "telemetry_every": telemetry_every, "publisher": 0,
+        "telemetry_interval_s": (
+            telemetry_interval_s or
+            (obs.telemetry_interval_s
+             if obs is not None and obs.metrics_port is not None
+             else 0.0)),
         "ckpt_every": ckpt_every if on_checkpoint is not None else 0,
     }
 
@@ -907,6 +938,24 @@ def run_group_training(
     latest_tel: Dict[int, Dict] = {}
     hub_sent = False
     live = set(range(num_learners))
+
+    server = None
+    if obs is not None and obs.metrics_port is not None:
+        from repro.obs.http import MetricsServer
+
+        def group_snapshot() -> Dict[str, Any]:
+            tels = dict(latest_tel)
+            if not tels:        # nothing shipped yet: a stub, not a 500
+                return {"group": {"num_learners": num_learners,
+                                  "publisher": 0, "stale_dropped": 0,
+                                  "awaiting_first_telemetry": True}}
+            return merge_telemetry(tels, publisher=0)
+
+        server = MetricsServer(group_snapshot, host=obs.metrics_host,
+                               port=obs.metrics_port).start()
+        obs.bound_address = server.address
+        print(f"[obs] group metrics at http://{server.address[0]}:"
+              f"{server.address[1]}/metrics", flush=True)
 
     def _relay_hub(addr) -> None:
         for j in range(1, num_learners):
@@ -974,6 +1023,8 @@ def run_group_training(
                     results[k] = msg[1]
                     live.discard(k)
     finally:
+        if server is not None:
+            server.stop()
         if errors:
             stop.set()
         deadline = time.monotonic() + join_timeout_s

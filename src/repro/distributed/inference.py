@@ -117,7 +117,7 @@ class InferenceService:
     def __init__(self, env, arch_cfg, icfg, store: ParameterStore, *,
                  num_clients: int, flush_timeout_s: float = 0.02,
                  max_batch_requests: Optional[int] = None, seed: int = 0,
-                 rng_key=None):
+                 rng_key=None, registry=None):
         """``rng_key`` (a jax PRNG key) overrides the seed-derived
         sampling stream — a learner group passes each member's
         ``fold_in(key(seed), learner_id)`` key so no two learners'
@@ -153,14 +153,22 @@ class InferenceService:
         self._frontends: List[ProcessFrontend] = []
         self.errors: List[BaseException] = []
 
-        # telemetry (service-thread writes, snapshot() reads)
-        self.batch_hist: collections.Counter = collections.Counter()
+        # telemetry (service-thread writes under self._lock, snapshot()
+        # reads). The hot-path request/frame totals live in a metrics
+        # registry when one is passed so a live /metrics pull and the
+        # end-of-run snapshot read the same storage.
+        if registry is None:
+            from repro.obs.metrics import Registry
+            registry = Registry()
+        self.registry = registry
+        self.batch_hist = registry.int_histogram(
+            "inference.batch_hist").counts
+        self._c_requests = registry.counter("inference.requests")
+        self._c_frames = registry.counter("inference.frames")
         self.flush_full = 0
         self.flush_ready = 0
         self.flush_timeouts = 0
-        self.requests = 0
         self.padded_requests = 0
-        self.frames = 0
         self._waits: collections.deque = collections.deque(maxlen=4096)
         self._last_version = -1
 
@@ -173,6 +181,16 @@ class InferenceService:
         # and their wait() deadline covers straggler flushes, so in a
         # thread-only run the loop would just burn ~hundreds of spurious
         # GIL wake-ups per second on every submit notify
+
+    # counter views (the registry instruments are the storage)
+
+    @property
+    def requests(self) -> int:
+        return self._c_requests.value
+
+    @property
+    def frames(self) -> int:
+        return self._c_frames.value
 
     # ------------------------------------------------------------------
     # the jitted flush: concat K requests -> one forward -> sample
@@ -308,11 +326,11 @@ class InferenceService:
                 self.flush_ready += 1
             else:
                 self.flush_timeouts += 1
-            self.requests += k
+            self._c_requests.inc(k)
             self.padded_requests += kb - k
             self._last_version = version
             for p in batch:
-                self.frames += p.data["last_action"].shape[0]
+                self._c_frames.inc(p.data["last_action"].shape[0])
                 self._waits.append(now - p.submitted_at)
         off = 0
         for p in batch:

@@ -47,6 +47,7 @@ import numpy as np
 from repro.core.metrics import EpisodeTracker
 from repro.distributed.paramstore import ParameterStore
 from repro.distributed.serde import TrajectoryItem
+from repro.obs.metrics import Registry
 
 PyTree = Any
 
@@ -186,6 +187,7 @@ class _HostStager:
     def __init__(self):
         self._slots: Dict[Any, list] = {}
         self._reuse = _device_put_copies()
+        self.last_device_put_s = 0.0    # phase-timing probe, per stack
 
     def stack(self, items: List[TrajectoryItem]) -> Optional[PyTree]:
         """Staged stack of >=2 same-shaped numpy trajectories; None if
@@ -226,7 +228,9 @@ class _HostStager:
             for buf, leaf in zip(bufs, jax.tree.leaves(d)):
                 b = leaf.shape[0]
                 buf[i * b:(i + 1) * b] = leaf
+        t0 = time.monotonic()
         out = jax.device_put(jax.tree.unflatten(treedef, bufs))
+        self.last_device_put_s = time.monotonic() - t0
         if self._reuse:
             slot[2][idx] = out
         return out
@@ -283,7 +287,8 @@ class Learner:
                  max_batch_trajs: int = 4, batch_linger_s: float = 0.0,
                  donate: bool = True, start_step: int = 0,
                  initial_params: Optional[PyTree] = None,
-                 exchange=None):
+                 exchange=None, registry: Optional[Registry] = None,
+                 trace=None, phase_timing: bool = False, profile=None):
         import jax
         import jax.numpy as jnp
 
@@ -359,9 +364,17 @@ class Learner:
         self.pool = None
         self.service = None
 
-        # telemetry state (same fields the runtime always tracked)
-        self.lag_hist: collections.Counter = collections.Counter()
-        self.batch_hist: collections.Counter = collections.Counter()
+        # telemetry state (same pinned snapshot keys the runtime always
+        # reported, but the storage now lives in a metrics registry: the
+        # lag/batch histograms ARE registry instruments — the hot-path
+        # `hist[k] += 1` writes the registry — and everything else is a
+        # pull-time producer, so the live /metrics endpoint and the
+        # end-of-run snapshot can never disagree.
+        self.obs_registry = registry if registry is not None else Registry()
+        self.lag_hist = self.obs_registry.int_histogram(
+            "learner.lag_hist").counts
+        self.batch_hist = self.obs_registry.int_histogram(
+            "learner.batch_hist").counts
         self.updates = start_step
         self.frames_consumed = 0
         self._steady_t0: Optional[float] = None
@@ -371,6 +384,27 @@ class Learner:
         self._first_updates0 = 0
         self._first_frames0 = 0
         self.metrics: Dict = {}
+        # flight recorder hooks (all optional, see repro.obs)
+        self.trace = trace                  # TraceRecorder or None
+        self._phase_timing = bool(phase_timing)
+        self._profile = profile             # ProfileHook or None
+        self._phase_acc = {"collect": 0.0, "host_stage": 0.0,
+                           "device_put": 0.0, "step": 0.0, "publish": 0.0}
+        self._phase_n = 0
+        reg = self.obs_registry
+        reg.register_producer("learner", self._core_telemetry)
+        reg.register_producer(
+            "queue", lambda: (self.queue.snapshot()
+                              if self.queue is not None else None))
+        reg.register_producer(
+            "actors", lambda: (self.pool.stats()
+                               if self.pool is not None else {}))
+        reg.register_producer(
+            "inference", lambda: (self.service.snapshot()
+                                  if self.service is not None else None))
+        reg.register_producer(
+            "exchange", lambda: (self._exchange.snapshot()
+                                 if self._exchange is not None else None))
 
     # ------------------------------------------------------------------
 
@@ -383,7 +417,8 @@ class Learner:
 
     # ------------------------------------------------------------------
 
-    def telemetry_snapshot(self) -> Dict:
+    def _core_telemetry(self) -> Dict:
+        """The ``learner`` registry producer: counts, rates, version."""
         now = time.monotonic()
         if self._steady_t0 is not None:
             dt, u0, f0 = (now - self._steady_t0, self._steady_updates0,
@@ -393,37 +428,64 @@ class Learner:
                           self._first_frames0)
         else:
             dt, u0, f0 = 0.0, 0, 0
-        n_lags = sum(self.lag_hist.values())
-        snap = {
-            "learner_updates": self.updates,
+        return {
+            "updates": self.updates,
             "frames_consumed": self.frames_consumed,
             "updates_per_sec": ((self.updates - u0) / dt
                                 if dt > 0 else 0.0),
             "frames_per_sec": ((self.frames_consumed - f0) / dt
                                if dt > 0 else 0.0),
-            "batch_size_hist": dict(self.batch_hist),
+            "param_version": self.store.version,
+        }
+
+    def telemetry_snapshot(self) -> Dict:
+        """The pinned snapshot key set, assembled from one registry
+        pull — the same storage the live /metrics endpoint reads."""
+        col = self.obs_registry.collect()
+        core = col.get("learner", {})
+        lag_hist = col.get("learner.lag_hist", {})
+        n_lags = sum(lag_hist.values())
+        snap = {
+            "learner_updates": core.get("updates", self.updates),
+            "frames_consumed": core.get("frames_consumed",
+                                        self.frames_consumed),
+            "updates_per_sec": core.get("updates_per_sec", 0.0),
+            "frames_per_sec": core.get("frames_per_sec", 0.0),
+            "batch_size_hist": dict(col.get("learner.batch_hist", {})),
             "lag": {
-                "hist": dict(sorted(self.lag_hist.items())),
-                "mean": (sum(k * v for k, v in self.lag_hist.items())
+                "hist": dict(sorted(lag_hist.items())),
+                "mean": (sum(k * v for k, v in lag_hist.items())
                          / n_lags if n_lags else 0.0),
-                "max": max(self.lag_hist) if self.lag_hist else 0,
+                "max": max(lag_hist) if lag_hist else 0,
                 "measured": n_lags,
             },
-            "queue": self.queue.snapshot(),
-            "actors": (self.pool.stats() if self.pool is not None
-                       else {}),
-            "param_version": self.store.version,
+            "queue": col.get("queue", {}),
+            "actors": col.get("actors", {}),
+            "param_version": core.get("param_version",
+                                      self.store.version),
             "actor_mode": self.actor_mode,
             "donate": self.donate,
         }
-        if self.service is not None:
-            snap["inference"] = self.service.snapshot()
+        if "inference" in col:
+            snap["inference"] = col["inference"]
         if self._exchange is not None:
             # grouped only: the single-learner snapshot keys must stay
             # exactly what run_async_training always reported
             snap["learner_id"] = self.learner_id
             snap["slot_base"] = self.slot_base
-            snap["exchange"] = self._exchange.snapshot()
+            snap["exchange"] = col.get("exchange",
+                                       self._exchange.snapshot())
+        if self._phase_timing:
+            # gated on the flight recorder being enabled: the pinned
+            # key-set equivalence (group-of-one vs single run) holds for
+            # runs without obs, which never see this key
+            n = self._phase_n
+            snap["phases"] = {
+                "updates_timed": n,
+                "total_s": dict(self._phase_acc),
+                "mean_ms": {k: (1e3 * v / n if n else 0.0)
+                            for k, v in self._phase_acc.items()},
+            }
         return snap
 
     # ------------------------------------------------------------------
@@ -459,18 +521,33 @@ class Learner:
                 jax.block_until_ready(out[0])
         self.queue.requeue_front(first)
 
-    def _update_once(self, batch, jnp, jax):
+    def _update_once(self, batch, jnp, jax, timings=None):
         """One training update on ``batch``: fused when alone, split
         backward/exchange/apply when grouped. Returns (published
-        params, metrics) or None when the exchange shut down."""
+        params, metrics) or None when the exchange shut down.
+
+        ``timings`` (a dict, flight-recorder runs only) receives
+        step0/step1/published stamps. On the fused path these bracket
+        the async *dispatch* — blocking for the device would tax the
+        pipeline the recorder exists to observe; the split path's
+        ``np.asarray`` already forces the backward pass, so its stamps
+        are real."""
         if self._exchange is None:
+            if timings is not None:
+                timings["step0"] = time.monotonic()
             self._params, self._opt_state, metrics = self._train_step(
                 self._params, self._opt_state, jnp.int32(self.updates),
                 batch)
             published = (self._snapshot(self._params) if self.donate
                          else self._params)
+            if timings is not None:
+                timings["step1"] = time.monotonic()
             self.store.publish(published)
+            if timings is not None:
+                timings["published"] = time.monotonic()
             return published, metrics
+        if timings is not None:
+            timings["step0"] = time.monotonic()
         grads, metrics = self._grad_step(self._params, batch)
         leaves, treedef = jax.tree.flatten(grads)
         # np.asarray forces the backward pass and lands the gradient
@@ -487,13 +564,41 @@ class Learner:
         metrics.update(ametrics)
         published = (self._snapshot(self._params) if self.donate
                      else self._params)
+        if timings is not None:
+            timings["step1"] = time.monotonic()
         # versioned publish delegation: the exchange's designated
         # publisher numbers the rounds; every learner's store publishes
         # at exactly that version, so the group's actors observe one
         # monotonic version stream no matter which learner they pull
         # from
         self.store.publish_at(published, version)
+        if timings is not None:
+            timings["published"] = time.monotonic()
         return published, metrics
+
+    def _record_obs(self, items, version_now: int, t_deq: float,
+                    t_col: float, t_stk: float,
+                    timings: Dict[str, float]) -> None:
+        """Fold one update's stamps into the phase accumulators and the
+        trace recorder (sampled items only)."""
+        step0 = timings.get("step0", t_stk)
+        step1 = timings.get("step1", step0)
+        pub = timings.get("published", step1)
+        if self._phase_timing:
+            acc = self._phase_acc
+            acc["collect"] += t_col - t_deq
+            acc["host_stage"] += t_stk - t_col
+            acc["device_put"] += self._stager.last_device_put_s
+            acc["step"] += step1 - step0
+            acc["publish"] += pub - step1
+            self._phase_n += 1
+        if self.trace is not None:
+            for it in items:
+                if getattr(it, "trace", None) is not None:
+                    self.trace.record_item(
+                        it, dequeued=t_deq, collected=t_col,
+                        step0=step0, step1=step1, published=pub,
+                        lag=version_now - it.param_version)
 
     def run(self, steps: int, *, warm_buckets: bool = False,
             on_update: Optional[Callable] = None,
@@ -515,6 +620,9 @@ class Learner:
             if warm_buckets:
                 self._warm(self._params, self._opt_state)
 
+            # flight-recorder stamps only when something consumes them:
+            # the plain hot path stays free of per-update clock reads
+            want_t = self._phase_timing or self.trace is not None
             while self.updates < steps:
                 if should_stop is not None and should_stop():
                     break
@@ -522,23 +630,35 @@ class Learner:
                 item = self.queue.get(timeout=0.5)
                 if item is None:
                     continue
+                t_deq = time.monotonic() if want_t else 0.0
                 items = _collect_batch(self.queue, self._buckets, item,
                                        self.batch_linger_s)
                 k = len(items)
+                t_col = time.monotonic() if want_t else 0.0
 
                 version_now = self.store.version
                 for it in items:
                     self.lag_hist[version_now - it.param_version] += 1
                     self.tracker.update(it.actor_id, it.data["rewards"],
                                         it.data["done"])
+                if want_t:
+                    self._stager.last_device_put_s = 0.0
                 batch = _stack(items, self._stager)
-                stepped = self._update_once(batch, jnp, jax)
+                t_stk = time.monotonic() if want_t else 0.0
+                if self._profile is not None:
+                    self._profile.on_step(self.updates)
+                timings = {} if want_t else None
+                stepped = self._update_once(batch, jnp, jax,
+                                            timings=timings)
                 if stepped is None:
                     break                   # exchange shut down under us
                 published, self.metrics = stepped
                 self.updates += 1
                 self.frames_consumed += k * self._frames_per_traj
                 self.batch_hist[k] += 1
+                if want_t:
+                    self._record_obs(items, version_now, t_deq, t_col,
+                                     t_stk, timings)
                 if self._steady_t0 is None:
                     jax.block_until_ready(self._params)
                     if self._first_t0 is None:
@@ -567,6 +687,8 @@ class Learner:
             # with a None reply), join the workers, and only then tear
             # the transport down — a wire closed under a live producer
             # can tear frames
+            if self._profile is not None:
+                self._profile.stop()
             self.pool.stop()
             if self.service is not None:
                 self.service.stop()

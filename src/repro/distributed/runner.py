@@ -51,6 +51,7 @@ def run_actor_loop(
     emit: Callable[[Any], bool],
     should_stop: Callable[[], bool],
     on_unroll: Optional[Callable[[], None]] = None,
+    trace_every: Optional[int] = None,
 ) -> None:
     """Drive one actor until ``should_stop`` or a channel closes.
 
@@ -58,26 +59,46 @@ def run_actor_loop(
     ``emit`` owns backpressure/retry/accounting and returns False only
     when the worker should exit. ``on_unroll`` fires after each finished
     (host-materialized) unroll — the hook for frame counters.
+
+    ``trace_every`` > 0 samples every Nth unroll for the flight
+    recorder: the item carries a stamp dict (``u0``/``u1`` here; the
+    serde/transport layers add theirs downstream). Defaults to the
+    ``REPRO_TRACE_EVERY`` env var so spawned actor children inherit the
+    sampling rate without any pipe-protocol change; 0 disables.
     """
+    import os
+
     import jax  # deferred: keeps this module importable without jax
 
     from repro.distributed.serde import TrajectoryItem
 
+    if trace_every is None:
+        try:
+            trace_every = int(os.environ.get("REPRO_TRACE_EVERY", "0"))
+        except ValueError:
+            trace_every = 0
+
     init_fn, unroll = builder
     base = jax.random.fold_in(jax.random.key(seed), actor_id)
     carry = init_fn(jax.random.fold_in(base, 1))
+    idx = 0
     while not should_stop():
         pulled = pull_params()
         if pulled is None:
             break
         params, version = pulled
+        idx += 1
+        sampled = bool(trace_every) and idx % trace_every == 0
+        u0 = time.monotonic() if sampled else 0.0
         carry, traj = unroll(params, carry)
         # materialise before enqueue: backpressure must reflect finished
         # work, not a ballooning async dispatch queue
         traj = jax.block_until_ready(traj)
         if on_unroll is not None:
             on_unroll()
-        item = TrajectoryItem(traj, version, actor_id, time.monotonic())
+        now = time.monotonic()
+        tr = {"u0": u0, "u1": now} if sampled else None
+        item = TrajectoryItem(traj, version, actor_id, now, tr)
         if not emit(item):
             break
 
@@ -524,9 +545,15 @@ def run_serialized_unroll_actor(*, actor_id: int, env_name: str,
                 continue
             if item is None:
                 return
+            tr = item.trace
+            if tr is not None:
+                tr = dict(tr)
+                tr["e0"] = time.monotonic()     # encode start; serde
+                # stamps e1 itself once the payload bytes are built
             buf = serde.encode_item(serde.TrajectoryItem(
                 jax.tree.map(np.asarray, item.data),
-                item.param_version, item.actor_id, item.produced_at))
+                item.param_version, item.actor_id, item.produced_at,
+                tr))
             if not send_buf(buf):
                 return                  # channel says we are done
 

@@ -130,6 +130,7 @@ def _setup(
     num_learners: int = 1,
     exchange=None,
     peer_addrs=None,
+    obs=None,
 ) -> Learner:
     """Build one learner worker's whole dependency graph — env, params,
     train step, store, optional inference service, transport, actor
@@ -142,6 +143,13 @@ def _setup(
     so a given actor's RNG/env-seed stream — ``fold_in(seed,
     actor_id)`` — does not depend on how the slots are sharded over
     learners.
+
+    ``obs`` (an ``repro.obs.ObsConfig``) turns on the flight recorder:
+    per-update phase timing, the sampled trajectory tracer (when
+    ``trace_path`` is set), and the ``jax.profiler`` window (when
+    ``profile_steps`` is set). The learner's metrics registry is shared
+    with the transport and the inference service either way, so their
+    hot-path counters and the telemetry snapshot read one storage.
     """
     _validate(icfg, max_batch_trajs, actor_backend, actor_mode,
               transport, env_name)
@@ -150,6 +158,17 @@ def _setup(
         from repro.core.driver import small_arch
         arch = small_arch(env)
 
+    trace = profile = None
+    phase_timing = False
+    if obs is not None:
+        phase_timing = True
+        if obs.trace_path:
+            from repro.obs.trace import TraceRecorder
+            trace = TraceRecorder()
+        if obs.profile_steps:
+            from repro.obs.sink import ProfileHook
+            profile = ProfileHook(obs.profile_steps, obs.profile_dir)
+
     learner = Learner(
         arch=arch, icfg=icfg, num_actions=env.num_actions,
         num_envs=num_envs, num_actors=num_actors, transport=None,
@@ -157,7 +176,8 @@ def _setup(
         slot_base=slot_base, actor_mode=actor_mode,
         max_batch_trajs=max_batch_trajs, batch_linger_s=batch_linger_s,
         donate=donate, start_step=start_step,
-        initial_params=initial_params, exchange=exchange)
+        initial_params=initial_params, exchange=exchange,
+        trace=trace, phase_timing=phase_timing, profile=profile)
     store = learner.store
 
     service = None
@@ -181,12 +201,16 @@ def _setup(
             # key (Learner.key = fold_in(key(seed), learner_id)) so no
             # two learners share an action-sampling stream; alone: the
             # plain seed path, byte-identical to what it always was
-            rng_key=(learner.key if num_learners > 1 else None))
-    transport_kw = {}
+            rng_key=(learner.key if num_learners > 1 else None),
+            registry=learner.obs_registry)
+    # one registry per learner worker: the transport's queue/wire
+    # counters land in the same storage the snapshot and the /metrics
+    # endpoint pull from
+    transport_kw = {"registry": learner.obs_registry}
     if transport == "socket":
-        transport_kw = {"listen": listen_addr or ("127.0.0.1", 0),
-                        "max_actors": num_actors,
-                        "slot_base": slot_base}
+        transport_kw.update({"listen": listen_addr or ("127.0.0.1", 0),
+                             "max_actors": num_actors,
+                             "slot_base": slot_base})
     queue = make_transport(transport, queue_capacity, queue_policy,
                            **transport_kw)
     learner.queue = queue
@@ -248,6 +272,7 @@ def run_async_training(
     infer_max_batch_requests: Optional[int] = None,
     infer_streams: int = 1,
     on_update: Optional[Callable[[int, PyTree, Dict, Dict], None]] = None,
+    obs=None,
 ) -> Tuple[MultiTracker, Dict, Dict]:
     """Train until ``steps`` total learner updates with real async acting.
 
@@ -321,7 +346,19 @@ def run_async_training(
     ``warm_buckets=True`` pre-compiles the train step for every batch
     bucket before the timed region, so benchmarks measure steady-state
     throughput rather than XLA compilation.
+
+    ``obs`` (an ``repro.obs.ObsConfig``) runs the whole flight recorder
+    around the training loop: a ``/metrics`` + ``/healthz`` +
+    ``/telemetry`` HTTP endpoint (``metrics_port``; the bound address —
+    useful with port 0 — lands in ``obs.bound_address``), a periodic
+    JSONL telemetry sink (``sink_path``), sampled per-trajectory
+    lifecycle tracing exported as Chrome trace-event JSON
+    (``trace_path``/``trace_every``; the sampling rate reaches spawned
+    actor children through the ``REPRO_TRACE_EVERY`` env var), and a
+    ``jax.profiler`` window over chosen updates (``profile_steps``).
     """
+    import os
+
     learner = _setup(
         env_name, icfg, num_envs,
         num_actors=num_actors, actor_backend=actor_backend,
@@ -333,7 +370,45 @@ def run_async_training(
         start_step=start_step, donate=donate,
         infer_flush_timeout_s=infer_flush_timeout_s,
         infer_max_batch_requests=infer_max_batch_requests,
-        infer_streams=infer_streams)
-    metrics, final_telemetry = learner.run(
-        steps, warm_buckets=warm_buckets, on_update=on_update)
+        infer_streams=infer_streams, obs=obs)
+    server = sink = None
+    prev_trace_env = None
+    trace_env_set = False
+    if obs is not None:
+        if obs.metrics_port is not None:
+            from repro.obs.http import MetricsServer
+            server = MetricsServer(learner.telemetry_snapshot,
+                                   host=obs.metrics_host,
+                                   port=obs.metrics_port).start()
+            obs.bound_address = server.address
+            print(f"[obs] metrics at http://{server.address[0]}:"
+                  f"{server.address[1]}/metrics", flush=True)
+        if obs.sink_path:
+            from repro.obs.sink import JsonlSink
+            sink = JsonlSink(obs.sink_path, learner.telemetry_snapshot,
+                             obs.sink_interval_s).start()
+        if obs.trace_path:
+            # actor children (threads read it too) inherit the sampling
+            # rate through the environment — no pipe-protocol change
+            prev_trace_env = os.environ.get("REPRO_TRACE_EVERY")
+            os.environ["REPRO_TRACE_EVERY"] = str(max(1, obs.trace_every))
+            trace_env_set = True
+    try:
+        metrics, final_telemetry = learner.run(
+            steps, warm_buckets=warm_buckets, on_update=on_update)
+    finally:
+        if trace_env_set:
+            if prev_trace_env is None:
+                os.environ.pop("REPRO_TRACE_EVERY", None)
+            else:
+                os.environ["REPRO_TRACE_EVERY"] = prev_trace_env
+        if obs is not None and obs.trace_path and \
+                learner.trace is not None:
+            n = learner.trace.export(obs.trace_path)
+            print(f"[obs] wrote {n} sampled trajectories -> "
+                  f"{obs.trace_path}", flush=True)
+        if sink is not None:
+            sink.stop()
+        if server is not None:
+            server.stop()
     return learner.tracker, metrics, final_telemetry

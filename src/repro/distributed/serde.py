@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import struct
+import time
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -55,11 +56,17 @@ _DTYPES["bfloat16"] = np.dtype(ml_dtypes.bfloat16)
 @dataclasses.dataclass
 class TrajectoryItem:
     """What flows through a transport: the trajectory pytree plus the
-    provenance needed for measured lag and per-actor accounting."""
+    provenance needed for measured lag and per-actor accounting.
+
+    ``trace`` is the flight recorder's sampled-lifecycle stamp dict
+    (CLOCK_MONOTONIC seconds; see ``repro.obs.trace``) — None on the
+    unsampled fast path, and optional in the wire meta so old encoders
+    and new decoders interoperate both ways."""
     data: PyTree
     param_version: int
     actor_id: int
     produced_at: float
+    trace: Optional[Dict[str, float]] = None
 
 
 class SerdeError(ValueError):
@@ -243,18 +250,33 @@ def decode_tree_into(buf: bytes, dst: PyTree) -> Dict[str, Any]:
 
 
 def encode_item(item: TrajectoryItem) -> bytes:
-    return encode_tree(item.data, meta={
+    meta = {
         "param_version": int(item.param_version),
         "actor_id": int(item.actor_id),
         "produced_at": float(item.produced_at),
-    })
+    }
+    if item.trace is None:
+        return encode_tree(item.data, meta=meta)
+    # flight-recorder path: build the payload bytes first, then stamp the
+    # encode-end time ("e1") — the stamp can still ride in the header that
+    # closes over those bytes, so the receiver sees when encoding finished
+    chunks: List[bytes] = []
+    spec, _ = _encode_node(item.data, chunks, 0, "$")
+    trace = dict(item.trace)
+    trace["e1"] = time.monotonic()
+    meta["trace"] = trace
+    header = json.dumps({"meta": meta, "tree": spec},
+                        separators=(",", ":")).encode("utf-8")
+    return b"".join([_HDR.pack(MAGIC, len(header)), header] + chunks)
 
 
 def decode_item(buf: bytes, copy: bool = False) -> TrajectoryItem:
     data, meta = decode_tree(buf, copy=copy)
+    trace = meta.get("trace")
     return TrajectoryItem(data, int(meta["param_version"]),
                           int(meta["actor_id"]),
-                          float(meta["produced_at"]))
+                          float(meta["produced_at"]),
+                          dict(trace) if trace else None)
 
 
 # ---------------------------------------------------------------------------

@@ -282,7 +282,7 @@ class SocketTransport:
                  listen: Address = ("127.0.0.1", 0),
                  max_actors: Optional[int] = None,
                  data_buf_bytes: int = DATA_BUF_BYTES,
-                 slot_base: int = 0):
+                 slot_base: int = 0, registry=None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got "
                              f"{policy!r}")
@@ -298,7 +298,8 @@ class SocketTransport:
         # full learner spills to one with a free slot instead of dying.
         self.slot_base = slot_base
         self.peer_addrs: Optional[List[Address]] = None
-        self._inner = TrajectoryQueue(capacity, policy)
+        self._inner = TrajectoryQueue(capacity, policy, registry=registry)
+        self.registry = self._inner.registry
         self.on_item: Optional[Callable[[TrajectoryItem], None]] = None
         self.on_reject: Optional[Callable[[TrajectoryItem], None]] = None
         self.config_extra: Optional[Callable[[int],
@@ -321,12 +322,15 @@ class SocketTransport:
         self._next_id = slot_base
         self._threads: List[threading.Thread] = []
 
-        # telemetry (conn-thread writes; snapshot() reads)
-        self.frames_in = 0          # trajectory frames fully received
-        self.bytes_in = 0
-        self.torn_tails = 0         # connections that died mid-frame
-        self.reconnects = 0
-        self.discarded = 0          # frames drained in shutdown-discard
+        # telemetry (conn-thread writes under self._lock; snapshot()
+        # reads). Stored as registry instruments so the live /metrics
+        # endpoint and the end-of-run snapshot read the same storage;
+        # the read-only properties below keep `t.frames_in` etc. working
+        self._c_frames_in = self.registry.counter("socket.frames_in")
+        self._c_bytes_in = self.registry.counter("socket.bytes_in")
+        self._c_torn_tails = self.registry.counter("socket.torn_tails")
+        self._c_reconnects = self.registry.counter("socket.reconnects")
+        self._c_discarded = self.registry.counter("socket.discarded")
         self.decode_errors: List[str] = []      # CRC/magic/serde failures
         self.errors: List[str] = []             # remote actor tracebacks
         self._t0: Optional[float] = None        # first-frame clock
@@ -360,6 +364,28 @@ class SocketTransport:
     @on_drop.setter
     def on_drop(self, fn):
         self._inner.on_drop = fn
+
+    # counter views (the registry instruments are the storage)
+
+    @property
+    def frames_in(self) -> int:
+        return self._c_frames_in.value
+
+    @property
+    def bytes_in(self) -> int:
+        return self._c_bytes_in.value
+
+    @property
+    def torn_tails(self) -> int:
+        return self._c_torn_tails.value
+
+    @property
+    def reconnects(self) -> int:
+        return self._c_reconnects.value
+
+    @property
+    def discarded(self) -> int:
+        return self._c_discarded.value
 
     # ------------------------------------------------------------------
     # accept + handshake
@@ -527,7 +553,7 @@ class SocketTransport:
             # or not the dead connection's thread was reaped yet
             if slot.binds.get(role, 0):
                 slot.reconnects += 1
-                self.reconnects += 1
+                self._c_reconnects.inc()
             slot.binds[role] = slot.binds.get(role, 0) + 1
             old = getattr(slot, role)
             if old is not None:
@@ -546,13 +572,13 @@ class SocketTransport:
                 if d.partial and not d.stopped:
                     with self._lock:
                         slot.torn_tails += 1
-                        self.torn_tails += 1
+                        self._c_torn_tails.inc()
                 return
             except serde.SerdeError as e:       # desynced: drop the conn
                 self.decode_errors.append(repr(e))
                 return
             with self._lock:
-                self.bytes_in += len(payload) + serde.FRAME_HEADER_SIZE
+                self._c_bytes_in.inc(len(payload) + serde.FRAME_HEADER_SIZE)
             if kind == KIND_CTRL:
                 if payload == CTRL_BYE:         # clean shutdown handshake
                     return
@@ -563,12 +589,12 @@ class SocketTransport:
                 # trajectory frames only: frames_in is the numerator of
                 # the throughput telemetry, and a bye must not open the
                 # rate clock
-                self.frames_in += 1
+                self._c_frames_in.inc()
                 if self._t0 is None:
                     self._t0 = time.monotonic()
             if self._discard:
                 with self._lock:
-                    self.discarded += 1
+                    self._c_discarded.inc()
                 continue
             t_recv = time.monotonic()
             try:

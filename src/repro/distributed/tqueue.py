@@ -12,15 +12,20 @@ the learner falls behind is a real systems decision:
   drop_newest  reject the incoming trajectory — keeps FIFO order of what
                was already queued, wastes the newest actor work.
 
-Every outcome is counted (pushed / popped / dropped / stalls) and
-occupancy is accumulated at put-time so a telemetry snapshot can report
-mean fill level without a sampler thread.
+Every outcome is counted (pushed / popped / dropped / stalls) through
+the metrics registry, and occupancy is integrated over time (depth ×
+seconds at that depth) so a telemetry snapshot reports the true mean
+fill level — including the time spent sitting at the current depth —
+without a sampler thread.
 """
 from __future__ import annotations
 
 import collections
 import threading
+import time
 from typing import Any, Callable, Deque, Dict, Optional
+
+from repro.obs.metrics import Registry
 
 POLICIES = ("block", "drop_oldest", "drop_newest")
 
@@ -33,10 +38,17 @@ class TrajectoryQueue:
     be charged for the loss — drop_newest rejections are already visible
     to the caller via ``put`` returning False. The callback runs under
     the queue lock: it must be fast and must not re-enter the queue.
+
+    Counters live in a ``repro.obs.metrics.Registry`` (one is created
+    when none is passed), written under the queue lock — the same
+    serialization the raw ints had — and exposed as read-only properties
+    so existing readers (``q.pushed`` etc.) are unchanged.
     """
 
     def __init__(self, capacity: int = 8, policy: str = "block",
-                 on_drop: Optional[Callable[[Any], None]] = None):
+                 on_drop: Optional[Callable[[Any], None]] = None,
+                 registry: Optional[Registry] = None,
+                 metrics_prefix: str = "queue"):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if policy not in POLICIES:
@@ -53,14 +65,54 @@ class TrajectoryQueue:
         self._not_empty = threading.Condition(self._lock)
         self._not_full = threading.Condition(self._lock)
         self._closed = False
-        # counters (read under lock via snapshot())
-        self.pushed = 0        # items accepted into the queue
-        self.popped = 0        # items handed to consumers
-        self.dropped = 0       # items lost (evicted or rejected)
-        self.put_stalls = 0    # blocking puts that had to wait
-        self.get_stalls = 0    # gets that had to wait
-        self._occupancy_sum = 0
-        self._occupancy_samples = 0
+        # counters (written under the lock; read any time — scalar reads
+        # are atomic under the GIL)
+        self.registry = registry if registry is not None else Registry()
+        p = metrics_prefix
+        self._c_pushed = self.registry.counter(f"{p}.pushed")
+        self._c_popped = self.registry.counter(f"{p}.popped")
+        self._c_dropped = self.registry.counter(f"{p}.dropped")
+        self._c_put_stalls = self.registry.counter(f"{p}.put_stalls")
+        self._c_get_stalls = self.registry.counter(f"{p}.get_stalls")
+        self._g_size = self.registry.gauge(f"{p}.size")
+        # time-weighted occupancy: the integral of depth over time.
+        # _occ_area accumulates depth * seconds-at-that-depth, ticked
+        # before every depth change; snapshot() folds in the open
+        # interval at the current depth so the mean never goes stale
+        # while the queue just sits there.
+        self._occ_area = 0.0
+        self._occ_last = time.monotonic()
+        self._occ_t0 = self._occ_last
+
+    # ------------------------------------------------------------------
+    # counter views (the instruments are the storage)
+
+    @property
+    def pushed(self) -> int:
+        return self._c_pushed.value
+
+    @property
+    def popped(self) -> int:
+        return self._c_popped.value
+
+    @property
+    def dropped(self) -> int:
+        return self._c_dropped.value
+
+    @property
+    def put_stalls(self) -> int:
+        return self._c_put_stalls.value
+
+    @property
+    def get_stalls(self) -> int:
+        return self._c_get_stalls.value
+
+    def _occ_tick(self) -> None:
+        """Integrate the time spent at the current depth. Call under the
+        lock, immediately before any depth change."""
+        now = time.monotonic()
+        self._occ_area += len(self._q) * (now - self._occ_last)
+        self._occ_last = now
 
     # ------------------------------------------------------------------
     # producer side
@@ -84,7 +136,7 @@ class TrajectoryQueue:
             if self.policy == "block":
                 if len(self._q) >= self.capacity:
                     if count_stall:
-                        self.put_stalls += 1
+                        self._c_put_stalls.inc()
                     if not self._not_full.wait_for(
                             lambda: len(self._q) < self.capacity or
                             self._closed, timeout):
@@ -94,9 +146,10 @@ class TrajectoryQueue:
                 self._accept(item)
                 return True
             if len(self._q) >= self.capacity:
-                self.dropped += 1
+                self._c_dropped.inc()
                 if self.policy == "drop_newest":
                     return False                # reject the incoming item
+                self._occ_tick()
                 evicted = self._q.popleft()     # drop_oldest: evict stalest
                 if self.on_drop is not None:
                     self.on_drop(evicted)
@@ -104,10 +157,17 @@ class TrajectoryQueue:
             return True
 
     def _accept(self, item: Any) -> None:
+        # flight-recorder receive stamp: one place covers every
+        # transport, because inproc puts, the shm drain thread, and the
+        # socket reader all land accepted items here. setdefault keeps
+        # the earliest receipt if a retry loop re-puts the same item.
+        tr = getattr(item, "trace", None)
+        if tr is not None:
+            tr.setdefault("r", time.monotonic())
+        self._occ_tick()
         self._q.append(item)
-        self.pushed += 1
-        self._occupancy_sum += len(self._q)
-        self._occupancy_samples += 1
+        self._c_pushed.inc()
+        self._g_size.set(len(self._q))
         self._not_empty.notify()
 
     # ------------------------------------------------------------------
@@ -117,14 +177,16 @@ class TrajectoryQueue:
         """Dequeue the oldest item; None on timeout or closed-and-empty."""
         with self._lock:
             if not self._q:
-                self.get_stalls += 1
+                self._c_get_stalls.inc()
                 if not self._not_empty.wait_for(
                         lambda: self._q or self._closed, timeout):
                     return None
                 if not self._q:
                     return None                 # closed and drained
+            self._occ_tick()
             item = self._q.popleft()
-            self.popped += 1
+            self._c_popped.inc()
+            self._g_size.set(len(self._q))
             self._not_full.notify()
             return item
 
@@ -132,8 +194,10 @@ class TrajectoryQueue:
         with self._lock:
             if not self._q:
                 return None
+            self._occ_tick()
             item = self._q.popleft()
-            self.popped += 1
+            self._c_popped.inc()
+            self._g_size.set(len(self._q))
             self._not_full.notify()
             return item
 
@@ -142,8 +206,10 @@ class TrajectoryQueue:
         dynamic batching took more than it could stack). Not counted as a
         new push; ignores capacity so nothing is lost."""
         with self._lock:
+            self._occ_tick()
             self._q.appendleft(item)
-            self.popped -= 1
+            self._c_popped.inc(-1)
+            self._g_size.set(len(self._q))
             self._not_empty.notify()
 
     # ------------------------------------------------------------------
@@ -167,8 +233,14 @@ class TrajectoryQueue:
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
-            occ = (self._occupancy_sum / self._occupancy_samples
-                   if self._occupancy_samples else 0.0)
+            # fold in the open interval at the current depth so the mean
+            # reflects "now", not just the last depth change (a queue
+            # that filled to 2 and then idled must converge to 2, not
+            # stay frozen at the put-time running mean)
+            now = time.monotonic()
+            area = self._occ_area + len(self._q) * (now - self._occ_last)
+            elapsed = now - self._occ_t0
+            occ = area / elapsed if elapsed > 0 else 0.0
             return {
                 "capacity": self.capacity,
                 "policy": self.policy,

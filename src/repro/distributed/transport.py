@@ -137,7 +137,7 @@ class ShmTransport(Transport):
     rejects_at_put = False
 
     def __init__(self, capacity: int = 8, policy: str = "block",
-                 wire_capacity: Optional[int] = None):
+                 wire_capacity: Optional[int] = None, registry=None):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got "
                              f"{policy!r}")
@@ -146,7 +146,8 @@ class ShmTransport(Transport):
         self._ctx = mp.get_context("spawn")
         self._stop = self._ctx.Event()
         self._wire = self._ctx.Queue(maxsize=wire_capacity or max(2, capacity // 4))
-        self._inner = TrajectoryQueue(capacity, policy)
+        self._inner = TrajectoryQueue(capacity, policy, registry=registry)
+        self.registry = self._inner.registry
         self.on_item: Optional[Callable[[TrajectoryItem], None]] = None
         self.on_reject: Optional[Callable[[TrajectoryItem], None]] = None
         self._closed = False

@@ -135,6 +135,39 @@ def main() -> int:
     p.add_argument("--ckpt-every", type=int, default=200)
     p.add_argument("--log-every", type=int, default=25)
     p.add_argument("--seed", type=int, default=0)
+    obs = p.add_argument_group("observability (async runtime)")
+    obs.add_argument("--metrics-port", type=int, default=None,
+                     help="serve /metrics (Prometheus), /healthz and "
+                          "/telemetry (JSON) from a background HTTP "
+                          "server on the learner (0 = ephemeral port; "
+                          "with --learners N the parent aggregates the "
+                          "whole group behind this one port)")
+    obs.add_argument("--metrics-host", default="127.0.0.1",
+                     help="bind address for --metrics-port")
+    obs.add_argument("--telemetry-json", default="",
+                     help="write the complete final telemetry snapshot "
+                          "(merged across learners for --learners N) to "
+                          "this path as JSON")
+    obs.add_argument("--trace", default="", dest="trace_path",
+                     help="record sampled per-trajectory lifecycle spans "
+                          "(env unroll -> encode -> transport -> queue "
+                          "wait -> collect -> step -> publish) and write "
+                          "Chrome trace-event JSON here (load in "
+                          "Perfetto). Single-learner async runs, "
+                          "actor_mode=unroll")
+    obs.add_argument("--trace-every", type=int, default=64,
+                     help="sample every Nth trajectory per actor for "
+                          "--trace")
+    obs.add_argument("--profile-steps", default="",
+                     help="A:B — wrap learner updates [A, B) in "
+                          "jax.profiler.start_trace/stop_trace")
+    obs.add_argument("--profile-dir", default="/tmp/repro-profile",
+                     help="output directory for --profile-steps traces")
+    obs.add_argument("--telemetry-sink", default="",
+                     help="append periodic JSONL telemetry snapshots to "
+                          "this path while training")
+    obs.add_argument("--sink-interval-s", type=float, default=5.0,
+                     help="seconds between --telemetry-sink lines")
     args = p.parse_args()
 
     if args.connect:
@@ -163,6 +196,32 @@ def main() -> int:
     if args.runtime == "async":
         return _run_async(args, env, arch, icfg)
     return _run_sync(args, env, arch, icfg)
+
+
+def _build_obs(args):
+    """ObsConfig from the CLI flags, or None when no obs flag is set
+    (the runtime then skips all instrumentation glue)."""
+    wants = (args.metrics_port is not None or args.trace_path
+             or args.profile_steps or args.telemetry_sink)
+    if not wants:
+        return None
+    from repro.obs import ObsConfig
+    return ObsConfig(
+        metrics_port=args.metrics_port,
+        metrics_host=args.metrics_host,
+        trace_path=args.trace_path or None,
+        trace_every=max(1, args.trace_every),
+        profile_steps=args.profile_steps or None,
+        profile_dir=args.profile_dir,
+        sink_path=args.telemetry_sink or None,
+        sink_interval_s=args.sink_interval_s)
+
+
+def _dump_telemetry(path: str, tel) -> None:
+    with open(path, "w") as f:
+        json.dump(tel, f, default=float, indent=2)
+        f.write("\n")
+    print(f"telemetry snapshot written to {path}")
 
 
 def _parse_hostport(spec: str, default_host: str = "127.0.0.1"):
@@ -357,7 +416,8 @@ def _run_async(args, env, arch, icfg) -> int:
         donate=not args.no_donate,
         infer_flush_timeout_s=args.infer_flush_ms / 1e3,
         seed=args.seed, arch=arch, initial_params=initial_params,
-        start_step=start_step, on_update=on_update)
+        start_step=start_step, on_update=on_update,
+        obs=_build_obs(args))
     if args.ckpt_dir and last_params[0] is not None:
         ckpt.save(args.ckpt_dir, args.steps, last_params[0])
     print(f"final return(100) = {tracker.mean_return():.3f}")
@@ -368,6 +428,8 @@ def _run_async(args, env, arch, icfg) -> int:
         keys.append("inference")
     print("telemetry:", json.dumps({k: tel[k] for k in keys},
                                    default=float))
+    if args.telemetry_json:
+        _dump_telemetry(args.telemetry_json, tel)
     return 0
 
 
@@ -435,7 +497,7 @@ def _run_group(args, env, arch, icfg, transport) -> int:
         ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
         on_checkpoint=(lambda step, p: ckpt.save(args.ckpt_dir, step, p))
         if args.ckpt_dir else None,
-        return_final_params=True)
+        return_final_params=True, obs=_build_obs(args))
     if args.ckpt_dir:
         ckpt.save(args.ckpt_dir, args.steps, params)
     print(f"final return(100) = {tracker.mean_return():.3f}")
@@ -446,6 +508,8 @@ def _run_group(args, env, arch, icfg, transport) -> int:
                                    default=float))
     per = tel["actors"]["per_learner_trajectories"]
     print("per-learner trajectories:", json.dumps(per))
+    if args.telemetry_json:
+        _dump_telemetry(args.telemetry_json, tel)
     return 0
 
 

@@ -251,3 +251,40 @@ def test_async_measured_lag_and_dynamic_batching():
     assert tel["lag"]["measured"] >= 10   # >= one trajectory per update
     assert tel["frames_consumed"] == tel["lag"]["measured"] * 4 * 8
     assert np.isfinite(float(metrics["loss/total"]))
+
+
+def test_queue_snapshot_occupancy_counts_time_at_current_depth():
+    """Regression: mean_occupancy used to integrate depth only at
+    put/get events, so a queue sitting at depth 2 with no traffic kept
+    reporting the stale event-time value. The snapshot now folds in
+    the elapsed time spent at the current depth."""
+    q = TrajectoryQueue(capacity=8, policy="block")
+    assert q.put(1) and q.put(2)
+    time.sleep(0.15)
+    occ = q.snapshot()["mean_occupancy"]
+    assert 1.7 <= occ <= 2.0, occ
+    # and it keeps integrating: time spent at depth 1 after a get pulls
+    # the mean back down
+    q.get_nowait()
+    time.sleep(0.15)
+    occ2 = q.snapshot()["mean_occupancy"]
+    assert 1.0 <= occ2 < occ, (occ, occ2)
+
+
+def test_learner_lag_summary_math():
+    """Direct unit test of the lag-summary arithmetic in
+    ``telemetry_snapshot``: mean is the count-weighted average over the
+    histogram, max the largest observed bucket, measured the total."""
+    from repro.distributed import runtime as rt
+
+    learner = rt._setup("bandit", _icfg(), 4, num_actors=1)
+    try:
+        learner.lag_hist.update({0: 3, 2: 1, 5: 2})
+        lag = learner.telemetry_snapshot()["lag"]
+        assert lag["measured"] == 6
+        assert lag["mean"] == pytest.approx((0 * 3 + 2 * 1 + 5 * 2) / 6)
+        assert lag["mean"] == pytest.approx(2.0)
+        assert lag["max"] == 5
+        assert lag["hist"] == {0: 3, 2: 1, 5: 2}
+    finally:
+        learner.queue.close()

@@ -300,6 +300,43 @@ def test_merge_telemetry_aggregates_without_key_collisions():
         merge_telemetry({})
 
 
+def test_merge_telemetry_three_learners():
+    """The merge at fleet width 3: lag histograms fold across all
+    members (shared buckets sum, disjoint ones survive), synchronized
+    counters come from the publisher while frames/fps sum, and every
+    per-learner subtree lands under its own ``learners.learner_<k>``
+    key with no collisions."""
+    snaps = {0: _fake_snap(0, 20, 1000, 12, {0: 5, 1: 5}),
+             1: _fake_snap(1, 20, 800, 9, {1: 4, 2: 6}),
+             2: _fake_snap(2, 20, 600, 7, {2: 1, 7: 3})}
+    merged = merge_telemetry(snaps, publisher=0)
+    # one namespaced subtree per learner, nothing dropped or merged
+    assert sorted(merged["learners"]) == ["learner_0", "learner_1",
+                                          "learner_2"]
+    for k, trajs in ((0, 12), (1, 9), (2, 7)):
+        sub = merged["learners"][f"learner_{k}"]
+        assert sub["queue"]["pushed"] == trajs
+        assert sub["learner_id"] == k
+        assert sub["slot_base"] == 2 * k
+    # lag histograms fold: bucket 1 from learners 0+1, bucket 2 from
+    # 1+2, bucket 7 only from learner 2
+    assert merged["lag"]["hist"] == {0: 5, 1: 9, 2: 7, 7: 3}
+    assert merged["lag"]["measured"] == 24
+    assert merged["lag"]["max"] == 7
+    # throughput sums; synchronized counters follow the publisher
+    assert merged["frames_consumed"] == 2400
+    assert merged["frames_per_sec"] == 600.0
+    assert merged["learner_updates"] == 20
+    assert merged["param_version"] == 20
+    assert merged["actors"]["num_actors"] == 6
+    assert merged["actors"]["trajectories"] == 28
+    assert merged["actors"]["per_learner_trajectories"] == {
+        "learner_0": 12, "learner_1": 9, "learner_2": 7}
+    assert merged["group"]["num_learners"] == 3
+    assert merged["group"]["stale_dropped"] == 3  # 0 + 1 + 2
+    assert merged["group"]["publisher"] == 0
+
+
 # ---------------------------------------------------------------------------
 # determinism: the group-of-one worker IS the single-learner runtime
 
