@@ -20,6 +20,11 @@ Variants mirror Figure 2:
   impala_socket   actor processes dialing the learner over TCP loopback
                   (the cross-machine deployment shape, on one box):
                   CRC-framed trajectories up, versioned params down
+  impala_socket_bf16  the same socket deployment with the bf16 wire
+                  codec: trajectory observations and published params
+                  quantized on the wire; tracked next to impala_socket
+                  (fps + bytes/frame + mean lag) so the bandwidth diet
+                  is measured, not assumed
   impala_infserve       thread actors in *inference mode*: host-side env
                   stepping against the dynamic-batching
                   InferenceService (one batched policy forward on the
@@ -104,7 +109,8 @@ def _measure_async(env_name: str, num_envs: int = 32, unroll: int = 20,
                    iters: int = 20, num_actors: int = 2,
                    actor_backend: str = "thread",
                    transport: str = "inproc",
-                   actor_mode: str = "unroll") -> float:
+                   actor_mode: str = "unroll",
+                   wire_codec: str = "none") -> dict:
     from repro.distributed import run_async_training
 
     env = make_env(env_name)
@@ -112,10 +118,21 @@ def _measure_async(env_name: str, num_envs: int = 32, unroll: int = 20,
     _, _, tel = run_async_training(
         env_name, icfg, num_envs, iters, num_actors=num_actors,
         actor_backend=actor_backend, actor_mode=actor_mode,
-        transport=transport,
+        transport=transport, wire_codec=wire_codec,
         queue_capacity=8, queue_policy="block", max_batch_trajs=4,
         seed=0, arch=small_arch(env), warm_buckets=True)
-    return tel["frames_per_sec"]
+    return tel
+
+
+def _wire_stats(tel: dict) -> dict:
+    """Trajectory bytes/frame + mean policy lag for the wire-codec
+    comparison rows in the JSON."""
+    q = tel.get("queue", {})
+    return {
+        "bytes_per_frame": round(q.get("bytes_per_frame", 0.0), 2),
+        "wire_codec": q.get("wire_codec", "none"),
+        "lag_mean": round(tel.get("lag", {}).get("mean", 0.0), 3),
+    }
 
 
 def _measure_group(env_name: str, num_envs: int = 32, unroll: int = 20,
@@ -135,7 +152,7 @@ def _measure_group(env_name: str, num_envs: int = 32, unroll: int = 20,
     return tel["frames_per_sec"]
 
 
-def _write_json(fps_by_env) -> None:
+def _write_json(fps_by_env, wire_by_env) -> None:
     out = {
         "benchmark": "throughput",
         "unit": "frames_per_sec",
@@ -150,6 +167,11 @@ def _write_json(fps_by_env) -> None:
         "variants": {f"{env_name}/{variant}": round(v, 2)
                      for env_name, fps in fps_by_env.items()
                      for variant, v in fps.items()},
+        # trajectory bytes/frame + mean policy lag for the socket
+        # variants, so the wire-codec diet is tracked alongside fps
+        "wire": {f"{env_name}/{variant}": stats
+                 for env_name, per in wire_by_env.items()
+                 for variant, stats in per.items()},
     }
     path = os.environ.get("BENCH_JSON", "BENCH_throughput.json")
     with open(path, "w") as f:
@@ -168,6 +190,7 @@ def run() -> None:
         for e in os.environ.get("BENCH_ENVS", "catch,chase").split(",")
         if e.strip())
     fps_by_env = {}
+    wire_by_env = {}
     for env_name in env_names:
         fps = fps_by_env.setdefault(env_name, {})
         for variant in ("a2c_sync_step", "a2c_sync_traj", "impala"):
@@ -181,32 +204,47 @@ def run() -> None:
         # backend), so short runs measure mostly ramp noise
         async_iters = max(iters * 3, 15)
         fps["impala_async"] = _measure_async(
-            env_name, iters=async_iters, num_actors=async_actors)
+            env_name, iters=async_iters,
+            num_actors=async_actors)["frames_per_sec"]
         emit(f"throughput/{env_name}/impala_async",
              1e6 / max(fps["impala_async"], 1e-9),
              f"fps={fps['impala_async']:.0f}")
         fps["impala_proc"] = _measure_async(
             env_name, iters=async_iters, num_actors=async_actors,
-            actor_backend="process", transport="shm")
+            actor_backend="process", transport="shm")["frames_per_sec"]
         emit(f"throughput/{env_name}/impala_proc",
              1e6 / max(fps["impala_proc"], 1e-9),
              f"fps={fps['impala_proc']:.0f}")
-        fps["impala_socket"] = _measure_async(
+        tel_sock = _measure_async(
             env_name, iters=async_iters, num_actors=async_actors,
             actor_backend="remote", transport="socket")
+        fps["impala_socket"] = tel_sock["frames_per_sec"]
+        wire_by_env.setdefault(env_name, {})["impala_socket"] = \
+            _wire_stats(tel_sock)
         emit(f"throughput/{env_name}/impala_socket",
              1e6 / max(fps["impala_socket"], 1e-9),
              f"fps={fps['impala_socket']:.0f}")
+        # the same socket deployment with bf16-quantized wire payloads:
+        # the fps should hold (or improve) while trajectory bytes/frame
+        # drops >= 1.5x — the bandwidth diet headline number
+        tel_bf16 = _measure_async(
+            env_name, iters=async_iters, num_actors=async_actors,
+            actor_backend="remote", transport="socket", wire_codec="bf16")
+        fps["impala_socket_bf16"] = tel_bf16["frames_per_sec"]
+        wire_by_env[env_name]["impala_socket_bf16"] = _wire_stats(tel_bf16)
+        emit(f"throughput/{env_name}/impala_socket_bf16",
+             1e6 / max(fps["impala_socket_bf16"], 1e-9),
+             f"fps={fps['impala_socket_bf16']:.0f}")
         fps["impala_infserve"] = _measure_async(
             env_name, iters=async_iters, num_actors=async_actors,
-            actor_mode="inference")
+            actor_mode="inference")["frames_per_sec"]
         emit(f"throughput/{env_name}/impala_infserve",
              1e6 / max(fps["impala_infserve"], 1e-9),
              f"fps={fps['impala_infserve']:.0f}")
         fps["impala_infserve_proc"] = _measure_async(
             env_name, iters=async_iters, num_actors=async_actors,
             actor_backend="process", transport="shm",
-            actor_mode="inference")
+            actor_mode="inference")["frames_per_sec"]
         emit(f"throughput/{env_name}/impala_infserve_proc",
              1e6 / max(fps["impala_infserve_proc"], 1e-9),
              f"fps={fps['impala_infserve_proc']:.0f}")
@@ -224,8 +262,14 @@ def run() -> None:
              f"x{fps['impala_proc'] / max(fps['impala_async'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/socket_vs_proc", 0.0,
              f"x{fps['impala_socket'] / max(fps['impala_proc'], 1e-9):.2f}")
+        w = wire_by_env[env_name]
+        bpf_ratio = (w["impala_socket"]["bytes_per_frame"] /
+                     max(w["impala_socket_bf16"]["bytes_per_frame"], 1e-9))
+        emit(f"throughput/{env_name}/bf16_wire_diet_bytes_per_frame", 0.0,
+             f"x{bpf_ratio:.2f} ({w['impala_socket']['bytes_per_frame']:.0f}"
+             f" -> {w['impala_socket_bf16']['bytes_per_frame']:.0f} B/frame)")
         emit(f"throughput/{env_name}/infserve_speedup_vs_async", 0.0,
              f"x{fps['impala_infserve'] / max(fps['impala_async'], 1e-9):.2f}")
         emit(f"throughput/{env_name}/group2_vs_proc", 0.0,
              f"x{fps['impala_2learner'] / max(fps['impala_proc'], 1e-9):.2f}")
-    _write_json(fps_by_env)
+    _write_json(fps_by_env, wire_by_env)

@@ -13,16 +13,18 @@ import jax.numpy as jnp
 
 from repro.configs.base import ImpalaConfig
 from repro.core import corrections, vtrace as vtrace_lib
+from repro.kernels import vtrace as vtrace_kernels
 
 
 def resolve_vtrace_impl(impl: str = "auto") -> str:
     """Map the ``auto`` V-trace implementation choice to a concrete one:
-    the fused Pallas kernel where it compiles for real (TPU), the
-    ``lax.scan`` path everywhere else. Explicit choices pass through, so
-    ablations and tests can still pin any implementation."""
+    the fused loss/V-trace Pallas kernel where it compiles for real
+    (TPU), the ``lax.scan`` path everywhere else. Explicit choices pass
+    through, so ablations and tests can still pin any implementation
+    (``fused`` / ``pallas`` / ``scan`` / ``reference``)."""
     if impl != "auto":
         return impl
-    return "pallas" if jax.default_backend() == "tpu" else "scan"
+    return "fused" if jax.default_backend() == "tpu" else "scan"
 
 
 def reward_clip(rewards: jax.Array, mode: str) -> jax.Array:
@@ -76,6 +78,14 @@ def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
     """
     impl = resolve_vtrace_impl(impl)
     rewards = reward_clip(batch["rewards"], cfg.reward_clip)
+    if impl == "fused":
+        if (cfg.correction == "vtrace" and
+                getattr(cfg, "pg_q_estimate", "vtrace") != "baseline_v"):
+            return _impala_loss_fused(cfg, target_logits, values, batch,
+                                      rewards)
+        # ablation variants keep their dedicated math; drop to the
+        # plain V-trace kernel for whatever scan they do use
+        impl = "pallas" if jax.default_backend() == "tpu" else "scan"
     vs, pg_adv = corrections.compute_correction(
         cfg, batch["behaviour_logprob"], target_logits, batch["actions"],
         batch["discounts"], rewards, values, batch["bootstrap_value"],
@@ -84,6 +94,44 @@ def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
     pg = policy_gradient_loss(target_logits, batch["actions"], pg_adv, eps)
     bl = baseline_loss(values, vs)
     ent = entropy_loss(target_logits)
+    total = pg + cfg.baseline_cost * bl + cfg.entropy_cost * ent
+    metrics = {
+        "loss/total": total,
+        "loss/pg": pg,
+        "loss/baseline": bl,
+        "loss/entropy": ent,
+        "vtrace/mean_vs": jnp.mean(vs),
+        "vtrace/mean_pg_adv": jnp.mean(pg_adv),
+    }
+    return total, metrics
+
+
+def _impala_loss_fused(cfg: ImpalaConfig, target_logits, values, batch,
+                       rewards) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Fused-kernel assembly of the same total as ``impala_loss``: one
+    Pallas launch produces target log-probs, per-step negative entropy,
+    v_s targets and pg advantages; only the final reductions stay in
+    XLA. Batch-major inputs are transposed to the kernel's time-major
+    layout here."""
+    num_actions = target_logits.shape[-1]
+    logits = jnp.moveaxis(target_logits.astype(jnp.float32), 1, 0)
+    onehot = jax.nn.one_hot(
+        jnp.moveaxis(batch["actions"], 1, 0), num_actions,
+        dtype=jnp.float32)
+    values_f = values.astype(jnp.float32)
+    v_tp1 = jnp.concatenate(
+        [values_f[:, 1:],
+         batch["bootstrap_value"].astype(jnp.float32)[:, None]], axis=1)
+    tm = lambda x: jnp.moveaxis(x.astype(jnp.float32), 1, 0)  # noqa: E731
+    tlp, ne, vs, pg_adv = vtrace_kernels.fused_loss_vtrace(
+        logits, onehot, tm(batch["behaviour_logprob"]),
+        tm(batch["discounts"]), tm(rewards), tm(values_f), tm(v_tp1),
+        cfg.rho_bar, cfg.c_bar, cfg.lambda_)
+    vs = jax.lax.stop_gradient(vs)
+    pg_adv = jax.lax.stop_gradient(pg_adv)
+    pg = -jnp.sum(pg_adv * tlp)
+    bl = 0.5 * jnp.sum(jnp.square(vs - jnp.moveaxis(values_f, 1, 0)))
+    ent = jnp.sum(ne)
     total = pg + cfg.baseline_cost * bl + cfg.entropy_cost * ent
     metrics = {
         "loss/total": total,

@@ -54,8 +54,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.distributed import serde
-from repro.distributed.socket_transport import (CTRL_BYE, CTRL_STOP,
-                                                Disconnected,
+from repro.distributed.socket_transport import (CTRL_BYE, CTRL_REFUSED,
+                                                CTRL_STOP, Disconnected,
                                                 FrameChannel, KIND_CTRL,
                                                 KIND_GRAD,
                                                 KIND_GRAD_MEAN,
@@ -172,12 +172,19 @@ class GradHub(GradientExchange):
     def __init__(self, num_learners: int, *,
                  listen: Address = ("127.0.0.1", 0),
                  stale_after_s: float = 180.0,
-                 stop_event: Optional[Any] = None):
+                 stop_event: Optional[Any] = None,
+                 wire_codec: str = serde.DEFAULT_CODEC):
         if num_learners < 1:
             raise ValueError("num_learners must be >= 1")
         self.learner_id = 0
         self.num_learners = num_learners
         self.stale_after_s = stale_after_s
+        # KIND_GRAD_MEAN broadcasts are encoded with this; spokes must
+        # announce the same codec in their HELLO or be refused — a
+        # mixed-codec group would average quantization error unevenly
+        # across replicas, which the digest check would only catch at
+        # the very end of the run
+        self.wire_codec = serde.check_codec(wire_codec)
         self._ext_stop = stop_event
         self._stop = threading.Event()
         self._cond = threading.Condition()
@@ -238,6 +245,20 @@ class GradHub(GradientExchange):
             lid = int(hello["learner_id"])
             if kind != KIND_HELLO or hello.get("role") != "learner" or \
                     not 0 < lid < self.num_learners:
+                chan.close()
+                return
+            spoke_codec = hello.get("wire_codec", serde.DEFAULT_CODEC)
+            if spoke_codec != self.wire_codec:
+                # refuse with a named reason, not a silent close: the
+                # spoke raises CodecMismatchError instead of diagnosing
+                # a generic "hub connection lost"
+                msg = (CTRL_REFUSED + b" wire_codec mismatch: hub "
+                       b"speaks " + self.wire_codec.encode() +
+                       b", spoke announced " + str(spoke_codec).encode())
+                bye = time.monotonic() + 5.0
+                chan.send(KIND_CTRL, lid, msg,
+                          stop=lambda: self._stopped() or
+                          time.monotonic() > bye)
                 chan.close()
                 return
         except (Disconnected, serde.SerdeError, ValueError, KeyError):
@@ -317,7 +338,14 @@ class GradHub(GradientExchange):
         mean = _mean_leaves(got)
         version = round_idx + 1
         buf = serde.encode_grads(mean, round_idx=round_idx,
-                                 learner_id=0, version=version)
+                                 learner_id=0, version=version,
+                                 codec=self.wire_codec)
+        if self.wire_codec != "none":
+            # lossy codec: spokes apply the DECODED broadcast, so the
+            # hub must apply the same round-tripped values — applying
+            # its pre-quantization mean would silently fork the
+            # replicas (caught by the params_digest identity check)
+            mean, _meta = serde.decode_grads(buf, copy=True)
         with self._cond:
             # history BEFORE the spoke snapshot, under ONE lock: a
             # spoke registering concurrently either lands in this
@@ -354,6 +382,7 @@ class GradHub(GradientExchange):
         with self._cond:
             snap.update({
                 "rounds": self.rounds,
+                "wire_codec": self.wire_codec,
                 "stale_dropped": self.stale_dropped,
                 "partial_rounds": self.partial_rounds,
                 "dead_learners": sorted(self._dead),
@@ -396,12 +425,14 @@ class SpokeExchange(GradientExchange):
                  num_learners: int, *,
                  stop_event: Optional[Any] = None,
                  dial_timeout_s: float = 120.0,
-                 reply_timeout_s: float = 600.0):
+                 reply_timeout_s: float = 600.0,
+                 wire_codec: str = serde.DEFAULT_CODEC):
         if not 0 < learner_id < num_learners:
             raise ValueError(f"spoke learner_id must be in "
                              f"(0, {num_learners}), got {learner_id}")
         self.learner_id = learner_id
         self.num_learners = num_learners
+        self.wire_codec = serde.check_codec(wire_codec)
         self._addr = tuple(address)
         self._ext_stop = stop_event
         self._stop = threading.Event()
@@ -409,6 +440,7 @@ class SpokeExchange(GradientExchange):
         self._cond = threading.Condition()
         self._means: Dict[int, Tuple[List[np.ndarray], int]] = {}
         self._hub_gone = False
+        self._refused: Optional[str] = None
         # telemetry
         self.rounds = 0
         self.reduce_wait_s = 0.0
@@ -423,7 +455,9 @@ class SpokeExchange(GradientExchange):
                 sock = socket.create_connection(self._addr, timeout=1.0)
                 chan = FrameChannel(sock)
                 hello = json.dumps({"role": "learner",
-                                    "learner_id": learner_id}).encode()
+                                    "learner_id": learner_id,
+                                    "wire_codec": self.wire_codec}
+                                   ).encode()
                 if chan.send(KIND_HELLO, learner_id, hello,
                              stop=self._stopped):
                     break
@@ -462,6 +496,12 @@ class SpokeExchange(GradientExchange):
                 break
             if kind == KIND_CTRL and payload == CTRL_STOP:
                 break
+            if kind == KIND_CTRL and payload.startswith(CTRL_REFUSED):
+                with self._cond:
+                    self._refused = (
+                        payload[len(CTRL_REFUSED):].strip().decode(
+                            "utf-8", "replace") or "hub refused spoke")
+                break
             if kind != KIND_GRAD_MEAN:
                 continue
             try:
@@ -482,7 +522,8 @@ class SpokeExchange(GradientExchange):
     def allreduce(self, leaves, round_idx):
         t0 = time.monotonic()
         buf = serde.encode_grads(list(leaves), round_idx=round_idx,
-                                 learner_id=self.learner_id)
+                                 learner_id=self.learner_id,
+                                 codec=self.wire_codec)
         sent = self._chan.send(KIND_GRAD, self.learner_id, buf,
                                stop=self._stopped)
         # a failed send is NOT fatal by itself: the hub's stale rule
@@ -494,6 +535,10 @@ class SpokeExchange(GradientExchange):
             while round_idx not in self._means:
                 if self._stopped():
                     return None
+                if self._refused is not None:
+                    raise serde.CodecMismatchError(
+                        f"gradient-exchange hub refused learner "
+                        f"{self.learner_id}: {self._refused}")
                 if self._hub_gone:
                     raise RuntimeError(
                         "gradient-exchange hub connection lost "
@@ -533,6 +578,7 @@ class SpokeExchange(GradientExchange):
         with self._cond:
             snap.update({
                 "rounds": self.rounds,
+                "wire_codec": self.wire_codec,
                 "hub": list(self._addr),
                 "hub_gone": self._hub_gone,
                 "reduce_wait_ms_mean": (1e3 * self.reduce_wait_s /
@@ -669,13 +715,15 @@ def _learner_worker(learner_id: int, conn, stop_event,
     status = 1
     try:
         num_learners = int(spec["num_learners"])
+        wire_codec = spec.get("wire_codec", serde.DEFAULT_CODEC)
         exchange = None
         if num_learners > 1:
             if learner_id == 0:
                 exchange = GradHub(
                     num_learners,
                     stale_after_s=spec["stale_after_s"],
-                    stop_event=stop_event)
+                    stop_event=stop_event,
+                    wire_codec=wire_codec)
                 conn.send(("hub", list(exchange.address)))
             else:
                 msg = conn.recv()       # parent relays the hub address
@@ -686,7 +734,8 @@ def _learner_worker(learner_id: int, conn, stop_event,
                     tuple(msg[1]), learner_id, num_learners,
                     stop_event=stop_event,
                     reply_timeout_s=max(600.0,
-                                        4 * spec["stale_after_s"]))
+                                        4 * spec["stale_after_s"]),
+                    wire_codec=wire_codec)
         # num_learners == 1: no exchange at all — the worker then runs
         # the exact fused donated train step run_async_training runs,
         # which is what the first-train-step bit-match test pins
@@ -714,7 +763,9 @@ def _learner_worker(learner_id: int, conn, stop_event,
             infer_streams=spec["infer_streams"],
             slot_base=base, learner_id=learner_id,
             num_learners=num_learners, exchange=exchange,
-            peer_addrs=spec.get("peer_addrs"))
+            peer_addrs=spec.get("peer_addrs"),
+            wire_codec=wire_codec,
+            vtrace_impl=spec.get("vtrace_impl", "auto"))
 
         tel_every = int(spec.get("telemetry_every", 0))
         tel_interval = float(spec.get("telemetry_interval_s", 0.0))
@@ -820,6 +871,8 @@ def run_group_training(
     stale_after_s: float = 180.0,
     infer_flush_timeout_s: float = 0.02,
     infer_streams: int = 1,
+    wire_codec: str = serde.DEFAULT_CODEC,
+    vtrace_impl: str = "auto",
     telemetry_every: int = 0,
     telemetry_interval_s: float = 0.0,
     on_progress=None,
@@ -906,6 +959,8 @@ def run_group_training(
         "warm_buckets": warm_buckets, "stale_after_s": stale_after_s,
         "infer_flush_timeout_s": infer_flush_timeout_s,
         "infer_streams": infer_streams,
+        "wire_codec": serde.check_codec(wire_codec),
+        "vtrace_impl": vtrace_impl,
         "telemetry_every": telemetry_every, "publisher": 0,
         "telemetry_interval_s": (
             telemetry_interval_s or
@@ -1056,6 +1111,7 @@ def run_group_training(
         {k: r["telemetry"] for k, r in results.items()},
         publisher=0,
         group_extra={"rounds": steps,
+                     "wire_codec": wire_codec,
                      "param_versions": versions,
                      "param_digests": digests,
                      "replicas_identical": len(set(digests.values())) == 1,

@@ -84,6 +84,32 @@ class _Waiter:
         self.event.set()
 
 
+def _wait_bucket(wait_s: float) -> int:
+    """Power-of-two microsecond bucket for a queue wait: bucket ``k``
+    covers ``[2^(k-1), 2^k)`` µs (k=0 is the sub-µs bucket). Integer
+    keys so the registry's ``IntHistogram`` holds it and ``/metrics``
+    renders one sample per bucket."""
+    return max(0, int(wait_s * 1e6)).bit_length()
+
+
+def _hist_quantile_ms(counts: Dict[int, int], q: float) -> float:
+    """The q-quantile's bucket *upper bound* in ms, from a
+    ``_wait_bucket`` histogram. Resolution is a factor of two — honest
+    about what a bucketed histogram knows, and mergeable across
+    learners, which the late point-sample deque this replaced was
+    not."""
+    total = sum(counts.values())
+    if not total:
+        return 0.0
+    rank = q * total
+    acc = 0
+    for k in sorted(counts):
+        acc += counts[k]
+        if acc >= rank:
+            return (1 << k) / 1e3
+    return (1 << max(counts)) / 1e3
+
+
 def _pow2_floor(n: int) -> int:
     b = 1
     while b * 2 <= n:
@@ -163,13 +189,18 @@ class InferenceService:
         self.registry = registry
         self.batch_hist = registry.int_histogram(
             "inference.batch_hist").counts
+        # queue waits live in a registry histogram (power-of-two µs
+        # buckets), not a bounded deque of samples: the percentiles in
+        # snapshot() derive from ALL waits since start, and /metrics
+        # exposes the full distribution as bucket-labelled samples
+        self.wait_hist = registry.int_histogram(
+            "inference.queue_wait_hist").counts
         self._c_requests = registry.counter("inference.requests")
         self._c_frames = registry.counter("inference.frames")
         self.flush_full = 0
         self.flush_ready = 0
         self.flush_timeouts = 0
         self.padded_requests = 0
-        self._waits: collections.deque = collections.deque(maxlen=4096)
         self._last_version = -1
 
         self._thread = threading.Thread(target=self._loop,
@@ -331,7 +362,7 @@ class InferenceService:
             self._last_version = version
             for p in batch:
                 self._c_frames.inc(p.data["last_action"].shape[0])
-                self._waits.append(now - p.submitted_at)
+                self.wait_hist[_wait_bucket(now - p.submitted_at)] += 1
         off = 0
         for p in batch:
             b = p.data["last_action"].shape[0]
@@ -530,7 +561,7 @@ class InferenceService:
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
-            waits = np.asarray(self._waits, dtype=np.float64) * 1e3
+            waits = dict(self.wait_hist)
             flushes = (self.flush_full + self.flush_ready +
                        self.flush_timeouts)
             return {
@@ -543,10 +574,13 @@ class InferenceService:
                 "padded_requests": self.padded_requests,
                 "frames": self.frames,
                 "mean_batch": (self.requests / flushes if flushes else 0.0),
-                "queue_wait_ms_p50": (float(np.percentile(waits, 50))
-                                      if waits.size else 0.0),
-                "queue_wait_ms_p95": (float(np.percentile(waits, 95))
-                                      if waits.size else 0.0),
+                # bucket k covers [2^(k-1), 2^k) µs; /metrics renders
+                # one repro_inference_queue_wait_hist{bucket="k"} per key
+                "queue_wait_hist": dict(sorted(waits.items())),
+                # quantiles derived from the full-run histogram (bucket
+                # upper bounds): same keys the log line always printed
+                "queue_wait_ms_p50": _hist_quantile_ms(waits, 0.50),
+                "queue_wait_ms_p95": _hist_quantile_ms(waits, 0.95),
                 "flush_timeout_s": self.flush_timeout_s,
                 "max_batch_requests": self.max_batch_requests,
                 "param_version": self._last_version,

@@ -288,6 +288,7 @@ class Learner:
                  donate: bool = True, start_step: int = 0,
                  initial_params: Optional[PyTree] = None,
                  exchange=None, registry: Optional[Registry] = None,
+                 wire_codec: str = "none", vtrace_impl: str = "auto",
                  trace=None, phase_timing: bool = False, profile=None):
         import jax
         import jax.numpy as jnp
@@ -309,6 +310,8 @@ class Learner:
         self.batch_linger_s = batch_linger_s
         self.queue = transport
         self._exchange = exchange
+        self.wire_codec = wire_codec
+        self.vtrace_impl = vtrace_impl
         # learner-local randomness (NOT param init): fold the learner id
         # into the run seed so two learners of one group never share a
         # stream. Today this feeds the grouped inference service's
@@ -326,7 +329,7 @@ class Learner:
             params = pcommon.init_params(specs, jax.random.key(seed))
         if exchange is None:
             train_step, opt = learner_lib.build_train_step(
-                arch, icfg, num_actions)
+                arch, icfg, num_actions, vtrace_impl=vtrace_impl)
             if donate:
                 train_step = jax.jit(train_step, donate_argnums=(0, 1))
             else:
@@ -336,7 +339,7 @@ class Learner:
             self._apply_step = None
         else:
             grad_step, apply_step, opt = learner_lib.build_grad_apply_steps(
-                arch, icfg, num_actions)
+                arch, icfg, num_actions, vtrace_impl=vtrace_impl)
             self._train_step = None
             self._grad_step = jax.jit(grad_step)
             if donate:
@@ -354,7 +357,7 @@ class Learner:
         self._opt_state = opt.init(params)
         self.store = ParameterStore(
             self._snapshot(params) if donate else params,
-            version=start_step)
+            version=start_step, wire_codec=wire_codec)
         self.start_step = start_step
         self.tracker = MultiTracker(num_actors, num_envs,
                                     slot_base=slot_base)
@@ -436,6 +439,9 @@ class Learner:
             "frames_per_sec": ((self.frames_consumed - f0) / dt
                                if dt > 0 else 0.0),
             "param_version": self.store.version,
+            "wire_codec": self.wire_codec,
+            "param_wire_bytes": self.store.serialized_wire_bytes,
+            "param_raw_bytes": self.store.serialized_raw_bytes,
         }
 
     def telemetry_snapshot(self) -> Dict:

@@ -380,7 +380,10 @@ def remote_actor_main(address, stop_event: Optional[Any] = None,
                       env_name=cfg["env"], arch_cfg=arch_cfg, icfg=icfg,
                       num_envs=int(cfg["num_envs"]),
                       seed=int(cfg["seed"]), send_buf=net.send_traj,
-                      stop=stop)
+                      stop=stop,
+                      # negotiated at the handshake: check_codec already
+                      # vetted it (an unknown codec refused the dial)
+                      wire_codec=net.wire_codec)
         if cfg.get("mode", "unroll") == "inference":
             clients: List[SocketInferenceClient] = [
                 SocketInferenceClient(

@@ -32,14 +32,19 @@ class ParameterStore:
     """Lock-guarded (params, version) cell with monotonically increasing
     versions. Version 0 is the initial (pre-training) parameter set."""
 
-    def __init__(self, params: PyTree, version: int = 0):
+    def __init__(self, params: PyTree, version: int = 0,
+                 wire_codec: str = "none"):
+        from repro.distributed import serde
         self._lock = threading.Lock()
         self._params = params
         self._version = version
+        self.wire_codec = serde.check_codec(wire_codec)
         self.publishes = 0
         self.pulls = 0
         self.serialized_pulls = 0
         self.serialized_encodes = 0
+        self.serialized_wire_bytes = 0   # last encode: bytes on the wire
+        self.serialized_raw_bytes = 0    # last encode: raw leaf bytes
         self._ser_cache: Optional[Tuple[int, bytes]] = None
 
     def publish(self, params: PyTree) -> int:
@@ -92,13 +97,15 @@ class ParameterStore:
         if cached is not None and cached[0] == version:
             return cached[1], version
         from repro.distributed import serde
-        buf = serde.encode_tree(params)
+        buf = serde.encode_tree(params, codec=self.wire_codec)
         self.serialized_encodes += 1
         with self._lock:
             # don't regress the cache if a newer version was encoded in
             # the meantime
             if self._ser_cache is None or self._ser_cache[0] <= version:
                 self._ser_cache = (version, buf)
+            self.serialized_wire_bytes = len(buf)
+            self.serialized_raw_bytes = serde.tree_nbytes(params)
         return buf, version
 
     @property

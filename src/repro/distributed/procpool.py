@@ -159,12 +159,13 @@ class ProcessActorPool(PoolAccounting):
                     self.slot_base + i, self.env_name, self._arch_cfg,
                     self._icfg, self.num_envs, self.seed,
                     self.queue.producer(), clients, child_conn,
-                    self._stop)
+                    self._stop, self.queue.wire_codec)
             else:
                 target, args = process_actor_main, (
                     self.slot_base + i, self.env_name, self._arch_cfg,
                     self._icfg, self.num_envs, self.seed,
-                    self.queue.producer(), child_conn, self._stop)
+                    self.queue.producer(), child_conn, self._stop,
+                    self.queue.wire_codec)
             p = self._ctx.Process(target=target, args=args,
                                   name=f"actor-proc-{i}", daemon=True)
             self._procs.append(p)

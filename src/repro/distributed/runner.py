@@ -253,6 +253,7 @@ def run_inference_actor_loop(
     emit: Callable[[Any], bool],
     should_stop: Callable[[], bool],
     on_unroll: Optional[Callable[[], None]] = None,
+    trace_every: Optional[int] = None,
 ) -> None:
     """Drive one *inference-mode* actor: host-side env stepping against
     the shared batched-inference service.
@@ -281,11 +282,25 @@ def run_inference_actor_loop(
     param version of the unroll's first step across streams, so
     measured lag stays conservative. Per-step state is materialized
     numpy — the requests cross a serde wire anyway.
+
+    ``trace_every`` samples every Nth unroll for the flight recorder,
+    exactly like the unroll actor: the ``u0``/``u1`` stamps bracket the
+    whole acting round (env steps + inference round-trips), so the
+    7-span lifecycle covers inference-mode items too. Defaults to the
+    ``REPRO_TRACE_EVERY`` env var; 0 disables.
     """
+    import os
+
     import jax
     import numpy as np
 
     from repro.distributed.serde import TrajectoryItem
+
+    if trace_every is None:
+        try:
+            trace_every = int(os.environ.get("REPRO_TRACE_EVERY", "0"))
+        except ValueError:
+            trace_every = 0
 
     t_len = icfg.unroll_length
     n_streams = len(clients)
@@ -305,6 +320,8 @@ def run_inference_actor_loop(
     unroll_idx = 0
     while not should_stop():
         unroll_idx += 1
+        sampled = bool(trace_every) and unroll_idx % trace_every == 0
+        u0 = time.monotonic() if sampled else 0.0
         init_lstm = [(st.h, st.c) for st in streams]
         for st in streams:
             st.steps = []
@@ -339,8 +356,9 @@ def run_inference_actor_loop(
         version = min(st.version for st in streams)
         if on_unroll is not None:
             on_unroll()
-        if not emit(TrajectoryItem(traj, version, actor_id,
-                                   time.monotonic())):
+        now = time.monotonic()
+        tr = {"u0": u0, "u1": now} if sampled else None
+        if not emit(TrajectoryItem(traj, version, actor_id, now, tr)):
             break
 
 
@@ -356,6 +374,7 @@ def run_inference_driver_loop(
     emit: Callable[[int, Any], bool],
     should_stop: Callable[[], bool],
     on_unroll: Optional[Callable[[int], None]] = None,
+    trace_every: Optional[int] = None,
 ) -> None:
     """Drive ALL thread-mode inference actors from one thread.
 
@@ -375,10 +394,21 @@ def run_inference_driver_loop(
     stamped with its ``actor_id``. Emits block on transport
     backpressure, which stalls all acting — the same throttling the
     thread-per-actor layout converges to, reached sooner.
+
+    ``trace_every`` samples every Nth unroll (per logical actor) for
+    the flight recorder, mirroring the other loop bodies.
     """
+    import os
+
     import jax
 
     from repro.distributed.serde import TrajectoryItem
+
+    if trace_every is None:
+        try:
+            trace_every = int(os.environ.get("REPRO_TRACE_EVERY", "0"))
+        except ValueError:
+            trace_every = 0
 
     t_len = icfg.unroll_length
     reset_batch, step_batch = _make_inference_env_fns(env, num_envs)
@@ -397,6 +427,8 @@ def run_inference_driver_loop(
     unroll_idx = 0
     while not should_stop():
         unroll_idx += 1
+        sampled = bool(trace_every) and unroll_idx % trace_every == 0
+        u0 = time.monotonic() if sampled else 0.0
         init_lstm = {a.uid: (a.h, a.c) for a in actors}
         for a in actors:
             a.steps = []
@@ -425,8 +457,10 @@ def run_inference_driver_loop(
                                            init_lstm[a.uid], icfg)
             if on_unroll is not None:
                 on_unroll(a.uid)
+            now = time.monotonic()
+            tr = {"u0": u0, "u1": now} if sampled else None
             if not emit(a.uid, TrajectoryItem(traj, a.version, a.uid,
-                                              time.monotonic())):
+                                              now, tr)):
                 return
 
 
@@ -443,7 +477,8 @@ def run_serialized_unroll_actor(*, actor_id: int, env_name: str,
                                 send_buf: Callable[[bytes], bool],
                                 pull_msg: Callable[[int],
                                                    Optional[Tuple]],
-                                stop) -> None:
+                                stop,
+                                wire_codec: str = "none") -> None:
     """One unroll-mode actor on the far side of a serialized boundary.
 
     ``pull_msg(have_version)`` returns ``("params", version, buf)``,
@@ -553,7 +588,7 @@ def run_serialized_unroll_actor(*, actor_id: int, env_name: str,
             buf = serde.encode_item(serde.TrajectoryItem(
                 jax.tree.map(np.asarray, item.data),
                 item.param_version, item.actor_id, item.produced_at,
-                tr))
+                tr), codec=wire_codec)
             if not send_buf(buf):
                 return                  # channel says we are done
 
@@ -589,7 +624,8 @@ def run_serialized_inference_actor(*, actor_id: int, env_name: str,
                                    seed: int,
                                    send_buf: Callable[[bytes], bool],
                                    infer_clients: List[Any],
-                                   stop) -> None:
+                                   stop,
+                                   wire_codec: str = "none") -> None:
     """One inference-mode actor on the far side of a serialized
     boundary: no parameters, no policy network — env stepping plus
     frames both ways (observation requests up, action replies down,
@@ -619,8 +655,8 @@ def run_serialized_inference_actor(*, actor_id: int, env_name: str,
                 continue
             if item is None:
                 return
-            buf = serde.encode_item(item)   # leaves already numpy
-            if not send_buf(buf):
+            buf = serde.encode_item(item, codec=wire_codec)
+            if not send_buf(buf):           # leaves already numpy
                 return
 
     def emit(item):
@@ -706,7 +742,8 @@ def _wire_send_buf(producer, stop_event) -> Callable[[bytes], bool]:
 
 def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
                        num_envs: int, seed: int, producer,
-                       param_conn, stop_event) -> None:
+                       param_conn, stop_event,
+                       wire_codec: str = "none") -> None:
     """Entry point of one actor *process*. Builds its own env batch and
     jit cache (nothing jax crosses the process boundary), subscribes to
     params by version from the parent's param server over the pipe, and
@@ -724,7 +761,7 @@ def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
             actor_id=actor_id, env_name=env_name, arch_cfg=arch_cfg,
             icfg=icfg, num_envs=num_envs, seed=seed,
             send_buf=_wire_send_buf(producer, stop_event),
-            pull_msg=pull_msg, stop=stop_event)
+            pull_msg=pull_msg, stop=stop_event, wire_codec=wire_codec)
     except BaseException:
         try:
             param_conn.send(("error", actor_id, traceback.format_exc()))
@@ -739,7 +776,8 @@ def process_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
 
 def inference_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
                          num_envs: int, seed: int, producer,
-                         infer_clients, ctrl_conn, stop_event) -> None:
+                         infer_clients, ctrl_conn, stop_event,
+                         wire_codec: str = "none") -> None:
     """Entry point of one *inference-mode* actor process: no parameters,
     no policy network — just env stepping plus serde frames both ways
     (observation requests up the shared wire, action replies back down
@@ -756,7 +794,8 @@ def inference_actor_main(actor_id: int, env_name: str, arch_cfg, icfg,
             actor_id=actor_id, env_name=env_name, arch_cfg=arch_cfg,
             icfg=icfg, num_envs=num_envs, seed=seed,
             send_buf=_wire_send_buf(producer, stop_event),
-            infer_clients=infer_clients, stop=stop_event)
+            infer_clients=infer_clients, stop=stop_event,
+            wire_codec=wire_codec)
     except BaseException:
         try:
             ctrl_conn.send(("error", actor_id, traceback.format_exc()))

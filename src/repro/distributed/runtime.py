@@ -130,6 +130,8 @@ def _setup(
     num_learners: int = 1,
     exchange=None,
     peer_addrs=None,
+    wire_codec: str = "none",
+    vtrace_impl: str = "auto",
     obs=None,
 ) -> Learner:
     """Build one learner worker's whole dependency graph — env, params,
@@ -177,6 +179,7 @@ def _setup(
         max_batch_trajs=max_batch_trajs, batch_linger_s=batch_linger_s,
         donate=donate, start_step=start_step,
         initial_params=initial_params, exchange=exchange,
+        wire_codec=wire_codec, vtrace_impl=vtrace_impl,
         trace=trace, phase_timing=phase_timing, profile=profile)
     store = learner.store
 
@@ -207,6 +210,10 @@ def _setup(
     # counters land in the same storage the snapshot and the /metrics
     # endpoint pull from
     transport_kw = {"registry": learner.obs_registry}
+    if transport in ("shm", "socket"):
+        # inproc hands live pytrees between threads — nothing to encode,
+        # so the codec only reaches transports with a wire
+        transport_kw["wire_codec"] = wire_codec
     if transport == "socket":
         transport_kw.update({"listen": listen_addr or ("127.0.0.1", 0),
                              "max_actors": num_actors,
@@ -271,6 +278,8 @@ def run_async_training(
     infer_flush_timeout_s: float = 0.02,
     infer_max_batch_requests: Optional[int] = None,
     infer_streams: int = 1,
+    wire_codec: str = "none",
+    vtrace_impl: str = "auto",
     on_update: Optional[Callable[[int, PyTree, Dict, Dict], None]] = None,
     obs=None,
 ) -> Tuple[MultiTracker, Dict, Dict]:
@@ -347,6 +356,18 @@ def run_async_training(
     bucket before the timed region, so benchmarks measure steady-state
     throughput rather than XLA compilation.
 
+    ``wire_codec`` ('none' | 'bf16' | 'int8') quantizes serialized
+    payloads on every wire with one: published parameters, trajectory
+    observation leaves (shm and socket transports; inproc hands live
+    pytrees around and ignores it), and — under a learner group — the
+    gradient-exchange frames. Remote actors learn the codec in the
+    connection handshake; a fleet member speaking a codec this build
+    doesn't know refuses loudly (``CodecMismatchError``) instead of
+    decoding garbage. ``vtrace_impl`` picks the loss's V-trace
+    implementation: 'auto' resolves to the fused Pallas loss kernel on
+    TPU and the scan path elsewhere; 'fused' / 'pallas' / 'scan' /
+    'reference' force one.
+
     ``obs`` (an ``repro.obs.ObsConfig``) runs the whole flight recorder
     around the training loop: a ``/metrics`` + ``/healthz`` +
     ``/telemetry`` HTTP endpoint (``metrics_port``; the bound address —
@@ -370,7 +391,8 @@ def run_async_training(
         start_step=start_step, donate=donate,
         infer_flush_timeout_s=infer_flush_timeout_s,
         infer_max_batch_requests=infer_max_batch_requests,
-        infer_streams=infer_streams, obs=obs)
+        infer_streams=infer_streams, wire_codec=wire_codec,
+        vtrace_impl=vtrace_impl, obs=obs)
     server = sink = None
     prev_trace_env = None
     trace_env_set = False

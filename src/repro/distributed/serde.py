@@ -25,6 +25,21 @@ encode; bfloat16 comes from ``ml_dtypes``, which numpy interops with.
 Supported pytree nodes: dict (string keys, insertion order preserved),
 list, tuple, None, and array-like leaves (numpy/jax arrays and python
 scalars). Namedtuples are encoded structurally as tuples.
+
+Wire codecs (the bandwidth diet): ``encode_tree`` and friends accept a
+``codec`` — ``"none"`` is today's raw little-endian wire, bit-exact.
+``"bf16"`` ships float32/float64 leaves as bfloat16 (lossy, ~3
+significant digits); ``"int8"`` ships them as int8 with a per-leaf
+absmax scale (lossy, max abs error <= absmax/127). Under either lossy
+codec, every *non-quantized* leaf additionally rides deflate-compressed
+when that is smaller (lossless — this is what crushes the sparse uint8
+observation planes and the near-constant discount rows). The spec stays
+per-leaf self-describing: a leaf node carries its *logical* dtype plus
+an ``enc`` tag (``bf16``/``q8``/``z``) and, for ``q8``, the scale — so
+decode always restores the logical dtype and shape, whatever codec the
+encoder picked. ``bf16`` is an exact fixed point (re-encoding a decoded
+tree reproduces the same bytes); ``int8`` loses at most absmax/127 per
+element on the first pass and is stable to float rounding after.
 """
 from __future__ import annotations
 
@@ -73,12 +88,78 @@ class SerdeError(ValueError):
     pass
 
 
+class CodecMismatchError(SerdeError):
+    """A peer announced (or a caller requested) a wire codec this side
+    does not support. Distinct from plain ``SerdeError`` so a handshake
+    can refuse loudly instead of feeding garbage to a decoder."""
+
+
+# wire codec registry: "none" is the raw bit-exact wire; the lossy
+# codecs quantize float32/float64 leaves and deflate the rest
+WIRE_CODECS = ("none", "bf16", "int8")
+DEFAULT_CODEC = "none"
+
+# deflate: cheapest level — the compressible leaves (sparse observation
+# planes, constant discount rows) crush at any level, and the actor-side
+# encode sits on the trajectory hot path
+_Z_LEVEL = 1
+# leaves smaller than this aren't worth the per-leaf deflate header
+_Z_MIN_BYTES = 64
+
+
+def check_codec(codec: str) -> str:
+    """Validate a codec name; raises ``CodecMismatchError`` on anything
+    not in ``WIRE_CODECS`` (the loud path for handshake negotiation)."""
+    if codec not in WIRE_CODECS:
+        raise CodecMismatchError(
+            f"unsupported wire codec {codec!r} "
+            f"(this side speaks {', '.join(WIRE_CODECS)})")
+    return codec
+
+
 # ---------------------------------------------------------------------------
 # spec construction / encoding
 
 
+def _encode_leaf(arr: np.ndarray, path: str, codec: str,
+                 select) -> Tuple[bytes, Dict[str, Any]]:
+    """One leaf's payload bytes + the spec fields beyond dtype/shape.
+
+    ``codec != "none"``: float32/float64 leaves passing ``select`` are
+    quantized (``enc``: ``bf16`` or ``q8`` + per-leaf ``scale``); every
+    other leaf is deflated when that wins (``enc``: ``z``). The logical
+    dtype always stays in the spec — decode restores it."""
+    raw = arr.tobytes()                      # contiguous little-endian copy
+    if codec == "none":
+        return raw, {}
+    quantizable = (arr.dtype.kind == "f" and arr.itemsize >= 4 and
+                   arr.size > 0 and (select is None or select(path, arr)))
+    if quantizable:
+        if codec == "bf16":
+            return arr.astype(ml_dtypes.bfloat16).tobytes(), {"enc": "bf16"}
+        if codec == "int8":
+            absmax = float(np.max(np.abs(arr)))
+            if np.isfinite(absmax):
+                scale = absmax / 127.0
+                if scale == 0.0:
+                    q = np.zeros(arr.shape, np.int8)
+                else:
+                    q = np.clip(np.rint(arr / scale), -127,
+                                127).astype(np.int8)
+                return q.tobytes(), {"enc": "q8", "scale": scale}
+            # non-finite leaves (inf/nan) have no absmax scale: ship raw
+        else:
+            raise CodecMismatchError(f"unsupported wire codec {codec!r}")
+    if len(raw) >= _Z_MIN_BYTES:
+        z = zlib.compress(raw, _Z_LEVEL)
+        if len(z) < len(raw):
+            return z, {"enc": "z"}
+    return raw, {}
+
+
 def _encode_node(tree: PyTree, chunks: List[bytes], offset: int,
-                 path: str) -> Tuple[Dict[str, Any], int]:
+                 path: str, codec: str = DEFAULT_CODEC,
+                 select=None) -> Tuple[Dict[str, Any], int]:
     """Append ``tree``'s leaves to ``chunks`` (starting at byte ``offset``)
     and return (spec node, next offset)."""
     if tree is None:
@@ -89,7 +170,7 @@ def _encode_node(tree: PyTree, chunks: List[bytes], offset: int,
             if not isinstance(k, str):
                 raise SerdeError(f"non-string dict key {k!r} at {path}")
             node, offset = _encode_node(tree[k], chunks, offset,
-                                        f"{path}/{k}")
+                                        f"{path}/{k}", codec, select)
             keys.append(k)
             children.append(node)
         return {"t": "dict", "keys": keys, "children": children}, offset
@@ -98,7 +179,7 @@ def _encode_node(tree: PyTree, chunks: List[bytes], offset: int,
         children = []
         for i, child in enumerate(tree):
             node, offset = _encode_node(child, chunks, offset,
-                                        f"{path}[{i}]")
+                                        f"{path}[{i}]", codec, select)
             children.append(node)
         return {"t": kind, "children": children}, offset
     # leaf: anything numpy can view (jax arrays and python scalars too).
@@ -108,26 +189,43 @@ def _encode_node(tree: PyTree, chunks: List[bytes], offset: int,
     name = arr.dtype.name
     if name not in _DTYPES:
         raise SerdeError(f"unsupported leaf dtype {name!r} at {path}")
-    raw = arr.tobytes()                      # contiguous little-endian copy
-    chunks.append(raw)
+    stored, extra = _encode_leaf(arr, path, codec, select)
+    chunks.append(stored)
     node = {"t": "a", "dtype": name, "shape": list(arr.shape),
-            "off": offset, "n": len(raw)}
-    return node, offset + len(raw)
+            "off": offset, "n": len(stored)}
+    node.update(extra)
+    return node, offset + len(stored)
 
 
-def tree_spec(tree: PyTree) -> Dict[str, Any]:
+def tree_spec(tree: PyTree, codec: str = DEFAULT_CODEC) -> Dict[str, Any]:
     """The structure descriptor alone (offsets included) — what the header
     carries. Useful for tests and for reasoning about compatibility."""
-    spec, _ = _encode_node(tree, [], 0, "$")
+    spec, _ = _encode_node(tree, [], 0, "$", codec)
     return spec
 
 
-def encode_tree(tree: PyTree, meta: Optional[Dict[str, Any]] = None
-                ) -> bytes:
+def tree_nbytes(tree: PyTree) -> int:
+    """Raw (uncompressed) leaf bytes of ``tree`` — the denominator for
+    wire-compression accounting."""
+    if tree is None:
+        return 0
+    if isinstance(tree, dict):
+        return sum(tree_nbytes(v) for v in tree.values())
+    if isinstance(tree, (list, tuple)):
+        return sum(tree_nbytes(v) for v in tree)
+    nbytes = getattr(tree, "nbytes", None)   # numpy AND jax arrays —
+    if nbytes is not None:                   # no device->host copy
+        return int(nbytes)
+    return np.asarray(tree).nbytes
+
+
+def encode_tree(tree: PyTree, meta: Optional[Dict[str, Any]] = None,
+                codec: str = DEFAULT_CODEC, select=None) -> bytes:
     """Flatten ``tree`` into one contiguous buffer. ``meta`` must be
-    JSON-serializable; it rides in the header (provenance, version, ...)."""
+    JSON-serializable; it rides in the header (provenance, version, ...).
+    ``codec``/``select`` pick the wire codec (module docstring)."""
     chunks: List[bytes] = []
-    spec, total = _encode_node(tree, chunks, 0, "$")
+    spec, total = _encode_node(tree, chunks, 0, "$", codec, select)
     header = json.dumps({"meta": meta or {}, "tree": spec},
                         separators=(",", ":")).encode("utf-8")
     return b"".join([_HDR.pack(MAGIC, len(header)), header] + chunks)
@@ -155,10 +253,37 @@ def _decode_node(node: Dict[str, Any], payload: memoryview,
         if dtype is None:
             raise SerdeError(f"unknown dtype in spec: {node['dtype']!r}")
         off, n = node["off"], node["n"]
-        arr = np.frombuffer(payload[off:off + n], dtype=dtype)
-        arr = arr.reshape(node["shape"])
-        return arr.copy() if copy else arr
+        enc = node.get("enc")
+        stored = payload[off:off + n]
+        if enc is None:
+            arr = np.frombuffer(stored, dtype=dtype)
+            arr = arr.reshape(node["shape"])
+            return arr.copy() if copy else arr
+        # encoded leaves always allocate (the dequantized/ inflated
+        # array cannot be a view of the wire buffer)
+        return _decode_encoded_leaf(node, stored, dtype)
     raise SerdeError(f"unknown spec node type {t!r}")
+
+
+def _decode_encoded_leaf(node: Dict[str, Any], stored: memoryview,
+                         dtype: np.dtype) -> np.ndarray:
+    """Restore one quantized/deflated leaf to its logical dtype/shape."""
+    enc, shape = node["enc"], node["shape"]
+    try:
+        if enc == "bf16":
+            src = np.frombuffer(stored, dtype=np.dtype(ml_dtypes.bfloat16))
+            return src.reshape(shape).astype(dtype)
+        if enc == "q8":
+            src = np.frombuffer(stored, dtype=np.int8).reshape(shape)
+            out = src.astype(dtype)
+            np.multiply(out, dtype.type(node["scale"]), out=out)
+            return out
+        if enc == "z":
+            raw = zlib.decompress(bytes(stored))
+            return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+    except (zlib.error, ValueError) as e:
+        raise SerdeError(f"corrupt {enc!r}-encoded leaf: {e}") from e
+    raise SerdeError(f"unknown leaf encoding {enc!r}")
 
 
 def decode_tree(buf: bytes, copy: bool = False
@@ -215,9 +340,14 @@ def _fill_node(node: Dict[str, Any], payload: memoryview, dst: PyTree,
                              f"is {getattr(dst, 'dtype', None)}"
                              f"{list(getattr(dst, 'shape', ()))}")
         off, n = node["off"], node["n"]
-        src = np.frombuffer(payload[off:off + n],
-                            dtype=dtype).reshape(node["shape"])
-        np.copyto(dst, src)
+        if node.get("enc") is None:
+            src = np.frombuffer(payload[off:off + n],
+                                dtype=dtype).reshape(node["shape"])
+            np.copyto(dst, src)
+        else:
+            # dequantize/inflate straight into the preallocated leaf
+            np.copyto(dst, _decode_encoded_leaf(node, payload[off:off + n],
+                                                dtype))
         return
     raise SerdeError(f"unknown spec node type {t!r}")
 
@@ -249,19 +379,32 @@ def decode_tree_into(buf: bytes, dst: PyTree) -> Dict[str, Any]:
 # TrajectoryItem convenience layer
 
 
-def encode_item(item: TrajectoryItem) -> bytes:
+# trajectory leaves a lossy codec may quantize: the observation side
+# (image/token inputs and the recurrent state the unroll starts from).
+# The V-trace-critical scalars (rewards, discounts, behaviour_logprob)
+# stay bit-exact — quantizing the behaviour policy's own log-probs
+# would corrupt the importance weights the correction is built on.
+_TRAJ_QUANT_KEYS = ("obs_image", "obs_token", "lstm_state")
+
+
+def _traj_select(path: str, arr: np.ndarray) -> bool:
+    return any(f"/{k}" in path for k in _TRAJ_QUANT_KEYS)
+
+
+def encode_item(item: TrajectoryItem, codec: str = DEFAULT_CODEC) -> bytes:
     meta = {
         "param_version": int(item.param_version),
         "actor_id": int(item.actor_id),
         "produced_at": float(item.produced_at),
     }
     if item.trace is None:
-        return encode_tree(item.data, meta=meta)
+        return encode_tree(item.data, meta=meta, codec=codec,
+                           select=_traj_select)
     # flight-recorder path: build the payload bytes first, then stamp the
     # encode-end time ("e1") — the stamp can still ride in the header that
     # closes over those bytes, so the receiver sees when encoding finished
     chunks: List[bytes] = []
-    spec, _ = _encode_node(item.data, chunks, 0, "$")
+    spec, _ = _encode_node(item.data, chunks, 0, "$", codec, _traj_select)
     trace = dict(item.trace)
     trace["e1"] = time.monotonic()
     meta["trace"] = trace
@@ -290,7 +433,8 @@ def decode_item(buf: bytes, copy: bool = False) -> TrajectoryItem:
 
 
 def encode_grads(leaves: List[np.ndarray], *, round_idx: int,
-                 learner_id: int, version: int = -1) -> bytes:
+                 learner_id: int, version: int = -1,
+                 codec: str = DEFAULT_CODEC) -> bytes:
     """One gradient-exchange payload: ``leaves`` in tree-flatten order,
     stamped with the update round and sender. ``version`` rides on the
     hub's KIND_GRAD_MEAN broadcast (the delegated publish version for
@@ -299,7 +443,7 @@ def encode_grads(leaves: List[np.ndarray], *, round_idx: int,
         "round": int(round_idx),
         "learner": int(learner_id),
         "version": int(version),
-    })
+    }, codec=codec)
 
 
 def decode_grads(buf: bytes, copy: bool = False

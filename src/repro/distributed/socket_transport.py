@@ -277,18 +277,36 @@ class SocketTransport:
     # engages at roughly trajectory granularity: backpressure reaches
     # the actor within a trajectory or two, like the shm wire.
     DATA_BUF_BYTES = 1 << 18
+    # the byte cap exists to hold ~1-2 trajectory FRAMES in the kernel;
+    # a quantizing codec shrinks frames (bf16/int8 float leaves + the
+    # deflate pass over the rest measures 6-12x on the bench envs), so
+    # the same byte budget would silently hold 8+ frames of invisible
+    # pipeline and policy lag climbs right back up (measured: ~10 -> ~29
+    # mean lag on loopback catch with bf16 under the fp32-sized cap).
+    # Scale the cap with the codec so flow control stays at trajectory
+    # granularity; the floor keeps the window sane for tiny payloads.
+    QUANT_BUF_DIV = 8
+    MIN_DATA_BUF = 1 << 14
 
     def __init__(self, capacity: int = 8, policy: str = "block",
                  listen: Address = ("127.0.0.1", 0),
                  max_actors: Optional[int] = None,
                  data_buf_bytes: int = DATA_BUF_BYTES,
-                 slot_base: int = 0, registry=None):
+                 slot_base: int = 0, registry=None,
+                 wire_codec: str = serde.DEFAULT_CODEC):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got "
                              f"{policy!r}")
         self.capacity = capacity
         self.policy = policy
+        # the run's wire codec: announced in the CONFIG handshake so
+        # every actor encodes the way this learner expects (a peer that
+        # doesn't speak it refuses loudly at connect, never mid-run)
+        self.wire_codec = serde.check_codec(wire_codec)
         self.max_actors = max_actors
+        if data_buf_bytes and self.wire_codec != "none":
+            data_buf_bytes = max(data_buf_bytes // self.QUANT_BUF_DIV,
+                                 self.MIN_DATA_BUF)
         self.data_buf_bytes = data_buf_bytes
         # shard-aware slot assignment: this learner hands out global
         # actor ids in [slot_base, slot_base + max_actors). peer_addrs
@@ -328,6 +346,11 @@ class SocketTransport:
         # the read-only properties below keep `t.frames_in` etc. working
         self._c_frames_in = self.registry.counter("socket.frames_in")
         self._c_bytes_in = self.registry.counter("socket.bytes_in")
+        # trajectory compression accounting: payload bytes as they rode
+        # the wire vs the raw leaf bytes they decoded to — the
+        # bytes/frame numerator the bandwidth-diet benchmarks assert on
+        self._c_traj_wire = self.registry.counter("socket.traj_wire_bytes")
+        self._c_traj_raw = self.registry.counter("socket.traj_raw_bytes")
         self._c_torn_tails = self.registry.counter("socket.torn_tails")
         self._c_reconnects = self.registry.counter("socket.reconnects")
         self._c_discarded = self.registry.counter("socket.discarded")
@@ -455,7 +478,8 @@ class SocketTransport:
                     time.sleep(0.02)
                 extra = self.config_extra
                 cfg = {"actor_id": slot.actor_id,
-                       "data_buf": self.data_buf_bytes}
+                       "data_buf": self.data_buf_bytes,
+                       "wire_codec": self.wire_codec}
                 if self.peer_addrs is not None:
                     # the group's shard map: every learner's listen
                     # address, so the remote machine knows the whole
@@ -602,6 +626,9 @@ class SocketTransport:
             except Exception as e:              # corrupt *payload* spec
                 self.decode_errors.append(repr(e))
                 continue
+            with self._lock:
+                self._c_traj_wire.inc(len(payload))
+                self._c_traj_raw.inc(serde.tree_nbytes(item.data))
             self._policy_put(slot, item, t_recv, len(payload))
 
     def _policy_put(self, slot: _ActorSlot, item: TrajectoryItem,
@@ -766,12 +793,21 @@ class SocketTransport:
                 }
                 for s in self._slots.values()
             }
+            frames = self.frames_in
             snap.update({
                 "transport": "socket",
                 "listen": list(self.address),
                 "actors_seen": len(self._slots),
-                "frames_in": self.frames_in,
+                "frames_in": frames,
                 "bytes_in": self.bytes_in,
+                "wire_codec": self.wire_codec,
+                "traj_wire_bytes": self._c_traj_wire.value,
+                "traj_raw_bytes": self._c_traj_raw.value,
+                "bytes_per_frame": (self._c_traj_wire.value / frames
+                                    if frames else 0.0),
+                "wire_compression": (
+                    self._c_traj_raw.value / self._c_traj_wire.value
+                    if self._c_traj_wire.value else 1.0),
                 "bytes_per_sec": (self.bytes_in / dt if dt > 0 else 0.0),
                 "frames_per_sec": (self.frames_in / dt if dt > 0 else 0.0),
                 "reconnects": self.reconnects,
@@ -857,6 +893,7 @@ class SocketActorClient:
         self._boxes_lock = threading.Lock()
         self.config: Dict[str, Any] = {}
         self.actor_id = -1
+        self.wire_codec = serde.DEFAULT_CODEC   # set by the handshake
         self.reconnects = 0
         self.trajs_sent = 0
 
@@ -991,6 +1028,19 @@ class SocketActorClient:
                 chan.close()
                 continue
             cfg = json.loads(payload.decode("utf-8"))
+            # codec negotiation: the learner announced how this fleet
+            # encodes the wire. A codec we don't speak must refuse NOW
+            # with a distinct error — encoding frames the learner can't
+            # decode (or vice versa) would surface as garbage decodes
+            # or silent corruption deep in training instead
+            try:
+                self.wire_codec = serde.check_codec(
+                    cfg.get("wire_codec", serde.DEFAULT_CODEC))
+            except serde.CodecMismatchError:
+                chan.send(KIND_CTRL, 0, CTRL_BYE, stop=self._stop_check)
+                chan.close()
+                self._stopped.set()
+                raise
             self.actor_id = int(cfg.get("actor_id", self.actor_id))
             self.config = cfg
             return chan

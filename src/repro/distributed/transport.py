@@ -137,12 +137,16 @@ class ShmTransport(Transport):
     rejects_at_put = False
 
     def __init__(self, capacity: int = 8, policy: str = "block",
-                 wire_capacity: Optional[int] = None, registry=None):
+                 wire_capacity: Optional[int] = None, registry=None,
+                 wire_codec: str = serde.DEFAULT_CODEC):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got "
                              f"{policy!r}")
         self.capacity = capacity
         self.policy = policy
+        # producers encode with this codec: same-process ``put`` applies
+        # it here; actor processes receive it in their spawn config
+        self.wire_codec = serde.check_codec(wire_codec)
         self._ctx = mp.get_context("spawn")
         self._stop = self._ctx.Event()
         self._wire = self._ctx.Queue(maxsize=wire_capacity or max(2, capacity // 4))
@@ -155,6 +159,7 @@ class ShmTransport(Transport):
         self._close_lock = threading.Lock()
         self.wire_received = 0          # buffers decoded parent-side
         self.wire_bytes = 0             # payload volume moved
+        self.wire_raw_bytes = 0         # raw leaf bytes those carried
         self.wire_put_stalls = 0        # parent-side put timeouts
         self.drain_errors: list = []    # decode failures (torn frames)
         self._drain = threading.Thread(target=self._drain_loop,
@@ -185,7 +190,7 @@ class ShmTransport(Transport):
         drop_newest rejections surface via ``on_reject``, not here."""
         if self._stop.is_set():
             return False
-        buf = serde.encode_item(item)
+        buf = serde.encode_item(item, codec=self.wire_codec)
         try:
             self._wire.put(buf, timeout=timeout)
             return True
@@ -216,6 +221,7 @@ class ShmTransport(Transport):
             except Exception as e:  # torn frame (e.g. a killed producer)
                 self.drain_errors.append(repr(e))
                 continue
+            self.wire_raw_bytes += serde.tree_nbytes(item.data)
             while not self._stop.is_set() and not self._discard:
                 if self._inner.put(item, timeout=0.1):
                     if self.on_item is not None:
@@ -290,8 +296,15 @@ class ShmTransport(Transport):
         snap = self._inner.snapshot()
         snap.update({
             "transport": "shm",
+            "wire_codec": self.wire_codec,
             "wire_received": self.wire_received,
             "wire_bytes": self.wire_bytes,
+            "traj_wire_bytes": self.wire_bytes,
+            "traj_raw_bytes": self.wire_raw_bytes,
+            "bytes_per_frame": (self.wire_bytes / self.wire_received
+                                if self.wire_received else 0.0),
+            "wire_compression": (self.wire_raw_bytes / self.wire_bytes
+                                 if self.wire_bytes else 1.0),
             "wire_put_stalls": self.wire_put_stalls,
             "drain_errors": len(self.drain_errors),
         })

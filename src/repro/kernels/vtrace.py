@@ -107,3 +107,147 @@ def vtrace_pallas(rho, c, discounts, rewards, values, values_tp1,
         interpret=interpret,
     )(*args)
     return vs[:t, :b], pg[:t, :b]
+
+
+# ---------------------------------------------------------------------------
+# fused loss + V-trace: one kernel launch computes everything the IMPALA
+# loss needs between the logits and the final reductions — log-softmax,
+# target log-probs, entropy terms, the clipped importance weights, and
+# the V-trace reverse scan — instead of ~10 separate XLA ops feeding the
+# recurrence. Same layout discipline as ``vtrace_pallas`` (time-major,
+# batch on lanes, reversed T chunks with a VMEM-carried accumulator);
+# the action dimension rides whole in each block, padded to the 128-wide
+# lane multiple with a large negative logit so softmax ignores the pad.
+
+_NEG_PAD = -1e30     # pad logit: exp underflows to exactly 0 in f32
+LANE = 128
+
+
+def _loss_vtrace_kernel(logits_ref, onehot_ref, blp_ref, disc_ref,
+                        rew_ref, v_ref, vtp1_ref,
+                        tlp_ref, ne_ref, vs_ref, pg_ref, acc_ref, *,
+                        t_chunk: int, rho_bar, c_bar, lambda_: float):
+    tj = pl.program_id(1)
+
+    @pl.when(tj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(i, acc):
+        s = t_chunk - 1 - i
+        row = logits_ref[s, :, :]                    # (b_block, A)
+        m = jnp.max(row, axis=-1, keepdims=True)
+        logp = row - m - jnp.log(
+            jnp.sum(jnp.exp(row - m), axis=-1, keepdims=True))
+        tlp = jnp.sum(logp * onehot_ref[s, :, :], axis=-1)
+        p = jnp.exp(logp)
+        tlp_ref[s, :] = tlp
+        ne_ref[s, :] = jnp.sum(p * logp, axis=-1)
+        rho_raw = jnp.exp(tlp - blp_ref[s, :])
+        rho = (jnp.minimum(rho_bar, rho_raw)
+               if rho_bar is not None else rho_raw)
+        c = lambda_ * (jnp.minimum(c_bar, rho_raw)
+                       if c_bar is not None else rho_raw)
+        disc = disc_ref[s, :]
+        rew = rew_ref[s, :]
+        v = v_ref[s, :]
+        vtp1 = vtp1_ref[s, :]
+        pg_ref[s, :] = rho * (rew + disc * (vtp1 + acc) - v)
+        delta = rho * (rew + disc * vtp1 - v)
+        acc = delta + disc * c * acc
+        vs_ref[s, :] = v + acc
+        return acc
+
+    acc = jax.lax.fori_loop(0, t_chunk, body, acc_ref[0, :])
+    acc_ref[0, :] = acc
+
+
+def loss_vtrace_pallas(logits, onehot, behaviour_logprob, discounts,
+                       rewards, values, values_tp1,
+                       rho_bar=1.0, c_bar=1.0, lambda_: float = 1.0,
+                       t_chunk: int = DEFAULT_T_CHUNK,
+                       b_block: int = DEFAULT_B_BLOCK,
+                       interpret: Optional[bool] = None):
+    """Forward-only fused pass. ``logits``/``onehot`` are (T, B, A)
+    float32, everything else (T, B) float32. Returns
+    (target_logprob, neg_entropy, vs, pg_adv), each (T, B).
+
+    The onehot action encoding is an *input* (rather than int actions)
+    so every argument of the differentiable wrapper is a float tensor —
+    and so the in-kernel gather is a lane-friendly multiply-reduce."""
+    interpret = resolve_interpret(interpret)
+    t, b = behaviour_logprob.shape
+    a = logits.shape[-1]
+    t_chunk = min(t_chunk, t)
+    b_block = min(b_block, b)
+    tp = (-t) % t_chunk
+    bp = (-b) % b_block
+    ap = (-a) % LANE
+    flat = (behaviour_logprob, discounts, rewards, values, values_tp1)
+    if tp or bp:
+        flat = tuple(jnp.pad(x, ((0, tp), (0, bp))) for x in flat)
+    if tp or bp or ap:
+        # pad rows get uniform log-probs over real lanes (tlp = onehot
+        # sum = 0 against a zero onehot), zero rewards/discounts/values:
+        # the carried accumulator stays exactly zero through them
+        logits = jnp.pad(logits, ((0, tp), (0, bp), (0, ap)),
+                         constant_values=_NEG_PAD)
+        onehot = jnp.pad(onehot, ((0, tp), (0, bp), (0, ap)))
+    tt, bb, aa = t + tp, b + bp, a + ap
+    nt, nb = tt // t_chunk, bb // b_block
+
+    spec2d = pl.BlockSpec((t_chunk, b_block), lambda i, j: (nt - 1 - j, i))
+    spec3d = pl.BlockSpec((t_chunk, b_block, aa),
+                          lambda i, j: (nt - 1 - j, i, 0))
+    tlp, ne, vs, pg = pl.pallas_call(
+        functools.partial(_loss_vtrace_kernel, t_chunk=t_chunk,
+                          rho_bar=rho_bar, c_bar=c_bar, lambda_=lambda_),
+        grid=(nb, nt),
+        in_specs=[spec3d, spec3d] + [spec2d] * 5,
+        out_specs=[spec2d] * 4,
+        out_shape=[jax.ShapeDtypeStruct((tt, bb), jnp.float32)] * 4,
+        scratch_shapes=[pltpu.VMEM((1, b_block), jnp.float32)],
+        interpret=interpret,
+    )(logits, onehot, *flat)
+    return tuple(x[:t, :b] for x in (tlp, ne, vs, pg))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def fused_loss_vtrace(logits, onehot, behaviour_logprob, discounts,
+                      rewards, values, values_tp1, rho_bar=1.0,
+                      c_bar=1.0, lambda_: float = 1.0):
+    """Differentiable wrapper over ``loss_vtrace_pallas``.
+
+    Gradients flow ONLY into ``logits`` (through the target log-probs
+    and the entropy terms, both closed-form — no scan in the backward);
+    ``vs``/``pg_adv`` are V-trace *targets* and implicitly
+    stop-gradient, exactly like the scan implementation's contract."""
+    return loss_vtrace_pallas(logits, onehot, behaviour_logprob,
+                              discounts, rewards, values, values_tp1,
+                              rho_bar=rho_bar, c_bar=c_bar,
+                              lambda_=lambda_)
+
+
+def _fused_fwd(logits, onehot, behaviour_logprob, discounts, rewards,
+               values, values_tp1, rho_bar, c_bar, lambda_):
+    outs = fused_loss_vtrace(logits, onehot, behaviour_logprob,
+                             discounts, rewards, values, values_tp1,
+                             rho_bar, c_bar, lambda_)
+    tlp, ne, vs, pg = outs
+    return outs, (logits, onehot, ne)
+
+
+def _fused_bwd(rho_bar, c_bar, lambda_, res, cts):
+    logits, onehot, ne = res
+    g_tlp, g_ne, _g_vs, _g_pg = cts       # vs/pg_adv: stop-gradient
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(logp)
+    # d tlp / d logits = onehot - p ;  d ne / d logits = p (logp - ne)
+    d_logits = (g_tlp[..., None] * (onehot - p) +
+                g_ne[..., None] * p * (logp - ne[..., None]))
+    zeros_tb = jnp.zeros_like(ne)
+    return (d_logits, jnp.zeros_like(onehot), zeros_tb, zeros_tb,
+            zeros_tb, zeros_tb, zeros_tb)
+
+
+fused_loss_vtrace.defvjp(_fused_fwd, _fused_bwd)

@@ -123,6 +123,25 @@ def main() -> int:
                         "until the learner says stop. --actor-threads "
                         "sets how many actor processes this machine "
                         "contributes")
+    p.add_argument("--wire-codec", default="none",
+                   choices=["none", "bf16", "int8"],
+                   help="quantize serialized wire payloads: published "
+                        "params, trajectory observations (shm/socket "
+                        "transports), and grouped gradient frames. "
+                        "bf16 halves float bytes losslessly-in-spirit "
+                        "(params republish bit-exactly as bf16-rounded "
+                        "values); int8 stores per-leaf absmax scales "
+                        "(~4x smaller, max error absmax/127). Remote "
+                        "actors pick the codec up in the connection "
+                        "handshake; a peer that doesn't speak it is "
+                        "refused loudly")
+    p.add_argument("--vtrace-impl", default="auto",
+                   choices=["auto", "fused", "pallas", "scan",
+                            "reference"],
+                   help="V-trace implementation for the async learner's "
+                        "loss: auto = fused Pallas loss kernel on TPU, "
+                        "scan elsewhere; fused forces the single-kernel "
+                        "softmax+V-trace path (interpret mode off-TPU)")
     p.add_argument("--queue-capacity", type=int, default=8)
     p.add_argument("--queue-policy", default="block",
                    choices=["block", "drop_oldest", "drop_newest"])
@@ -415,6 +434,7 @@ def _run_async(args, env, arch, icfg) -> int:
         max_batch_trajs=args.max_batch_trajs,
         donate=not args.no_donate,
         infer_flush_timeout_s=args.infer_flush_ms / 1e3,
+        wire_codec=args.wire_codec, vtrace_impl=args.vtrace_impl,
         seed=args.seed, arch=arch, initial_params=initial_params,
         start_step=start_step, on_update=on_update,
         obs=_build_obs(args))
@@ -492,6 +512,7 @@ def _run_group(args, env, arch, icfg, transport) -> int:
         donate=not args.no_donate,
         stale_after_s=args.grad_stale_s,
         infer_flush_timeout_s=args.infer_flush_ms / 1e3,
+        wire_codec=args.wire_codec, vtrace_impl=args.vtrace_impl,
         seed=args.seed, arch=arch,
         telemetry_every=args.log_every, on_progress=on_progress,
         ckpt_every=args.ckpt_every if args.ckpt_dir else 0,

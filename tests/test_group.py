@@ -173,6 +173,65 @@ def test_hub_spoke_allreduce_means_and_versions():
 
 
 @pytest.mark.timeout_s(120)
+def test_quantized_exchange_replicas_apply_identical_means():
+    """Under a lossy grad codec the hub must apply the same
+    round-tripped mean the spokes decode — bit-identical results on
+    both sides, or the replicas fork."""
+    from repro.distributed import serde
+    hub = GradHub(2, stale_after_s=30.0, wire_codec="bf16")
+    try:
+        spoke = SpokeExchange(hub.address, 1, 2, dial_timeout_s=20.0,
+                              wire_codec="bf16")
+        try:
+            results = {}
+
+            def spoke_round():
+                results[0] = spoke.allreduce(_leaves(1.0), round_idx=0)
+
+            t = threading.Thread(target=spoke_round, daemon=True)
+            t.start()
+            mean, version = hub.allreduce(_leaves(3.0), round_idx=0)
+            t.join(timeout=20)
+            assert not t.is_alive()
+            s_mean, s_version = results[0]
+            assert version == s_version == 1
+            for h, s in zip(mean, s_mean):
+                assert h.tobytes() == s.tobytes()
+            # and the mean really is bf16-rounded, i.e. re-encoding is
+            # a fixed point of the codec
+            buf = serde.encode_grads(mean, round_idx=0, learner_id=0,
+                                     codec="bf16")
+            rt, _ = serde.decode_grads(buf)
+            for h, r in zip(mean, rt):
+                assert h.tobytes() == r.tobytes()
+            assert hub.snapshot()["wire_codec"] == "bf16"
+        finally:
+            spoke.close()
+    finally:
+        hub.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_spoke_codec_mismatch_refused_distinctly():
+    """A spoke announcing a different grad codec is refused by name —
+    it raises CodecMismatchError, not a generic hub-connection error
+    (and never averages mixed-precision gradients)."""
+    from repro.distributed import serde
+    hub = GradHub(2, stale_after_s=30.0, wire_codec="int8")
+    try:
+        spoke = SpokeExchange(hub.address, 1, 2, dial_timeout_s=20.0,
+                              wire_codec="none")
+        try:
+            with pytest.raises(serde.CodecMismatchError,
+                               match="wire_codec mismatch"):
+                spoke.allreduce(_leaves(1.0), round_idx=0)
+        finally:
+            spoke.close()
+    finally:
+        hub.close()
+
+
+@pytest.mark.timeout_s(120)
 def test_hub_stale_drop_rule_keeps_laggard_on_trajectory():
     """A spoke that misses the deadline is excluded from the round's
     mean (counted stale) but still receives the broadcast mean — the

@@ -71,10 +71,149 @@ def test_vtrace_interpret_resolution(monkeypatch):
 def test_losses_vtrace_impl_auto_resolution():
     from repro.core.losses import resolve_vtrace_impl
 
-    expected = "pallas" if jax.default_backend() == "tpu" else "scan"
+    expected = "fused" if jax.default_backend() == "tpu" else "scan"
     assert resolve_vtrace_impl("auto") == expected
-    for explicit in ("scan", "pallas", "reference"):
+    for explicit in ("fused", "scan", "pallas", "reference"):
         assert resolve_vtrace_impl(explicit) == explicit
+
+
+# ---------------------------------------------------------------------------
+# fused loss/V-trace kernel
+
+
+def _fused_inputs(t, b, a, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 6)
+    logits = jax.random.normal(ks[0], (t, b, a)) * 2.0
+    actions = jax.random.randint(ks[1], (t, b), 0, a)
+    onehot = jax.nn.one_hot(actions, a, dtype=jnp.float32)
+    # behaviour log-probs of the taken actions under a perturbed policy
+    blogp = jnp.sum(jax.nn.log_softmax(
+        logits + jax.random.normal(ks[2], (t, b, a)) * 0.3) * onehot, -1)
+    disc = jnp.where(jax.random.uniform(ks[3], (t, b)) < 0.1, 0.0, 0.97)
+    rew = jax.random.normal(ks[4], (t, b))
+    v = jax.random.normal(ks[5], (t, b))
+    vtp1 = jnp.concatenate([v[1:], jnp.zeros((1, b))], 0)
+    return logits, onehot, blogp, disc, rew, v, vtp1
+
+
+def _fused_oracle(logits, onehot, blogp, disc, rew, v, vtp1,
+                  rho_bar, c_bar, lambda_):
+    """Unfused composition: XLA log-softmax + the ref V-trace scan."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    p = jnp.exp(logp)
+    tlp = jnp.sum(logp * onehot, axis=-1)
+    ne = jnp.sum(p * logp, axis=-1)
+    log_rho = jax.lax.stop_gradient(tlp) - blogp
+    rho = jnp.exp(log_rho)
+    clip_rho = rho if rho_bar is None else jnp.minimum(rho, rho_bar)
+    c = rho if c_bar is None else jnp.minimum(rho, c_bar)
+    vs, pg = ref.vtrace_ref(clip_rho, lambda_ * c, disc, rew, v, vtp1)
+    return tlp, ne, vs, pg
+
+
+@pytest.mark.parametrize("t,b,a,chunk", [
+    (1, 1, 2, 256), (8, 4, 6, 256), (64, 16, 128, 16),
+    (300, 3, 9, 64), (37, 130, 5, 256),
+])
+def test_fused_loss_vtrace_matches_unfused(t, b, a, chunk):
+    from repro.kernels.vtrace import loss_vtrace_pallas
+
+    inp = _fused_inputs(t, b, a, seed=t * 131 + b * 7 + a)
+    want = _fused_oracle(*inp, 1.0, 1.0, 1.0)
+    got = loss_vtrace_pallas(*inp, rho_bar=1.0, c_bar=1.0, lambda_=1.0,
+                             t_chunk=chunk)
+    for name, w, g in zip(("tlp", "ne", "vs", "pg_adv"), want, got):
+        np.testing.assert_allclose(np.asarray(w), np.asarray(g),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("rho_bar,c_bar,lambda_", [
+    (None, None, 1.0), (2.0, 1.0, 1.0), (1.0, 1.0, 0.9),
+])
+def test_fused_loss_vtrace_clip_variants(rho_bar, c_bar, lambda_):
+    from repro.kernels.vtrace import loss_vtrace_pallas
+
+    inp = _fused_inputs(40, 6, 7, seed=99)
+    want = _fused_oracle(*inp, rho_bar, c_bar, lambda_)
+    got = loss_vtrace_pallas(*inp, rho_bar=rho_bar, c_bar=c_bar,
+                             lambda_=lambda_, t_chunk=16)
+    for name, w, g in zip(("tlp", "ne", "vs", "pg_adv"), want, got):
+        np.testing.assert_allclose(np.asarray(w), np.asarray(g),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+def test_fused_loss_vtrace_gradients_match_unfused():
+    """custom_vjp backward: d(loss)/d(logits) of the assembled IMPALA
+    total matches autodiff through the unfused composition. vs/pg_adv
+    are stop-gradient targets in both formulations."""
+    from repro.kernels.vtrace import fused_loss_vtrace
+
+    inp = _fused_inputs(50, 8, 11, seed=7)
+    logits = inp[0]
+    rest = inp[1:]
+
+    def total_fused(lg):
+        tlp, ne, vs, pg = fused_loss_vtrace(lg, *rest, 1.0, 1.0, 1.0)
+        vs = jax.lax.stop_gradient(vs)
+        pg = jax.lax.stop_gradient(pg)
+        return (-jnp.sum(pg * tlp)
+                + 0.5 * jnp.sum(jnp.square(vs - inp[5]))
+                + 0.01 * jnp.sum(ne))
+
+    def total_unfused(lg):
+        tlp, ne, vs, pg = _fused_oracle(lg, *rest, 1.0, 1.0, 1.0)
+        vs = jax.lax.stop_gradient(vs)
+        pg = jax.lax.stop_gradient(pg)
+        return (-jnp.sum(pg * tlp)
+                + 0.5 * jnp.sum(jnp.square(vs - inp[5]))
+                + 0.01 * jnp.sum(ne))
+
+    lf, gf = jax.value_and_grad(total_fused)(logits)
+    lu, gu = jax.value_and_grad(total_unfused)(logits)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lu),
+                               atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(gu),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_impala_loss_fused_impl_matches_scan():
+    """End-to-end: the learner loss under impl='fused' equals impl='scan'
+    in value and logits/values gradients."""
+    from repro.configs.base import ImpalaConfig
+    from repro.core.losses import impala_loss
+
+    cfg = ImpalaConfig(num_actions=5, unroll_length=20)
+    b, t, a = 6, 20, 5
+    ks = jax.random.split(jax.random.key(3), 6)
+    logits = jax.random.normal(ks[0], (b, t, a))
+    values = jax.random.normal(ks[1], (b, t))
+    actions = jax.random.randint(ks[2], (b, t), 0, a)
+    onehot = jax.nn.one_hot(actions, a)
+    batch = {
+        "actions": actions,
+        "rewards": jax.random.normal(ks[3], (b, t)),
+        "discounts": jnp.full((b, t), 0.99),
+        "behaviour_logprob": jnp.sum(jax.nn.log_softmax(
+            logits + jax.random.normal(ks[4], (b, t, a)) * 0.2) * onehot,
+            -1),
+        "bootstrap_value": jax.random.normal(ks[5], (b,)),
+    }
+
+    def run(impl):
+        def f(lg, vv):
+            total, _ = impala_loss(cfg, lg, vv, batch, impl=impl)
+            return total
+        total, grads = jax.value_and_grad(f, argnums=(0, 1))(logits, values)
+        return total, grads
+
+    tf_, (glf, gvf) = run("fused")
+    ts_, (gls, gvs) = run("scan")
+    np.testing.assert_allclose(np.asarray(tf_), np.asarray(ts_),
+                               atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(glf), np.asarray(gls),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gvf), np.asarray(gvs),
+                               atol=1e-4, rtol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -286,3 +286,132 @@ def test_property_double_roundtrip_stable(tree):
     out1, _ = serde.decode_tree(buf1)
     buf2 = serde.encode_tree(out1)
     assert buf1 == buf2                     # encoding is a fixed point
+
+
+# ---------------------------------------------------------------------------
+# wire codecs: quantized payloads
+
+
+def test_check_codec_rejects_unknown_loudly():
+    assert serde.check_codec("bf16") == "bf16"
+    with pytest.raises(serde.CodecMismatchError, match="fp4"):
+        serde.check_codec("fp4")
+    with pytest.raises(serde.CodecMismatchError):
+        serde.encode_tree({"x": np.zeros(2, np.float32)}, codec="fp4")
+
+
+def test_bf16_codec_restores_logical_dtype_and_rounds():
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((16, 5)).astype(np.float32)
+    out, _ = serde.decode_tree(serde.encode_tree({"x": x}, codec="bf16"))
+    assert out["x"].dtype == np.float32        # logical dtype survives
+    want = x.astype(ml_dtypes.bfloat16).astype(np.float32)
+    assert out["x"].tobytes() == want.tobytes()
+
+
+def test_bf16_codec_is_a_fixed_point():
+    """bf16-representable values survive the lossy codec bit-exactly:
+    the second encode of a decoded payload is byte-identical, which is
+    what makes publish -> subscribe -> republish stable."""
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((64,)).astype(ml_dtypes.bfloat16) \
+           .astype(np.float32)
+    buf1 = serde.encode_tree({"x": x}, codec="bf16")
+    out1, _ = serde.decode_tree(buf1)
+    assert out1["x"].tobytes() == x.tobytes()
+    assert serde.encode_tree(out1, codec="bf16") == buf1
+
+
+def test_lossy_codec_keeps_nonfloat_leaves_bitexact():
+    rng = np.random.default_rng(5)
+    tree = {"obs": rng.integers(0, 255, (20, 8)).astype(np.uint8),
+            "n": rng.integers(0, 9, (7,)).astype(np.int64),
+            "f16": rng.standard_normal(6).astype(np.float16)}
+    for codec in ("bf16", "int8"):
+        out, _ = serde.decode_tree(serde.encode_tree(tree, codec=codec))
+        _assert_leaves_bitexact(tree, out)
+
+
+def test_int8_nonfinite_leaf_falls_back_to_raw():
+    x = np.array([np.inf, -1.0, 2.0], np.float32)
+    out, _ = serde.decode_tree(serde.encode_tree({"x": x}, codec="int8"))
+    assert out["x"].tobytes() == x.tobytes()   # kept verbatim, not NaN soup
+
+
+def test_traj_item_codec_protects_credit_assignment_leaves():
+    """encode_item quantizes observation-sized leaves only: rewards,
+    discounts, and behaviour log-probs feed the importance weights and
+    must cross the wire bit-exact under EVERY codec."""
+    rng = np.random.default_rng(6)
+    data = {"obs_image": rng.standard_normal((12, 4, 10, 10, 1))
+            .astype(np.float32),
+            "rewards": rng.standard_normal((12, 4)).astype(np.float32),
+            "discounts": np.ones((12, 4), np.float32),
+            "behaviour_logprob": -rng.random((12, 4)).astype(np.float32)}
+    item = serde.TrajectoryItem(data, param_version=5, actor_id=1,
+                                produced_at=1.0)
+    for codec in ("bf16", "int8"):
+        out = serde.decode_item(serde.encode_item(item, codec=codec))
+        for k in ("rewards", "discounts", "behaviour_logprob"):
+            assert out.data[k].tobytes() == data[k].tobytes(), (codec, k)
+        assert out.data["obs_image"].dtype == np.float32
+        assert not np.array_equal(out.data["obs_image"],
+                                  data["obs_image"]) or codec == "bf16"
+
+
+def test_param_store_bf16_publish_subscribe_roundtrip():
+    """The param wire end to end: a store publishing under bf16 hands
+    subscribers exactly the bf16-rounded tree, and republishing what a
+    subscriber holds is byte-stable (no drift across generations)."""
+    from repro.distributed.paramstore import ParameterStore
+    rng = np.random.default_rng(7)
+    params = {"w": rng.standard_normal((128, 64)).astype(np.float32),
+              "b": rng.standard_normal((64,)).astype(np.float32)}
+    store = ParameterStore(params, version=3, wire_codec="bf16")
+    buf, version = store.pull_serialized()
+    assert version == 3
+    sub, _ = serde.decode_tree(buf, copy=True)
+    want = {k: v.astype(ml_dtypes.bfloat16).astype(np.float32)
+            for k, v in params.items()}
+    _assert_leaves_bitexact(want, sub)
+    store2 = ParameterStore(sub, version=3, wire_codec="bf16")
+    buf2, _ = store2.pull_serialized()
+    sub2, _ = serde.decode_tree(buf2)
+    _assert_leaves_bitexact(sub, sub2)
+    assert store.serialized_wire_bytes < store.serialized_raw_bytes / 1.5
+
+
+def test_grads_codec_shrinks_and_bounds_error():
+    rng = np.random.default_rng(8)
+    leaves = [rng.standard_normal((64, 32)).astype(np.float32) * 0.01,
+              rng.standard_normal((256,)).astype(np.float32)]
+    raw = serde.encode_grads(leaves, round_idx=1, learner_id=1)
+    q8 = serde.encode_grads(leaves, round_idx=1, learner_id=1,
+                            codec="int8")
+    assert len(q8) < len(raw) / 3
+    out, meta = serde.decode_grads(q8)
+    assert meta["round"] == 1
+    for a, b in zip(leaves, out):
+        bound = np.max(np.abs(a)) / 127.0
+        assert np.max(np.abs(a - b)) <= bound + 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1) if HAVE_HYPOTHESIS else None)
+def test_property_int8_error_bounded_by_absmax(seed):
+    """The int8 contract: per-leaf max abs error <= absmax / 127 (the
+    quantization step is absmax/127 and rounding adds at most half a
+    step, so the bound is loose by 2x on purpose — it must hold for
+    every float leaf, every scale)."""
+    rng = np.random.default_rng(seed)
+    scale = float(10.0 ** rng.integers(-6, 6))
+    tree = {"a": (rng.standard_normal((11, 7)) * scale)
+            .astype(np.float32),
+            "b": (rng.standard_normal((130,)) * scale)
+            .astype(np.float32),
+            "z": np.zeros((4,), np.float32)}
+    out, _ = serde.decode_tree(serde.encode_tree(tree, codec="int8"))
+    for k, a in tree.items():
+        absmax = float(np.max(np.abs(a))) if a.size else 0.0
+        err = float(np.max(np.abs(a - out[k]))) if a.size else 0.0
+        assert err <= absmax / 127.0 + 1e-30, (k, err, absmax)

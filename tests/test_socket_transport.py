@@ -575,6 +575,140 @@ def test_shutdown_handshake_discards_cleanly_without_torn_frames():
 
 
 # ---------------------------------------------------------------------------
+# wire codecs over the socket: corruption and negotiation
+
+
+def _make_quantized_item(actor_id: int, seq: int) -> serde.TrajectoryItem:
+    """An item whose leaves hit the quantization path (obs_image is a
+    codec-selected key; rewards must stay bit-exact)."""
+    rng = np.random.default_rng(actor_id * 100 + seq)
+    data = {"obs_image": rng.standard_normal((8, 4, 5, 5, 1))
+            .astype(np.float32),
+            "rewards": rng.standard_normal((8, 4)).astype(np.float32),
+            "seq": np.int32(seq)}
+    return serde.TrajectoryItem(data, seq, actor_id, time.monotonic())
+
+
+@pytest.mark.timeout_s(120)
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_quantized_frame_bitflip_rejected_never_decoded(codec):
+    """A flipped bit inside a quantized payload must die at the CRC —
+    a corrupted int8 scale or bf16 mantissa silently decoding into
+    wrong-but-plausible observations would poison training."""
+    t = SocketTransport(capacity=8, policy="block", wire_codec=codec)
+    try:
+        item = _make_quantized_item(1, 0)
+        buf = serde.encode_item(item, codec=codec)
+        frame = bytearray(serde.pack_frame(st.KIND_TRAJ, 0, buf))
+        frame[serde.FRAME_HEADER_SIZE + len(buf) // 2] ^= 0x10
+        chan = _dial_data(t.address, actor_id=1)
+        chan._sock.sendall(bytes(frame))
+        _wait_for(lambda: t.snapshot()["decode_errors"] == 1,
+                  msg="corrupt quantized frame detected")
+        assert t.get_nowait() is None           # nothing decoded from it
+        _wait_for(lambda: not t.snapshot()["per_actor"][1]["connected"],
+                  msg="desynced connection dropped")
+        # a clean resend decodes: quantized leaves within codec error,
+        # protected leaves (rewards) bit-exact
+        chan2 = _dial_data(t.address, actor_id=1)
+        assert chan2.send(st.KIND_TRAJ, 0, buf)
+        got = t.get(timeout=10.0)
+        assert got is not None
+        assert got.data["rewards"].tobytes() == \
+            item.data["rewards"].tobytes()
+        absmax = float(np.max(np.abs(item.data["obs_image"])))
+        tol = absmax / 127.0 if codec == "int8" else absmax / 100.0
+        assert np.max(np.abs(got.data["obs_image"] -
+                             item.data["obs_image"])) <= tol
+        chan2.send(st.KIND_CTRL, 0, st.CTRL_BYE)
+        chan2.close()
+    finally:
+        t.close()
+
+
+@pytest.mark.timeout_s(180)
+def test_chaos_truncated_quantized_frame_is_a_torn_tail():
+    """Mid-frame truncation of an int8 payload: counted as a torn
+    tail, never decoded — the quantized wire keeps the exact torn-tail
+    discipline of the fp32 wire."""
+    t = SocketTransport(capacity=8, policy="block", wire_codec="int8")
+    proxy = ChaosProxy(t.address)
+    col = _Collector(t)
+    try:
+        hello = _hello_frame("data", 2)
+        frames = [serde.pack_frame(
+            st.KIND_TRAJ, 0,
+            serde.encode_item(_make_quantized_item(2, seq), codec="int8"))
+            for seq in range(3)]
+        cut = len(hello) + len(frames[0]) + len(frames[1]) // 2
+        proxy.truncate_in(cut)
+        chan = st.FrameChannel(
+            socket.create_connection(proxy.address, timeout=5.0))
+        chan._sock.sendall(hello)
+        for f in frames:
+            chan._sock.sendall(f)
+        _wait_for(lambda: col.count(2) == 1, msg="pre-cut frame")
+        _wait_for(lambda: t.snapshot()["torn_tails"] == 1,
+                  msg="torn tail counted")
+        chan.close()
+        assert col.count(2) == 1
+        snap = t.snapshot()
+        assert snap["decode_errors"] == 0
+        assert snap["wire_codec"] == "int8"
+        assert snap["traj_raw_bytes"] > snap["traj_wire_bytes"]
+    finally:
+        col.stop()
+        proxy.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_codec_mismatch_refused_at_handshake_not_garbage_decoded():
+    """Mixed-fleet negotiation: a learner announcing a codec this
+    client build does not speak must produce a loud, *distinct*
+    CodecMismatchError at connect — never a connected client decoding
+    garbage."""
+    t = SocketTransport(capacity=8, policy="block")
+    t.config_extra = lambda aid: {}
+    # simulate a newer learner build: announce a codec unknown here
+    # (bypasses the constructor's own check on purpose)
+    t.wire_codec = "fp4-blocked"
+    client = SocketActorClient(t.address, backoff=(0.01, 0.1))
+    try:
+        with pytest.raises(serde.CodecMismatchError, match="fp4-blocked"):
+            client.connect()
+        assert client.stopped           # refusal is terminal, no redial
+    finally:
+        client.close(bye=False)
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_matching_codec_negotiates_and_accounts_bytes():
+    """The happy path of negotiation: the handshake carries the codec,
+    the client records it, and the transport's byte accounting shows
+    the diet (wire bytes well under raw bytes)."""
+    t = SocketTransport(capacity=8, policy="block", wire_codec="bf16")
+    t.config_extra = lambda aid: {}
+    client = SocketActorClient(t.address, backoff=(0.01, 0.1))
+    try:
+        cfg = client.connect()
+        assert cfg is not None and cfg["wire_codec"] == "bf16"
+        assert client.wire_codec == "bf16"
+        item = _make_quantized_item(cfg["actor_id"], 0)
+        assert client.send_traj(
+            serde.encode_item(item, codec=client.wire_codec))
+        got = t.get(timeout=10.0)
+        assert got is not None
+        snap = t.snapshot()
+        assert snap["bytes_per_frame"] > 0
+        assert snap["traj_raw_bytes"] / snap["traj_wire_bytes"] > 1.5
+    finally:
+        client.close()
+        t.close()
+
+
+# ---------------------------------------------------------------------------
 # end to end through the runtime (jax from here on)
 
 
@@ -692,3 +826,40 @@ def test_remote_actors_learn_catch_both_modes():
         assert late > early + 0.15, (mode, early, late)
         assert late > -0.3, (mode, early, late)
     assert results["inference"][2]["inference"]["requests"] > 0
+
+
+@pytest.mark.skipif(FAST, reason="net-smoke fast path (BENCH_FAST=1)")
+@pytest.mark.timeout_s(540)
+def test_remote_actors_learn_catch_quantized_wire():
+    """Acceptance: the same learning bar with the wire on a diet — the
+    lossy codecs may round observations (bf16) or quantize them to
+    int8, but credit-assignment leaves stay bit-exact, so catch must
+    still climb decisively under both."""
+    from repro.configs.base import ImpalaConfig
+    from repro.core.driver import small_arch
+    from repro.data.envs import make_catch
+    from repro.distributed import run_async_training
+
+    env = make_catch()
+    arch = small_arch(env)
+    cfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=20,
+                       learning_rate=6e-4, entropy_cost=0.003,
+                       rmsprop_eps=0.01)
+    for codec in ("bf16", "int8"):
+        tracker, metrics, tel = run_async_training(
+            "catch", cfg, num_envs=32, steps=400, num_actors=2,
+            actor_backend="remote", transport="socket", wire_codec=codec,
+            queue_capacity=8, queue_policy="block", max_batch_trajs=4,
+            seed=0, arch=arch)
+        returns = tracker.completed
+        early = float(np.mean(returns[:500]))
+        late = float(np.mean(returns[-100:]))
+        assert tel["learner_updates"] == 400, codec
+        assert np.isfinite(float(metrics["loss/total"])), codec
+        assert tel["queue"]["wire_codec"] == codec, tel["queue"]
+        assert tel["queue"]["decode_errors"] == 0, codec
+        # the diet must actually be on for the run that learned
+        assert (tel["queue"]["traj_raw_bytes"] >
+                tel["queue"]["traj_wire_bytes"] * 1.5), (codec, tel["queue"])
+        assert late > early + 0.15, (codec, early, late)
+        assert late > -0.3, (codec, early, late)
