@@ -58,6 +58,41 @@ def latest_step(directory: str) -> Optional[int]:
         return int(f.read().strip())
 
 
+def read_manifest(directory: str,
+                  step: Optional[int] = None) -> Dict[str, Any]:
+    """The JSON manifest of a checkpoint — including the ``extra`` dict
+    ``save`` wrote (group version / restart epochs ride there)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
+        return json.load(f)
+
+
+def load_with_extra(directory: str, step: Optional[int] = None
+                    ) -> Tuple[PyTree, int, Dict[str, Any]]:
+    """Restore WITHOUT a ``like`` structure: rebuilds a nested dict
+    tree from the path-keyed leaves. Every tree this repo checkpoints
+    (params, optimizer state, the combined ``{"params":..., "opt":...}``
+    fleet checkpoint) is nested dicts of arrays, so the path keys ARE
+    the structure. Returns ``(tree, step, extra)``."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    manifest = read_manifest(directory, step)
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    tree: Dict[str, Any] = {}
+    for key in manifest["keys"]:
+        node = tree
+        parts = key.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = data[key]
+    return tree, step, manifest.get("extra", {})
+
+
 def restore(directory: str, like: PyTree,
             step: Optional[int] = None) -> Tuple[PyTree, int]:
     """Restore into the structure of ``like`` (values ignored)."""

@@ -58,6 +58,11 @@ _EXPORTS = {
     "NullExchange": "repro.distributed.group",
     "GradHub": "repro.distributed.group",
     "SpokeExchange": "repro.distributed.group",
+    "ResilientExchange": "repro.distributed.group",
+    "KillSafeEvent": "repro.distributed.supervise",
+    "RestartPolicy": "repro.distributed.supervise",
+    "Supervisor": "repro.distributed.supervise",
+    "fold_restart_seed": "repro.distributed.supervise",
     "GroupTracker": "repro.distributed.group",
     "merge_telemetry": "repro.distributed.group",
     "shard_slots": "repro.distributed.group",
@@ -100,7 +105,8 @@ if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
     from repro.distributed.actor_pool import ActorPool
     from repro.distributed.group import (GradHub, GradientExchange,
                                          GroupTracker, NullExchange,
-                                         SpokeExchange, merge_telemetry,
+                                         ResilientExchange, SpokeExchange,
+                                         merge_telemetry,
                                          run_group_training, shard_slots)
     from repro.distributed.learner import Learner, MultiTracker
     from repro.distributed.netserve import remote_actor_main
@@ -115,6 +121,8 @@ if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
     from repro.distributed.runner import (run_actor_loop,
                                           run_inference_actor_loop)
     from repro.distributed.runtime import ACTOR_MODES, run_async_training
+    from repro.distributed.supervise import (KillSafeEvent, RestartPolicy,
+                                             Supervisor, fold_restart_seed)
     from repro.distributed.serde import (TrajectoryItem, decode_item,
                                          decode_tree, decode_tree_into,
                                          encode_item, encode_tree,

@@ -28,6 +28,7 @@ from repro.distributed.paramstore import ParameterStore
 from repro.distributed.runner import (run_actor_loop,
                                       run_inference_driver_loop)
 from repro.distributed.serde import TrajectoryItem  # noqa: F401 (re-export)
+from repro.distributed.supervise import Supervisor, fold_restart_seed
 from repro.distributed.transport import Transport
 
 
@@ -132,6 +133,11 @@ class ActorPool(PoolAccounting):
                 self._builders.append(
                     actor_lib.build_actor(env, arch_cfg, icfg, num_envs))
         self.errors: List[BaseException] = []
+        # supervised respawn (attach_supervisor): a dead worker thread
+        # waits here for a restart grant instead of failing the run
+        self._supervisor: Optional[Supervisor] = None
+        self._dead: List[tuple] = []            # (idx, exc)
+        self._respawns: Dict[str, tuple] = {}   # key -> (idx, decision)
         self._init_accounting(num_actors, num_envs * icfg.unroll_length,
                               slot_base)
         # attribution hooks: evictions always come back through the
@@ -166,21 +172,32 @@ class ActorPool(PoolAccounting):
             attempt += 1
         return False
 
-    def _run(self, idx: int) -> None:
+    def _run(self, idx: int, epoch: int = 0) -> None:
         try:
             run_actor_loop(
                 actor_id=self.slot_base + idx,
                 builder=self._builders[idx],
-                seed=self.seed,
+                seed=fold_restart_seed(self.seed, epoch),
                 pull_params=self.store.pull,
                 emit=lambda item: self._emit(idx, item),
                 should_stop=self._stop.is_set,
                 on_unroll=lambda: self._note_frames(idx))
         except BaseException as e:  # surface in the learner thread
-            self.errors.append(e)
+            self._note_death(idx, e)
+
+    def _note_death(self, idx: int, exc: BaseException) -> None:
+        """Unsupervised, a worker death fails the run (close the queue
+        so the learner wakes and ``raise_errors`` fires). Supervised,
+        it is parked for ``raise_errors`` to respawn — the queue stays
+        open, the remaining workers keep producing."""
+        if self._supervisor is not None and not self._stop.is_set():
+            with self._acct_lock:
+                self._dead.append((idx, exc))
+        else:
+            self.errors.append(exc)
             self.queue.close()
 
-    def _run_driver(self) -> None:
+    def _run_driver(self, epoch: int = 0) -> None:
         """Inference mode: ONE thread multiplexes every logical actor —
         per-actor threads would only add GIL-serialized Event wake-ups
         to a loop whose heavy lifting (the batched policy forward)
@@ -192,7 +209,8 @@ class ActorPool(PoolAccounting):
                 actor_ids=list(range(self.slot_base,
                                      self.slot_base + self.num_actors)),
                 env=self.env, arch_cfg=self._arch_cfg, icfg=self._icfg,
-                num_envs=self.num_envs, seed=self.seed,
+                num_envs=self.num_envs,
+                seed=fold_restart_seed(self.seed, epoch),
                 service=self.service,
                 emit=lambda aid, item: self._emit(aid - self.slot_base,
                                                   item),
@@ -200,23 +218,34 @@ class ActorPool(PoolAccounting):
                 on_unroll=lambda aid: self._note_frames(
                     aid - self.slot_base))
         except BaseException as e:  # surface in the learner thread
-            self.errors.append(e)
-            self.queue.close()
+            self._note_death(-1, e)
 
     # ------------------------------------------------------------------
 
+    def attach_supervisor(self, supervisor: Supervisor) -> None:
+        """Opt into supervised respawn: a worker thread that dies is
+        respawned (same global slot, restart-epoch folded into its
+        seed) on the next ``raise_errors`` call instead of failing the
+        run — until the restart policy is exhausted, at which point
+        ``raise_errors`` raises exactly as the unsupervised pool does."""
+        self._supervisor = supervisor
+
+    def _spawn(self, idx: int, epoch: int = 0) -> None:
+        if idx < 0:
+            t = threading.Thread(target=self._run_driver, args=(epoch,),
+                                 name="inference-driver", daemon=True)
+        else:
+            t = threading.Thread(target=self._run, args=(idx, epoch),
+                                 name=f"actor-{idx}", daemon=True)
+        self._threads.append(t)
+        t.start()
+
     def start(self) -> None:
         if self.service is not None:
-            t = threading.Thread(target=self._run_driver,
-                                 name="inference-driver", daemon=True)
-            self._threads.append(t)
-            t.start()
+            self._spawn(-1)
             return
         for i in range(self.num_actors):
-            t = threading.Thread(target=self._run, args=(i,),
-                                 name=f"actor-{i}", daemon=True)
-            self._threads.append(t)
-            t.start()
+            self._spawn(i)
 
     def stop(self) -> None:
         self._stop.set()
@@ -230,5 +259,32 @@ class ActorPool(PoolAccounting):
             t.join(max(0.0, deadline - time.monotonic()))
 
     def raise_errors(self) -> None:
+        if self._supervisor is not None:
+            self._heal()
         if self.errors:
             raise RuntimeError("actor thread died") from self.errors[0]
+
+    def _heal(self) -> None:
+        """Ask the supervisor for restart grants for parked deaths and
+        launch every respawn whose backoff has elapsed. Non-blocking:
+        called from the learner loop every iteration, so backoff waits
+        ride the loop instead of stalling training."""
+        sup = self._supervisor
+        with self._acct_lock:
+            dead, self._dead = self._dead, []
+        for idx, exc in dead:
+            key = (f"actor-{self.slot_base + idx}" if idx >= 0
+                   else f"driver-{self.slot_base}")
+            decision = sup.record_death(key)
+            if decision is None:    # budget exhausted: fail loudly
+                self.errors.append(exc)
+                self.queue.close()
+                continue
+            self._respawns[key] = (idx, decision)
+        now = time.monotonic()
+        due = [k for k, (_i, d) in self._respawns.items()
+               if d.not_before <= now]
+        for key in due:
+            idx, decision = self._respawns.pop(key)
+            self._spawn(idx, decision.epoch)
+            sup.note_restarted(key)

@@ -60,6 +60,8 @@ from repro.distributed.socket_transport import (CTRL_BYE, CTRL_REFUSED,
                                                 KIND_GRAD,
                                                 KIND_GRAD_MEAN,
                                                 KIND_HELLO)
+from repro.distributed.supervise import (KillSafeEvent, RestartPolicy,
+                                         Supervisor, fold_restart_seed)
 
 PyTree = Any
 Address = Tuple[str, int]
@@ -173,12 +175,35 @@ class GradHub(GradientExchange):
                  listen: Address = ("127.0.0.1", 0),
                  stale_after_s: float = 180.0,
                  stop_event: Optional[Any] = None,
-                 wire_codec: str = serde.DEFAULT_CODEC):
+                 wire_codec: str = serde.DEFAULT_CODEC,
+                 hub_id: int = 0,
+                 start_round: int = -1,
+                 dead: Any = (),
+                 hold_disconnected: bool = False,
+                 trace: Optional[Any] = None):
+        """``hub_id`` is this hub's own learner id (nonzero after a
+        failover promotes a former spoke). ``start_round`` seeds the
+        stale-round watermark: a hub taking over mid-run at round t
+        passes ``t - 1`` so round t is reducible but nothing older is.
+        ``dead`` pre-marks learner ids known lost (the failed-over hub)
+        so rounds never wait on them; a reborn id that re-registers is
+        un-marked. ``hold_disconnected`` (supervised runs) keeps a
+        disconnected spoke in the round's wait set until the stale
+        deadline instead of excluding it outright — under supervision a
+        vanished spoke is *being respawned*, and a hub that raced
+        through the remaining rounds alone would finish and unbind
+        before the reborn spoke ever redials. ``trace`` (a
+        ``TraceRecorder``) records per-round hub_wait/reduce/broadcast
+        spans when set."""
         if num_learners < 1:
             raise ValueError("num_learners must be >= 1")
-        self.learner_id = 0
+        if not 0 <= hub_id < num_learners:
+            raise ValueError(f"hub_id must be in [0, {num_learners}), "
+                             f"got {hub_id}")
+        self.learner_id = self.hub_id = int(hub_id)
         self.num_learners = num_learners
         self.stale_after_s = stale_after_s
+        self.trace = trace
         # KIND_GRAD_MEAN broadcasts are encoded with this; spokes must
         # announce the same codec in their HELLO or be refused — a
         # mixed-codec group would average quantization error unevenly
@@ -190,9 +215,10 @@ class GradHub(GradientExchange):
         self._cond = threading.Condition()
         # round -> learner_id -> leaves (hub's own contribution included)
         self._contrib: Dict[int, Dict[int, List[np.ndarray]]] = {}
-        self._done_round = -1
+        self._done_round = int(start_round)
         self._spokes: Dict[int, FrameChannel] = {}
-        self._dead: set = set()
+        self._dead: set = {int(d) for d in dead} - {self.hub_id}
+        self._hold_disconnected = bool(hold_disconnected)
         self._mean_history: "collections.OrderedDict[int, bytes]" = \
             collections.OrderedDict()
         # telemetry
@@ -244,7 +270,8 @@ class GradHub(GradientExchange):
             hello = json.loads(payload.decode("utf-8"))
             lid = int(hello["learner_id"])
             if kind != KIND_HELLO or hello.get("role") != "learner" or \
-                    not 0 < lid < self.num_learners:
+                    not 0 <= lid < self.num_learners or \
+                    lid == self.hub_id:
                 chan.close()
                 return
             spoke_codec = hello.get("wire_codec", serde.DEFAULT_CODEC)
@@ -305,7 +332,13 @@ class GradHub(GradientExchange):
         chan.close()
         with self._cond:
             if self._spokes.get(lid) is chan:
-                self._dead.add(lid)
+                # unsupervised, a vanished spoke is dead: exclude it so
+                # rounds stop waiting. Supervised, it is being respawned
+                # — keep it in the wait set (the stale deadline still
+                # bounds every round) so the reborn spoke finds the hub
+                # alive, replays the means it missed, and rejoins.
+                if not self._hold_disconnected:
+                    self._dead.add(lid)
                 self._cond.notify_all()
 
     # ------------------------------------------------------------------
@@ -314,7 +347,8 @@ class GradHub(GradientExchange):
         t0 = time.monotonic()
         deadline = t0 + self.stale_after_s
         with self._cond:
-            self._contrib.setdefault(round_idx, {})[0] = list(leaves)
+            self._contrib.setdefault(round_idx, {})[self.hub_id] = \
+                list(leaves)
             while True:
                 got = self._contrib.get(round_idx, {})
                 expected = self.num_learners - len(self._dead)
@@ -335,10 +369,11 @@ class GradHub(GradientExchange):
             for rnd in [r for r in self._contrib if r <= round_idx]:
                 self.stale_dropped += len(self._contrib.pop(rnd))
             self._done_round = round_idx
+        t_gathered = time.monotonic()
         mean = _mean_leaves(got)
         version = round_idx + 1
         buf = serde.encode_grads(mean, round_idx=round_idx,
-                                 learner_id=0, version=version,
+                                 learner_id=self.hub_id, version=version,
                                  codec=self.wire_codec)
         if self.wire_codec != "none":
             # lossy codec: spokes apply the DECODED broadcast, so the
@@ -346,6 +381,7 @@ class GradHub(GradientExchange):
             # its pre-quantization mean would silently fork the
             # replicas (caught by the params_digest identity check)
             mean, _meta = serde.decode_grads(buf, copy=True)
+        t_reduced = time.monotonic()
         with self._cond:
             # history BEFORE the spoke snapshot, under ONE lock: a
             # spoke registering concurrently either lands in this
@@ -372,7 +408,12 @@ class GradHub(GradientExchange):
             elif not self._stopped():
                 chan.close()
         self.rounds += 1
-        self.reduce_wait_s += time.monotonic() - t0
+        t_done = time.monotonic()
+        self.reduce_wait_s += t_done - t0
+        if self.trace is not None:
+            self.trace.record_exchange_round(
+                round_idx, enter=t0, gathered=t_gathered,
+                reduced=t_reduced, done=t_done)
         return mean, version
 
     # ------------------------------------------------------------------
@@ -381,6 +422,7 @@ class GradHub(GradientExchange):
         snap = super().snapshot()
         with self._cond:
             snap.update({
+                "hub_id": self.hub_id,
                 "rounds": self.rounds,
                 "wire_codec": self.wire_codec,
                 "stale_dropped": self.stale_dropped,
@@ -517,6 +559,15 @@ class SpokeExchange(GradientExchange):
             self._hub_gone = True
             self._cond.notify_all()
 
+    def abort_wait(self) -> None:
+        """Mark the hub lost from the outside (the supervision layer
+        learned of its death before TCP did): wakes a blocked
+        ``allreduce`` so failover can proceed instead of riding out
+        the full reply timeout."""
+        with self._cond:
+            self._hub_gone = True
+            self._cond.notify_all()
+
     # ------------------------------------------------------------------
 
     def allreduce(self, leaves, round_idx):
@@ -601,6 +652,182 @@ class SpokeExchange(GradientExchange):
         with self._cond:
             self._cond.notify_all()
         self._reader.join(timeout=5.0)
+
+
+class ResilientExchange(GradientExchange):
+    """The self-healing wrapper a *supervised* group worker puts around
+    its exchange. The bare ``SpokeExchange`` keeps its fail-fast
+    contract (hub gone => RuntimeError) — this class is where that
+    error becomes a recoverable event:
+
+    * ``allreduce`` catches the hub-gone/timeout error and blocks
+      (bounded by ``failover_deadline_s``) for the parent's failover
+      verdict, delivered through the worker's control thread via
+      ``begin_failover`` / ``set_hub``.
+    * If THIS learner is the promoted one, it builds a new ``GradHub``
+      continuing at ``start_round = round_idx - 1`` (so the in-flight
+      round reduces on the new hub) with the dead hub pre-marked, and
+      reports the address via ``on_promoted`` (the worker ships it up
+      the pipe; the parent relays it to the surviving spokes).
+    * Otherwise it redials the relayed address as a fresh spoke and
+      retries the same round — the round number never skips, so the
+      group's monotonic version stream continues across the failover.
+    * Past the deadline it degrades to *solo* training: the mean of a
+      group of one, version ``round + 1`` continuity, and a loud
+      ``degraded_solo`` telemetry flag (``/healthz`` shows degraded).
+
+    Codec mismatches still raise (that is a config bug, not a fault).
+    """
+
+    def __init__(self, inner: GradientExchange, learner_id: int,
+                 num_learners: int, *,
+                 stop_event: Optional[Any] = None,
+                 failover_deadline_s: float = 20.0,
+                 stale_after_s: float = 180.0,
+                 wire_codec: str = serde.DEFAULT_CODEC,
+                 on_promoted=None,
+                 initial_dead: Any = ()):
+        self.learner_id = learner_id
+        self.num_learners = num_learners
+        self.wire_codec = serde.check_codec(wire_codec)
+        self._inner = inner
+        self._ext_stop = stop_event
+        self._stop = threading.Event()
+        self._cond = threading.Condition()
+        self._failover_deadline_s = failover_deadline_s
+        self._stale_after_s = stale_after_s
+        self._on_promoted = on_promoted
+        self._dead_ids = {int(d) for d in initial_dead}
+        self._promote = False
+        self._new_hub: Optional[Address] = None
+        self.failovers = 0
+        self.degraded_solo = False
+        self.solo_rounds = 0
+
+    # ------------------------------------------------------------------
+
+    def _stopped(self) -> bool:
+        return self._stop.is_set() or (
+            self._ext_stop is not None and self._ext_stop.is_set())
+
+    # control plane — called from the worker's parent-pipe reader thread
+
+    def begin_failover(self, new_hub_id: int,
+                       dead_id: Optional[int] = None) -> None:
+        """The parent named a new hub. Arm the swap and wake a blocked
+        allreduce (the inner spoke may not have noticed the death)."""
+        with self._cond:
+            if dead_id is not None:
+                self._dead_ids.add(int(dead_id))
+            self._promote = int(new_hub_id) == self.learner_id
+            self._new_hub = None
+            self._cond.notify_all()
+        poke = getattr(self._inner, "abort_wait", None)
+        if poke is not None:
+            poke()
+
+    def set_hub(self, addr: Address) -> None:
+        """The promoted hub's address arrived (relayed by the parent)."""
+        with self._cond:
+            self._new_hub = tuple(addr)
+            self._cond.notify_all()
+
+    # ------------------------------------------------------------------
+
+    def allreduce(self, leaves, round_idx):
+        while not self._stopped():
+            if self.degraded_solo:
+                # the mean of a group of one; version stream continues
+                self.solo_rounds += 1
+                return list(leaves), round_idx + 1
+            inner = self._inner
+            try:
+                out = inner.allreduce(leaves, round_idx)
+            except serde.CodecMismatchError:
+                raise               # config bug: never retried
+            except RuntimeError:
+                out = None          # hub gone / round evicted / timeout
+                if self._stopped():
+                    return None
+            else:
+                if out is not None:
+                    return out
+                if self._stopped():
+                    return None
+            if not self._swap(round_idx):
+                if self._stopped():
+                    return None
+                self.degraded_solo = True
+        return None
+
+    def _swap(self, round_idx: int) -> bool:
+        """Wait (bounded) for the failover verdict, then become the new
+        hub or redial it. False => deadline passed, caller degrades."""
+        try:
+            self._inner.close()
+        except Exception:
+            pass
+        deadline = time.monotonic() + self._failover_deadline_s
+        while not self._stopped():
+            with self._cond:
+                promote, addr = self._promote, self._new_hub
+                if not promote and addr is None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                    self._cond.wait(min(0.2, remaining))
+                    continue
+                self._promote = False
+                self._new_hub = None
+                dead = set(self._dead_ids)
+            if promote:
+                # ResilientExchange only exists in supervised runs, so a
+                # promoted hub always holds disconnected spokes for the
+                # respawner rather than writing them off
+                hub = GradHub(self.num_learners, hub_id=self.learner_id,
+                              start_round=round_idx - 1,
+                              stale_after_s=self._stale_after_s,
+                              stop_event=self._ext_stop,
+                              wire_codec=self.wire_codec,
+                              dead=dead, hold_disconnected=True)
+                self._inner = hub
+                self.failovers += 1
+                if self._on_promoted is not None:
+                    self._on_promoted(hub.address)
+                return True
+            try:
+                spoke = SpokeExchange(
+                    tuple(addr), self.learner_id, self.num_learners,
+                    stop_event=self._ext_stop,
+                    dial_timeout_s=max(1.0,
+                                       deadline - time.monotonic()),
+                    reply_timeout_s=max(60.0, 4 * self._stale_after_s),
+                    wire_codec=self.wire_codec)
+            except RuntimeError:
+                continue            # not up yet (or died again): wait on
+            self._inner = spoke
+            self.failovers += 1
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+
+    def snapshot(self):
+        snap = self._inner.snapshot()
+        snap.update({
+            "resilient": True,
+            "learner_id": self.learner_id,
+            "failovers": self.failovers,
+            "degraded_solo": self.degraded_solo,
+            "solo_rounds": self.solo_rounds,
+        })
+        return snap
+
+    def close(self):
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        self._inner.close()
 
 
 # ---------------------------------------------------------------------------
@@ -716,29 +943,106 @@ def _learner_worker(learner_id: int, conn, stop_event,
     try:
         num_learners = int(spec["num_learners"])
         wire_codec = spec.get("wire_codec", serde.DEFAULT_CODEC)
+        supervise = bool(spec.get("supervise", False))
+        hub_id = int(spec.get("hub_id", 0))
+        start_step = int(spec["start_step"])
+        initial_params = initial_opt = None
+        resume = spec.get("resume")
+        if resume is not None:
+            # respawn / group resume: start from the checkpointed
+            # replica + optimizer state at its published version, so
+            # the version stream continues monotonically
+            initial_params, _ = serde.decode_tree(resume["params"],
+                                                  copy=True)
+            initial_opt, _ = serde.decode_tree(resume["opt"], copy=True)
+            start_step = int(resume["version"])
+        # publisher duty follows the hub (a promotion flips it mid-run)
+        state = {"publisher": learner_id == hub_id}
+        pend_dead: set = set()
         exchange = None
+        resilient = None
+
+        def _build_hub(dead=()):
+            return GradHub(num_learners, hub_id=learner_id,
+                           start_round=start_step - 1,
+                           stale_after_s=spec["stale_after_s"],
+                           stop_event=stop_event,
+                           wire_codec=wire_codec, dead=dead,
+                           hold_disconnected=supervise)
+
         if num_learners > 1:
-            if learner_id == 0:
-                exchange = GradHub(
-                    num_learners,
-                    stale_after_s=spec["stale_after_s"],
-                    stop_event=stop_event,
-                    wire_codec=wire_codec)
+            if learner_id == hub_id:
+                exchange = _build_hub()
                 conn.send(("hub", list(exchange.address)))
             else:
-                msg = conn.recv()       # parent relays the hub address
-                if msg[0] != "hub" or msg[1] is None:
-                    raise RuntimeError("no gradient-exchange hub "
-                                       "address (hub worker failed?)")
-                exchange = SpokeExchange(
-                    tuple(msg[1]), learner_id, num_learners,
-                    stop_event=stop_event,
-                    reply_timeout_s=max(600.0,
-                                        4 * spec["stale_after_s"]),
-                    wire_codec=wire_codec)
+                while exchange is None:
+                    msg = conn.recv()   # parent relays the hub address
+                    if msg[0] == "failover" and supervise:
+                        # the hub died before it ever bound: the parent
+                        # re-elected pre-start
+                        if len(msg) > 2 and msg[2] is not None:
+                            pend_dead.add(int(msg[2]))
+                        if int(msg[1]) == learner_id:
+                            hub_id = learner_id
+                            state["publisher"] = True
+                            exchange = _build_hub(dead=pend_dead)
+                            conn.send(("hub", list(exchange.address)))
+                        continue
+                    if msg[0] != "hub" or msg[1] is None:
+                        raise RuntimeError("no gradient-exchange hub "
+                                           "address (hub worker failed?)")
+                    exchange = SpokeExchange(
+                        tuple(msg[1]), learner_id, num_learners,
+                        stop_event=stop_event,
+                        reply_timeout_s=max(600.0,
+                                            4 * spec["stale_after_s"]),
+                        wire_codec=wire_codec)
         # num_learners == 1: no exchange at all — the worker then runs
         # the exact fused donated train step run_async_training runs,
         # which is what the first-train-step bit-match test pins
+
+        if supervise and exchange is not None:
+            def _on_promoted(addr):
+                state["publisher"] = True
+                try:
+                    conn.send(("hub", list(addr)))
+                except (OSError, BrokenPipeError):
+                    pass
+
+            resilient = ResilientExchange(
+                exchange, learner_id, num_learners,
+                stop_event=stop_event,
+                failover_deadline_s=float(
+                    spec.get("failover_deadline_s", 20.0)),
+                stale_after_s=spec["stale_after_s"],
+                wire_codec=wire_codec,
+                on_promoted=_on_promoted,
+                initial_dead=pend_dead)
+            exchange = resilient
+
+            def _control():
+                # the parent's only post-handshake messages are
+                # failover verdicts and relayed hub addresses; the main
+                # thread never recv()s again, so this thread owns the
+                # read side of the pipe from here on
+                while not stop_event.is_set():
+                    try:
+                        if not conn.poll(0.2):
+                            continue
+                        msg = conn.recv()
+                    except (EOFError, OSError):
+                        return
+                    if msg[0] == "failover":
+                        resilient.begin_failover(
+                            int(msg[1]),
+                            dead_id=(int(msg[2])
+                                     if len(msg) > 2 and
+                                     msg[2] is not None else None))
+                    elif msg[0] == "hub" and msg[1] is not None:
+                        resilient.set_hub(tuple(msg[1]))
+
+            threading.Thread(target=_control, name="group-control",
+                             daemon=True).start()
 
         from repro.distributed import runtime
 
@@ -758,7 +1062,10 @@ def _learner_worker(learner_id: int, conn, stop_event,
             max_batch_trajs=spec["max_batch_trajs"],
             batch_linger_s=spec["batch_linger_s"],
             seed=spec["seed"], arch=spec["arch"],
-            start_step=spec["start_step"], donate=spec["donate"],
+            start_step=start_step, donate=spec["donate"],
+            initial_params=initial_params,
+            initial_opt_state=initial_opt,
+            supervise=supervise,
             infer_flush_timeout_s=spec["infer_flush_timeout_s"],
             infer_streams=spec["infer_streams"],
             slot_base=base, learner_id=learner_id,
@@ -769,8 +1076,11 @@ def _learner_worker(learner_id: int, conn, stop_event,
 
         tel_every = int(spec.get("telemetry_every", 0))
         tel_interval = float(spec.get("telemetry_interval_s", 0.0))
+        # every supervised worker keeps the cadence (promotion may hand
+        # it publisher duty mid-run); unsupervised non-publishers skip
         ckpt_every = (int(spec.get("ckpt_every", 0))
-                      if learner_id == spec.get("publisher", 0) else 0)
+                      if supervise or learner_id == hub_id else 0)
+        ckpt_full = bool(spec.get("ckpt_full", False))
         last_tel = [time.monotonic()]
 
         def on_update(step, params, _metrics, snapshot_fn):
@@ -786,7 +1096,8 @@ def _learner_worker(learner_id: int, conn, stop_event,
                     conn.send(("telemetry", snapshot_fn()))
                 except (OSError, BrokenPipeError):
                     pass
-            if ckpt_every and step % ckpt_every == 0:
+            if ckpt_every and step % ckpt_every == 0 and \
+                    state["publisher"]:
                 # periodic checkpoint stream: the publisher ships its
                 # replica up the pipe (replicas are identical, one copy
                 # suffices) so the parent can save mid-run state — a
@@ -794,7 +1105,18 @@ def _learner_worker(learner_id: int, conn, stop_event,
                 import jax
                 host = jax.tree.map(np.asarray, params)
                 try:
-                    conn.send(("params", step, serde.encode_tree(host)))
+                    if ckpt_full:
+                        # full group checkpoint: params + optimizer
+                        # state + published version, what a respawned
+                        # spoke (or a --resume run) starts from
+                        conn.send(("ckpt", step,
+                                   int(learner.store.version),
+                                   serde.encode_tree(host),
+                                   serde.encode_tree(
+                                       learner.opt_state_host())))
+                    else:
+                        conn.send(("params", step,
+                                   serde.encode_tree(host)))
                 except (OSError, BrokenPipeError):
                     pass
 
@@ -819,7 +1141,7 @@ def _learner_worker(learner_id: int, conn, stop_event,
             # replicas) without shipping N full parameter trees
             "params_digest": zlib.crc32(params_buf),
         }
-        if learner_id == spec.get("publisher", 0):
+        if state["publisher"]:
             # the designated publisher ships its final params so the
             # parent can checkpoint / compare without touching jax
             result["params"] = params_buf
@@ -881,6 +1203,11 @@ def run_group_training(
     return_final_params: bool = False,
     join_timeout_s: float = 60.0,
     obs=None,
+    supervise: bool = False,
+    restart_policy: Optional[RestartPolicy] = None,
+    failover_deadline_s: float = 20.0,
+    ckpt_dir: Optional[str] = None,
+    resume_from: Optional[str] = None,
 ):
     """Train ``steps`` synchronized rounds across ``num_learners``
     learner worker processes, the run's ``num_actors`` actor slots
@@ -920,6 +1247,21 @@ def run_group_training(
     for the whole fleet, each learner's subtree labelled
     ``learner="k"``. The bound address lands in ``obs.bound_address``.
 
+    ``supervise=True`` turns faults into events: a spoke learner worker
+    that dies silently (SIGKILL, OOM) is respawned from the latest
+    group checkpoint (or from scratch, riding the hub's mean-replay
+    history) under ``restart_policy``'s budget; a dead *hub* triggers
+    failover — the lowest live learner id is promoted, survivors redial
+    it, and the round/version stream continues uninterrupted. A
+    survivor that cannot rejoin within ``failover_deadline_s`` degrades
+    to solo training with a loud ``degraded_solo`` flag. All of it is
+    counted in the merged telemetry's ``supervisor`` section.
+
+    ``ckpt_dir`` + ``ckpt_every`` save periodic *group* checkpoints
+    (publisher params + optimizer state + version + restart epochs);
+    ``resume_from`` starts every worker from the latest such checkpoint,
+    continuing the same monotonic version stream.
+
     Returns ``(tracker, last_metrics, merged_telemetry)`` — shaped like
     ``run_async_training``'s triple, with the telemetry merged by
     ``merge_telemetry`` (per-learner snapshots under ``learners.*``) —
@@ -945,6 +1287,21 @@ def run_group_training(
                              "actors needs an explicit listen_addr "
                              "(worker k binds port+k)")
 
+    resume_spec = None
+    if resume_from is not None:
+        from repro.checkpoint import checkpoint as ckpt_lib
+        tree, ck_step, extra = ckpt_lib.load_with_extra(resume_from)
+        if not (isinstance(tree, dict) and "params" in tree
+                and "opt" in tree):
+            raise ValueError(
+                f"group resume needs a combined params+opt checkpoint "
+                f"(fleet-v1); {resume_from} holds a params-only tree")
+        version = int((extra or {}).get("version", ck_step))
+        resume_spec = {"params": serde.encode_tree(tree["params"]),
+                       "opt": serde.encode_tree(tree["opt"]),
+                       "version": version}
+        start_step = version
+
     spec = {
         "env": env_name, "icfg": icfg, "num_envs": num_envs,
         "steps": steps, "num_learners": num_learners,
@@ -962,16 +1319,28 @@ def run_group_training(
         "wire_codec": serde.check_codec(wire_codec),
         "vtrace_impl": vtrace_impl,
         "telemetry_every": telemetry_every, "publisher": 0,
+        "hub_id": 0, "supervise": supervise,
+        "failover_deadline_s": failover_deadline_s,
+        "resume": resume_spec,
+        # full checkpoints (params + opt state) whenever the parent
+        # needs restartable state: a ckpt_dir to save into, or a
+        # supervised run (respawns start from the latest one)
+        "ckpt_full": supervise or ckpt_dir is not None,
         "telemetry_interval_s": (
             telemetry_interval_s or
             (obs.telemetry_interval_s
              if obs is not None and obs.metrics_port is not None
              else 0.0)),
-        "ckpt_every": ckpt_every if on_checkpoint is not None else 0,
+        "ckpt_every": (ckpt_every
+                       if (on_checkpoint is not None or supervise or
+                           ckpt_dir is not None) else 0),
     }
 
     ctx = mp.get_context("spawn")
-    stop = ctx.Event()
+    # kill-safe: chaos tests (and real preemption) SIGKILL learner
+    # workers; a corpse holding mp.Event's lock would deadlock the
+    # parent's own stop.set() at teardown
+    stop = KillSafeEvent(ctx)
     conns: List[Any] = []
     procs: List[mp.process.BaseProcess] = []
     for k in range(num_learners):
@@ -987,12 +1356,22 @@ def run_group_training(
         procs.append(p)
         p.start()
         child_conn.close()
+    all_procs: List[mp.process.BaseProcess] = list(procs)
 
     results: Dict[int, Dict] = {}
     errors: List[str] = []
     latest_tel: Dict[int, Dict] = {}
     hub_sent = False
     live = set(range(num_learners))
+
+    # supervision state (parent side)
+    sup = Supervisor(restart_policy) if supervise else None
+    current_hub = 0                     # publisher duty follows it
+    hub_addr: Optional[List] = None
+    failover_pending = False
+    pending_respawn: Dict[int, Any] = {}    # k -> RestartDecision
+    abandoned: set = set()              # hub ids lost to failover
+    latest_ckpt: Optional[Dict[str, Any]] = None
 
     server = None
     if obs is not None and obs.metrics_port is not None:
@@ -1001,10 +1380,15 @@ def run_group_training(
         def group_snapshot() -> Dict[str, Any]:
             tels = dict(latest_tel)
             if not tels:        # nothing shipped yet: a stub, not a 500
-                return {"group": {"num_learners": num_learners,
-                                  "publisher": 0, "stale_dropped": 0,
+                snap = {"group": {"num_learners": num_learners,
+                                  "publisher": current_hub,
+                                  "stale_dropped": 0,
                                   "awaiting_first_telemetry": True}}
-            return merge_telemetry(tels, publisher=0)
+            else:
+                snap = merge_telemetry(tels, publisher=current_hub)
+            if sup is not None:
+                snap["supervisor"] = sup.snapshot()
+            return snap
 
         server = MetricsServer(group_snapshot, host=obs.metrics_host,
                                port=obs.metrics_port).start()
@@ -1012,48 +1396,146 @@ def run_group_training(
         print(f"[obs] group metrics at http://{server.address[0]}:"
               f"{server.address[1]}/metrics", flush=True)
 
-    def _relay_hub(addr) -> None:
-        for j in range(1, num_learners):
+    def _relay_hub(addr, exclude=frozenset((0,))) -> None:
+        for j in range(num_learners):
+            if j in exclude:
+                continue
             try:
                 conns[j].send(("hub", addr))
             except (OSError, BrokenPipeError):
                 pass
 
+    def _save_group_ckpt(step: int) -> None:
+        if ckpt_dir is None or latest_ckpt is None:
+            return
+        from repro.checkpoint import checkpoint as ckpt_lib
+        tree = {"params": serde.decode_tree(latest_ckpt["params"],
+                                            copy=True)[0],
+                "opt": serde.decode_tree(latest_ckpt["opt"],
+                                         copy=True)[0]}
+        extra = {"version": latest_ckpt["version"],
+                 "format": "fleet-v1",
+                 "restart_epochs": (sup.restart_epochs()
+                                    if sup is not None else {})}
+        ckpt_lib.save(ckpt_dir, step, tree, extra=extra)
+
+    def _fail(msg: str) -> None:
+        nonlocal hub_sent
+        errors.append(msg)
+        stop.set()
+        if not hub_sent:
+            hub_sent = True
+            _relay_hub(None)
+
+    def _handle_death(k: int) -> None:
+        """A worker died silently (no error message: SIGKILL / OOM).
+        Supervised, that is an event — failover for the hub, respawn
+        for a spoke — not a run-ending error."""
+        nonlocal current_hub, failover_pending
+        if sup is None:
+            _fail(f"learner worker {k} exited with code "
+                  f"{procs[k].exitcode} before reporting")
+            return
+        if k == current_hub:
+            survivors = sorted(live)
+            if not survivors:
+                _fail(f"hub learner {k} died with no survivors "
+                      f"to promote")
+                return
+            # hub failover: promote the lowest live learner id; its
+            # actor shard is lost (graceful degradation), the round
+            # and version stream continue on the new hub
+            abandoned.add(k)
+            sup.record_failover()
+            current_hub = survivors[0]
+            failover_pending = True
+            for j in survivors:
+                try:
+                    conns[j].send(("failover", current_hub, k))
+                except (OSError, BrokenPipeError):
+                    pass
+        else:
+            decision = sup.record_death(f"learner-{k}")
+            if decision is None:
+                _fail(f"learner worker {k} died over its restart "
+                      f"budget ({sup.policy.max_restarts} per "
+                      f"{sup.policy.window_s:.0f}s)")
+                return
+            pending_respawn[k] = decision
+
+    def _maybe_respawn() -> None:
+        now = time.monotonic()
+        for k in [k for k, d in pending_respawn.items()
+                  if d.not_before <= now]:
+            d = pending_respawn.pop(k)
+            respec = dict(spec)
+            respec["hub_id"] = current_hub
+            if latest_ckpt is not None:
+                # restart from the latest group checkpoint; the hub's
+                # mean-replay history carries it from that version to
+                # the group's current round
+                respec["resume"] = dict(latest_ckpt)
+                # fresh RNG streams for the reborn actors — but only
+                # when params come from a checkpoint; from-scratch
+                # respawns must re-derive the identical replica
+                # (same init, same mean sequence), so the seed stays
+                respec["seed"] = fold_restart_seed(seed, d.epoch)
+            parent_conn, child_conn = ctx.Pipe()
+            p = ctx.Process(target=_learner_worker,
+                            args=(k, child_conn, stop, respec),
+                            name=f"learner-{k}-r{d.epoch}")
+            conns[k] = parent_conn
+            procs[k] = p
+            all_procs.append(p)
+            p.start()
+            child_conn.close()
+            live.add(k)
+            sup.note_restarted(f"learner-{k}")
+            # mid-failover the only known address is the dead hub's;
+            # the reborn spoke then waits for the relayed new one
+            if hub_addr is not None and not failover_pending:
+                try:
+                    parent_conn.send(("hub", hub_addr))
+                except (OSError, BrokenPipeError):
+                    pass
+
+    def _on_worker_gone(k: int) -> None:
+        live.discard(k)
+        if k in results or errors:
+            return
+        _handle_death(k)
+
     try:
-        while live:
+        while live or pending_respawn:
+            _maybe_respawn()
             ready = mp_connection.wait([conns[k] for k in live],
-                                       timeout=0.5)
+                                       timeout=0.2 if pending_respawn
+                                       else 0.5)
             if not ready:
                 for k in list(live):
                     if procs[k].exitcode is not None:
-                        live.discard(k)
-                        if k not in results:
-                            errors.append(
-                                f"learner worker {k} exited with code "
-                                f"{procs[k].exitcode} before reporting")
-                            stop.set()
-                            if not hub_sent:
-                                hub_sent = True
-                                _relay_hub(None)
+                        _on_worker_gone(k)
                 continue
             for conn in ready:
                 k = conns.index(conn)
                 try:
                     msg = conn.recv()
                 except (EOFError, OSError):
-                    live.discard(k)
-                    if k not in results and not errors:
-                        errors.append(f"learner worker {k} died without "
-                                      f"reporting (pipe EOF)")
-                        stop.set()
-                        if not hub_sent:
-                            hub_sent = True
-                            _relay_hub(None)
+                    if k not in results and sup is None and not errors:
+                        _fail(f"learner worker {k} died without "
+                              f"reporting (pipe EOF)")
+                        live.discard(k)
+                    else:
+                        _on_worker_gone(k)
                     continue
                 tag = msg[0]
                 if tag == "hub":
                     hub_sent = True
-                    _relay_hub(msg[1])
+                    hub_addr = msg[1]
+                    _relay_hub(msg[1], exclude={k})
+                    if failover_pending:
+                        failover_pending = False
+                        sup.note_failover_done()
                 elif tag == "telemetry":
                     # every telemetry_every updates each worker ships a
                     # snapshot; on_progress(learner_id, snap) is the
@@ -1067,12 +1549,18 @@ def run_group_training(
                         on_checkpoint(
                             msg[1],
                             serde.decode_tree(msg[2], copy=True)[0])
+                elif tag == "ckpt":
+                    # full group checkpoint stream: (step, version,
+                    # params, opt state) — respawn source + disk save
+                    latest_ckpt = {"params": msg[3], "opt": msg[4],
+                                   "version": int(msg[2])}
+                    if on_checkpoint is not None:
+                        on_checkpoint(
+                            msg[1],
+                            serde.decode_tree(msg[3], copy=True)[0])
+                    _save_group_ckpt(int(msg[1]))
                 elif tag == "error":
-                    errors.append(f"learner worker {msg[1]}:\n{msg[2]}")
-                    stop.set()
-                    if not hub_sent:
-                        hub_sent = True
-                        _relay_hub(None)
+                    _fail(f"learner worker {msg[1]}:\n{msg[2]}")
                     live.discard(k)
                 elif tag == "result":
                     results[k] = msg[1]
@@ -1083,9 +1571,9 @@ def run_group_training(
         if errors:
             stop.set()
         deadline = time.monotonic() + join_timeout_s
-        for p in procs:
+        for p in all_procs:
             p.join(max(0.1, deadline - time.monotonic()))
-        for p in procs:
+        for p in all_procs:
             if p.is_alive():                # no orphans, ever
                 p.terminate()
                 p.join(timeout=5.0)
@@ -1097,8 +1585,9 @@ def run_group_training(
 
     if errors:
         raise RuntimeError("learner group failed:\n" + errors[0])
-    if len(results) < num_learners:
-        missing = sorted(set(range(num_learners)) - set(results))
+    expected = set(range(num_learners)) - abandoned
+    if not expected <= set(results):
+        missing = sorted(expected - set(results))
         raise RuntimeError(f"learner worker(s) {missing} produced no "
                            f"result")
 
@@ -1107,18 +1596,23 @@ def run_group_training(
     versions = sorted(r["param_version"] for r in results.values())
     digests = {f"learner_{k}": r["params_digest"]
                for k, r in sorted(results.items())}
+    group_extra = {"rounds": steps,
+                   "wire_codec": wire_codec,
+                   "param_versions": versions,
+                   "param_digests": digests,
+                   "replicas_identical": len(set(digests.values())) == 1,
+                   "transport": transport}
+    if abandoned:
+        group_extra["abandoned_learners"] = sorted(abandoned)
     telemetry = merge_telemetry(
         {k: r["telemetry"] for k, r in results.items()},
-        publisher=0,
-        group_extra={"rounds": steps,
-                     "wire_codec": wire_codec,
-                     "param_versions": versions,
-                     "param_digests": digests,
-                     "replicas_identical": len(set(digests.values())) == 1,
-                     "transport": transport})
-    metrics = results[0]["metrics"]
+        publisher=current_hub,
+        group_extra=group_extra)
+    if sup is not None:
+        telemetry["supervisor"] = sup.snapshot()
+    metrics = results[current_hub]["metrics"]
     if return_final_params:
-        params, _meta = serde.decode_tree(results[0]["params"],
+        params, _meta = serde.decode_tree(results[current_hub]["params"],
                                           copy=True)
         return tracker, metrics, telemetry, params
     return tracker, metrics, telemetry

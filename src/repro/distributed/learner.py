@@ -287,6 +287,7 @@ class Learner:
                  max_batch_trajs: int = 4, batch_linger_s: float = 0.0,
                  donate: bool = True, start_step: int = 0,
                  initial_params: Optional[PyTree] = None,
+                 initial_opt_state: Optional[PyTree] = None,
                  exchange=None, registry: Optional[Registry] = None,
                  wire_codec: str = "none", vtrace_impl: str = "auto",
                  trace=None, phase_timing: bool = False, profile=None):
@@ -354,7 +355,13 @@ class Learner:
         # independent by construction.
         self._snapshot = jax.jit(lambda tree: jax.tree.map(jnp.copy, tree))
         self._params = params
-        self._opt_state = opt.init(params)
+        if initial_opt_state is not None:
+            # checkpoint resume: restore the optimizer moments instead
+            # of re-initializing — device_put so donation never aliases
+            # the caller's (possibly mmapped) host buffers
+            self._opt_state = jax.device_put(initial_opt_state)
+        else:
+            self._opt_state = opt.init(params)
         self.store = ParameterStore(
             self._snapshot(params) if donate else params,
             version=start_step, wire_codec=wire_codec)
@@ -481,6 +488,12 @@ class Learner:
             snap["slot_base"] = self.slot_base
             snap["exchange"] = col.get("exchange",
                                        self._exchange.snapshot())
+        if "supervisor" in col:
+            # supervised only: restart/failover/lease-reap counts ride
+            # the snapshot so a final telemetry dump (and the group
+            # parent's merge) shows exactly what the run survived;
+            # unsupervised runs keep the pinned key set untouched
+            snap["supervisor"] = col["supervisor"]
         if self._phase_timing:
             # gated on the flight recorder being enabled: the pinned
             # key-set equivalence (group-of-one vs single run) holds for
@@ -608,12 +621,18 @@ class Learner:
 
     def run(self, steps: int, *, warm_buckets: bool = False,
             on_update: Optional[Callable] = None,
-            should_stop: Optional[Callable[[], bool]] = None
-            ) -> Tuple[Dict, Dict]:
+            should_stop: Optional[Callable[[], bool]] = None,
+            on_checkpoint: Optional[Callable] = None,
+            ckpt_every: int = 0) -> Tuple[Dict, Dict]:
         """Train until ``steps`` total updates (or ``should_stop``).
         Owns the full worker lifecycle: starts the service/pool, runs
         the loop, then stops/joins/closes in the only order that never
-        tears a frame. Returns (last metrics, final telemetry)."""
+        tears a frame. Returns (last metrics, final telemetry).
+
+        ``on_checkpoint(step, params, opt_state, version)`` fires every
+        ``ckpt_every`` updates (host numpy trees, decoupled from the
+        donated working state) — the periodic-checkpoint hook; the
+        4-arg ``on_update`` signature stays exactly as it always was."""
         import jax
         import jax.numpy as jnp
 
@@ -681,6 +700,12 @@ class Learner:
                 if on_update is not None:
                     on_update(self.updates, published, self.metrics,
                               self.telemetry_snapshot)
+                if on_checkpoint is not None and ckpt_every > 0 and \
+                        self.updates % ckpt_every == 0:
+                    on_checkpoint(self.updates,
+                                  jax.tree.map(np.asarray, published),
+                                  self.opt_state_host(),
+                                  self.store.version)
             # snapshot before teardown: pool.join waits out in-flight
             # unrolls and put timeouts, which would silently pad the
             # steady-state dt
@@ -714,3 +739,10 @@ class Learner:
         import jax
 
         return jax.tree.map(np.asarray, params)
+
+    def opt_state_host(self) -> PyTree:
+        """The live optimizer state as host numpy leaves (copies, so a
+        checkpoint writer never races the donated working tree)."""
+        import jax
+
+        return jax.tree.map(lambda x: np.array(x), self._opt_state)

@@ -46,6 +46,8 @@ from repro.distributed.paramstore import ParameterStore
 from repro.distributed.runner import (inference_actor_main,
                                       process_actor_main)
 from repro.distributed.serde import TrajectoryItem
+from repro.distributed.supervise import (KillSafeEvent, Supervisor,
+                                         fold_restart_seed)
 from repro.distributed.transport import ShmTransport
 
 
@@ -82,10 +84,19 @@ class ProcessActorPool(PoolAccounting):
         self.queue = transport
         self.seed = seed
         self._ctx = mp.get_context("spawn")
-        self._stop = self._ctx.Event()
+        # kill-safe: SIGKILLed children are this pool's normal case,
+        # and a corpse holding mp.Event's lock would deadlock stop()
+        self._stop = KillSafeEvent(self._ctx)
         self._procs: List[mp.process.BaseProcess] = []
         self._conns = []                        # parent ends of param pipes
+        self._conn_lock = threading.Lock()      # respawns append live
         self.errors: List[str] = []             # child tracebacks
+        # supervised respawn (attach_supervisor): a child that dies
+        # WITHOUT reporting an error (SIGKILL, OOM) is respawned; a
+        # reported traceback is a code bug and still raises
+        self._supervisor: "Supervisor | None" = None
+        self._live: dict = {}                   # local idx -> live process
+        self._respawns: dict = {}               # key -> (idx, decision)
         # ``frames`` counts trajectories that *landed* parent-side: the
         # steady clock starts at the first arrival (post child startup +
         # compile), mirroring the thread pool's convention
@@ -115,14 +126,23 @@ class ProcessActorPool(PoolAccounting):
     # param server: version-gated pub/sub over pipes
 
     def _serve_params(self) -> None:
-        conns = list(self._conns)
-        while conns:
+        dead: set = set()
+        while True:
+            # re-read the conn list each pass: a supervised respawn
+            # appends a fresh pipe mid-run and it must be served
+            with self._conn_lock:
+                conns = [c for c in self._conns if c not in dead]
+            if not conns:
+                if self._supervisor is None or self._stop.is_set():
+                    break       # unsupervised: all children gone = done
+                time.sleep(0.05)
+                continue        # supervised: a respawn may repopulate
             ready = mp_connection.wait(conns, timeout=0.2)
             for conn in ready:
                 try:
                     msg = conn.recv()
                 except (EOFError, OSError):
-                    conns.remove(conn)
+                    dead.add(conn)
                     continue
                 if msg[0] == "pull":
                     _, _actor_id, have_version = msg
@@ -135,7 +155,7 @@ class ProcessActorPool(PoolAccounting):
                     try:
                         conn.send(reply)
                     except (OSError, BrokenPipeError):
-                        conns.remove(conn)
+                        dead.add(conn)
                 elif msg[0] == "error":
                     self.errors.append(msg[2])
                     self.queue.close()
@@ -145,35 +165,51 @@ class ProcessActorPool(PoolAccounting):
 
     # ------------------------------------------------------------------
 
+    def attach_supervisor(self, supervisor: Supervisor) -> None:
+        """Opt into supervised respawn of silently-dead children (same
+        global slot, restart-epoch folded into the seed). Children that
+        *report* a traceback still raise — that is a code bug, not a
+        fault. Inference-mode children are not respawned (their reply
+        pipes are registered with the frontend once, at start)."""
+        self._supervisor = supervisor
+
+    def _spawn_child(self, i: int, epoch: int = 0):
+        parent_conn, child_conn = self._ctx.Pipe()
+        with self._conn_lock:
+            self._conns.append(parent_conn)
+        seed = fold_restart_seed(self.seed, epoch)
+        clients = None
+        if self._frontend is not None:
+            # frontend client ids stay pool-local (the service is
+            # per-learner); the child's actor id is global
+            clients = [self._frontend.register(
+                i * self.infer_streams + s)
+                for s in range(self.infer_streams)]
+            target, args = inference_actor_main, (
+                self.slot_base + i, self.env_name, self._arch_cfg,
+                self._icfg, self.num_envs, seed,
+                self.queue.producer(), clients, child_conn,
+                self._stop, self.queue.wire_codec)
+        else:
+            target, args = process_actor_main, (
+                self.slot_base + i, self.env_name, self._arch_cfg,
+                self._icfg, self.num_envs, seed,
+                self.queue.producer(), child_conn, self._stop,
+                self.queue.wire_codec)
+        p = self._ctx.Process(target=target, args=args,
+                              name=f"actor-proc-{i}", daemon=True)
+        self._procs.append(p)
+        self._live[i] = p
+        p.start()
+        child_conn.close()              # parent keeps only its end
+        if clients is not None:
+            for c in clients:
+                c.close()               # ditto for reply recv-ends
+        return p
+
     def start(self) -> None:
         for i in range(self.num_actors):
-            parent_conn, child_conn = self._ctx.Pipe()
-            self._conns.append(parent_conn)
-            if self._frontend is not None:
-                # frontend client ids stay pool-local (the service is
-                # per-learner); the child's actor id is global
-                clients = [self._frontend.register(
-                    i * self.infer_streams + s)
-                    for s in range(self.infer_streams)]
-                target, args = inference_actor_main, (
-                    self.slot_base + i, self.env_name, self._arch_cfg,
-                    self._icfg, self.num_envs, self.seed,
-                    self.queue.producer(), clients, child_conn,
-                    self._stop, self.queue.wire_codec)
-            else:
-                target, args = process_actor_main, (
-                    self.slot_base + i, self.env_name, self._arch_cfg,
-                    self._icfg, self.num_envs, self.seed,
-                    self.queue.producer(), child_conn, self._stop,
-                    self.queue.wire_codec)
-            p = self._ctx.Process(target=target, args=args,
-                                  name=f"actor-proc-{i}", daemon=True)
-            self._procs.append(p)
-            p.start()
-            child_conn.close()              # parent keeps only its end
-            if self._frontend is not None:
-                for c in clients:
-                    c.close()               # ditto for reply recv-ends
+            self._spawn_child(i)
         if self._frontend is not None:
             self._frontend.start()
         self._server.start()
@@ -208,14 +244,44 @@ class ProcessActorPool(PoolAccounting):
     def raise_errors(self) -> None:
         if self.errors:
             raise RuntimeError("actor process died:\n" + self.errors[0])
-        if not self._stop.is_set():
-            # a child that crashed before it could report (import error,
-            # OOM kill, ...) must not leave the learner polling forever
-            for p in self._procs:
-                if p.exitcode is not None and p.exitcode != 0:
-                    raise RuntimeError(
-                        f"actor process {p.name} exited with code "
-                        f"{p.exitcode} before reporting an error")
+        if self._stop.is_set():
+            return
+        if self._supervisor is not None and self._frontend is None:
+            self._heal()
+            return
+        # a child that crashed before it could report (import error,
+        # OOM kill, ...) must not leave the learner polling forever
+        for p in self._procs:
+            if p.exitcode is not None and p.exitcode != 0:
+                raise RuntimeError(
+                    f"actor process {p.name} exited with code "
+                    f"{p.exitcode} before reporting an error")
+
+    def _heal(self) -> None:
+        """Respawn silently-dead children under the restart policy.
+        Non-blocking: called from the learner loop, so backoff waits
+        ride the loop. A dead child reported no error (the errors
+        branch above raised otherwise) — SIGKILL / preemption / OOM,
+        the faults a fleet must absorb."""
+        sup = self._supervisor
+        for i, p in list(self._live.items()):
+            if p.exitcode is None or p.exitcode == 0:
+                continue
+            del self._live[i]
+            key = f"proc-{self.slot_base + i}"
+            decision = sup.record_death(key)
+            if decision is None:
+                raise RuntimeError(
+                    f"actor process {p.name} exited with code "
+                    f"{p.exitcode}; restart budget exhausted")
+            self._respawns[key] = (i, decision)
+        now = time.monotonic()
+        due = [k for k, (_i, d) in self._respawns.items()
+               if d.not_before <= now]
+        for key in due:
+            i, decision = self._respawns.pop(key)
+            self._spawn_child(i, decision.epoch)
+            sup.note_restarted(key)
 
 
 class SocketActorPool(PoolAccounting):
@@ -262,9 +328,12 @@ class SocketActorPool(PoolAccounting):
         self.seed = seed
         self.spawn_local = spawn_local
         self._ctx = mp.get_context("spawn")
-        self._stop = self._ctx.Event()
+        self._stop = KillSafeEvent(self._ctx)   # see ProcessActorPool
         self._procs: List[mp.process.BaseProcess] = []
         self.errors: List[str] = []             # remote tracebacks
+        self._supervisor: "Supervisor | None" = None
+        self._live: dict = {}                   # local idx -> live process
+        self._respawns: dict = {}               # key -> (idx, decision)
         self._init_accounting(num_actors, num_envs * icfg.unroll_length,
                               slot_base)
         self.service = service
@@ -292,17 +361,31 @@ class SocketActorPool(PoolAccounting):
 
     # ------------------------------------------------------------------
 
+    def attach_supervisor(self, supervisor: Supervisor) -> None:
+        """Opt into supervised respawn of locally-spawned children that
+        die without reporting an error. The respawned child redials the
+        learner; ``_bind``'s reclaim hands it the dead slot (ownership
+        transfer bumps the slot's restart epoch, which the CONFIG
+        handshake folds into the seed). Truly remote actors are an
+        operator's to relaunch — the reaper only frees their lease."""
+        self._supervisor = supervisor
+
+    def _spawn_child(self, i: int):
+        from repro.distributed.netserve import remote_actor_child
+        p = self._ctx.Process(
+            target=remote_actor_child,
+            args=(tuple(self.queue.address), self._stop),
+            name=f"actor-remote-{i}", daemon=True)
+        self._procs.append(p)
+        self._live[i] = p
+        p.start()
+        return p
+
     def start(self) -> None:
         if not self.spawn_local:
             return                      # remote machines dial in
-        from repro.distributed.netserve import remote_actor_child
         for i in range(self.num_actors):
-            p = self._ctx.Process(
-                target=remote_actor_child,
-                args=(tuple(self.queue.address), self._stop),
-                name=f"actor-remote-{i}", daemon=True)
-            self._procs.append(p)
-            p.start()
+            self._spawn_child(i)
 
     def stop(self) -> None:
         self._stop.set()
@@ -325,9 +408,37 @@ class SocketActorPool(PoolAccounting):
     def raise_errors(self) -> None:
         if self.errors:
             raise RuntimeError("remote actor died:\n" + self.errors[0])
-        if not self._stop.is_set():
-            for p in self._procs:
-                if p.exitcode is not None and p.exitcode != 0:
-                    raise RuntimeError(
-                        f"actor process {p.name} exited with code "
-                        f"{p.exitcode} before reporting an error")
+        if self._stop.is_set():
+            return
+        if self._supervisor is not None and self.spawn_local:
+            self._heal()
+            return
+        for p in self._procs:
+            if p.exitcode is not None and p.exitcode != 0:
+                raise RuntimeError(
+                    f"actor process {p.name} exited with code "
+                    f"{p.exitcode} before reporting an error")
+
+    def _heal(self) -> None:
+        """Mirror of ``ProcessActorPool._heal`` for loopback socket
+        children: respawn a silently-dead child under the restart
+        policy; the redial reclaims its slot via the nonce lease."""
+        sup = self._supervisor
+        for i, p in list(self._live.items()):
+            if p.exitcode is None or p.exitcode == 0:
+                continue
+            del self._live[i]
+            key = f"remote-{self.slot_base + i}"
+            decision = sup.record_death(key)
+            if decision is None:
+                raise RuntimeError(
+                    f"actor process {p.name} exited with code "
+                    f"{p.exitcode}; restart budget exhausted")
+            self._respawns[key] = (i, decision)
+        now = time.monotonic()
+        due = [k for k, (_i, d) in self._respawns.items()
+               if d.not_before <= now]
+        for key in due:
+            i, decision = self._respawns.pop(key)
+            self._spawn_child(i)
+            sup.note_restarted(key)

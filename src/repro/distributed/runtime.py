@@ -120,6 +120,7 @@ def _setup(
     seed: int = 0,
     arch: Optional[ArchConfig] = None,
     initial_params: Optional[PyTree] = None,
+    initial_opt_state: Optional[PyTree] = None,
     start_step: int = 0,
     donate: bool = True,
     infer_flush_timeout_s: float = 0.02,
@@ -133,6 +134,10 @@ def _setup(
     wire_codec: str = "none",
     vtrace_impl: str = "auto",
     obs=None,
+    supervise: bool = False,
+    supervisor=None,
+    heartbeat_timeout_s: float = 10.0,
+    elastic: bool = False,
 ) -> Learner:
     """Build one learner worker's whole dependency graph — env, params,
     train step, store, optional inference service, transport, actor
@@ -178,10 +183,23 @@ def _setup(
         slot_base=slot_base, actor_mode=actor_mode,
         max_batch_trajs=max_batch_trajs, batch_linger_s=batch_linger_s,
         donate=donate, start_step=start_step,
-        initial_params=initial_params, exchange=exchange,
+        initial_params=initial_params,
+        initial_opt_state=initial_opt_state, exchange=exchange,
         wire_codec=wire_codec, vtrace_impl=vtrace_impl,
         trace=trace, phase_timing=phase_timing, profile=profile)
     store = learner.store
+
+    # supervision is OPT-IN: without it every fault propagates exactly
+    # as before (the chaos tests pin that); with it the pools respawn
+    # dead children, the socket transport reaps stale leases, and the
+    # supervisor's ledger lands in telemetry (and thus /healthz)
+    if supervisor is None and supervise:
+        from repro.distributed.supervise import Supervisor
+        supervisor = Supervisor()
+    learner.supervisor = supervisor
+    if supervisor is not None:
+        learner.obs_registry.register_producer("supervisor",
+                                               supervisor.snapshot)
 
     service = None
     if actor_mode == "inference":
@@ -218,8 +236,15 @@ def _setup(
         transport_kw.update({"listen": listen_addr or ("127.0.0.1", 0),
                              "max_actors": num_actors,
                              "slot_base": slot_base})
+        if supervisor is not None:
+            # heartbeat liveness + lease reaping + elastic membership
+            # only make sense on the networked transport
+            transport_kw["heartbeat_timeout_s"] = heartbeat_timeout_s
+            transport_kw["elastic"] = elastic
     queue = make_transport(transport, queue_capacity, queue_policy,
                            **transport_kw)
+    if supervisor is not None and hasattr(queue, "supervisor"):
+        queue.supervisor = supervisor
     learner.queue = queue
     if actor_backend == "remote":
         from repro.distributed.procpool import SocketActorPool
@@ -249,6 +274,8 @@ def _setup(
         pool = ActorPool(env, arch, icfg, num_envs, num_actors, store,
                          queue, seed=seed, service=service,
                          slot_base=slot_base)
+    if supervisor is not None and hasattr(pool, "attach_supervisor"):
+        pool.attach_supervisor(supervisor)
     learner.attach(pool, service)
     return learner
 
@@ -273,6 +300,7 @@ def run_async_training(
     arch: Optional[ArchConfig] = None,
     warm_buckets: bool = False,
     initial_params: Optional[PyTree] = None,
+    initial_opt_state: Optional[PyTree] = None,
     start_step: int = 0,
     donate: bool = True,
     infer_flush_timeout_s: float = 0.02,
@@ -282,6 +310,11 @@ def run_async_training(
     vtrace_impl: str = "auto",
     on_update: Optional[Callable[[int, PyTree, Dict, Dict], None]] = None,
     obs=None,
+    supervise: bool = False,
+    heartbeat_timeout_s: float = 10.0,
+    elastic: bool = False,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
 ) -> Tuple[MultiTracker, Dict, Dict]:
     """Train until ``steps`` total learner updates with real async acting.
 
@@ -388,11 +421,13 @@ def run_async_training(
         queue_capacity=queue_capacity, queue_policy=queue_policy,
         max_batch_trajs=max_batch_trajs, batch_linger_s=batch_linger_s,
         seed=seed, arch=arch, initial_params=initial_params,
+        initial_opt_state=initial_opt_state,
         start_step=start_step, donate=donate,
         infer_flush_timeout_s=infer_flush_timeout_s,
         infer_max_batch_requests=infer_max_batch_requests,
         infer_streams=infer_streams, wire_codec=wire_codec,
-        vtrace_impl=vtrace_impl, obs=obs)
+        vtrace_impl=vtrace_impl, obs=obs, supervise=supervise,
+        heartbeat_timeout_s=heartbeat_timeout_s, elastic=elastic)
     server = sink = None
     prev_trace_env = None
     trace_env_set = False
@@ -415,9 +450,25 @@ def run_async_training(
             prev_trace_env = os.environ.get("REPRO_TRACE_EVERY")
             os.environ["REPRO_TRACE_EVERY"] = str(max(1, obs.trace_every))
             trace_env_set = True
+    on_ckpt = None
+    if ckpt_dir and ckpt_every > 0:
+        from repro.checkpoint import checkpoint as ckpt_lib
+
+        def on_ckpt(step, params, opt_state, version):
+            # combined tree + fleet extra: a resumed run restores the
+            # optimizer moments AND the version stream (and skips dead
+            # children's replayed seeds via their restart epochs)
+            extra = {"version": int(version), "format": "fleet-v1"}
+            sup = getattr(learner, "supervisor", None)
+            if sup is not None:
+                extra["restart_epochs"] = sup.restart_epochs()
+            ckpt_lib.save(ckpt_dir, step,
+                          {"params": params, "opt": opt_state},
+                          extra=extra)
     try:
         metrics, final_telemetry = learner.run(
-            steps, warm_buckets=warm_buckets, on_update=on_update)
+            steps, warm_buckets=warm_buckets, on_update=on_update,
+            on_checkpoint=on_ckpt, ckpt_every=ckpt_every)
     finally:
         if trace_env_set:
             if prev_trace_env is None:

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import collections
 import json
+import random
 import socket
 import struct
 import threading
@@ -74,6 +75,7 @@ KIND_ERROR = 10      # actor -> learner: traceback text
 # format and torn-tail discipline as everything else on the wire)
 KIND_GRAD = 11       # spoke -> hub: serde grad leaves (stream=learner)
 KIND_GRAD_MEAN = 12  # hub -> spoke: reduced mean for one round
+KIND_HEARTBEAT = 13  # actor -> learner: liveness beacon (ctrl only)
 
 CTRL_STOP = b"stop"
 CTRL_BYE = b"bye"
@@ -219,7 +221,8 @@ class _ActorSlot:
 
     __slots__ = ("actor_id", "ctrl", "data", "binds", "owner_nonce",
                  "frames", "bytes", "torn_tails", "reconnects", "losses",
-                 "wait_sum", "wait_n")
+                 "wait_sum", "wait_n", "last_seen", "lease_reaps",
+                 "epoch")
 
     def __init__(self, actor_id: int):
         self.actor_id = actor_id
@@ -234,6 +237,9 @@ class _ActorSlot:
         self.losses = 0          # rejected/evicted, attributed here
         self.wait_sum = 0.0      # recv -> accepted-into-queue latency
         self.wait_n = 0
+        self.last_seen = time.monotonic()   # liveness stamp (any frame)
+        self.lease_reaps = 0     # deadline-expired leases on this slot
+        self.epoch = 0           # ownership transfers (restart epoch)
 
 
 class SocketTransport:
@@ -293,12 +299,29 @@ class SocketTransport:
                  max_actors: Optional[int] = None,
                  data_buf_bytes: int = DATA_BUF_BYTES,
                  slot_base: int = 0, registry=None,
-                 wire_codec: str = serde.DEFAULT_CODEC):
+                 wire_codec: str = serde.DEFAULT_CODEC,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 elastic: bool = False):
         if policy not in POLICIES:
             raise ValueError(f"policy must be one of {POLICIES}, got "
                              f"{policy!r}")
         self.capacity = capacity
         self.policy = policy
+        # liveness: when set, the CONFIG handshake asks actors to
+        # heartbeat on ctrl (timeout/3 cadence) and a reaper thread
+        # expires the slot lease of any actor silent past the deadline —
+        # its slot becomes reclaimable without waiting for a full house.
+        # None (default) keeps the pre-supervision behavior: leases only
+        # move when a relaunched actor claims a dead slot.
+        self.heartbeat_timeout_s = heartbeat_timeout_s
+        # elastic membership: with elastic=True a dialer finding every
+        # slot taken by a LIVE actor gets a NEW slot past the
+        # ``max_actors`` ceiling instead of a refusal — actors may join
+        # the fleet at any time. ``on_slot_grown`` fires (outside the
+        # slot lock) so pool accounting can grow with it.
+        self.elastic = elastic
+        self.on_slot_grown: Optional[Callable[[int], None]] = None
+        self.supervisor = None          # optional supervise.Supervisor
         # the run's wire codec: announced in the CONFIG handshake so
         # every actor encodes the way this learner expects (a peer that
         # doesn't speak it refuses loudly at connect, never mid-run)
@@ -354,6 +377,8 @@ class SocketTransport:
         self._c_torn_tails = self.registry.counter("socket.torn_tails")
         self._c_reconnects = self.registry.counter("socket.reconnects")
         self._c_discarded = self.registry.counter("socket.discarded")
+        self._c_heartbeats = self.registry.counter("socket.heartbeats")
+        self._c_lease_reaps = self.registry.counter("socket.lease_reaps")
         self.decode_errors: List[str] = []      # CRC/magic/serde failures
         self.errors: List[str] = []             # remote actor tracebacks
         self._t0: Optional[float] = None        # first-frame clock
@@ -376,6 +401,12 @@ class SocketTransport:
                                           name="socket-accept",
                                           daemon=True)
         self._acceptor.start()
+        self._reaper: Optional[threading.Thread] = None
+        if heartbeat_timeout_s is not None:
+            self._reaper = threading.Thread(target=self._reap_loop,
+                                            name="socket-reaper",
+                                            daemon=True)
+            self._reaper.start()
 
     # ------------------------------------------------------------------
     # eviction attribution passes straight through to the local queue
@@ -431,6 +462,46 @@ class SocketTransport:
                 self._threads.append(t)
             t.start()
 
+    def _reap_loop(self) -> None:
+        """Deadline-based liveness: expire the slot lease of any actor
+        silent past ``heartbeat_timeout_s``. The lease (nonce ownership)
+        is what a reap revokes — the slot itself stays, with its
+        accounting, for the next claimant; a reaped actor that was
+        merely wedged finds its redial refused (stale nonce) and exits
+        visibly instead of fighting the claimant for the slot."""
+        timeout = self.heartbeat_timeout_s
+        poll = min(1.0, timeout / 4.0)
+        while not self._stop.wait(poll):
+            if self._discard:
+                continue
+            now = time.monotonic()
+            reaped: List[int] = []
+            with self._lock:
+                for slot in self._slots.values():
+                    live = ((slot.ctrl is not None and not slot.ctrl.dead)
+                            or (slot.data is not None
+                                and not slot.data.dead))
+                    held = slot.owner_nonce is not None
+                    if not (live or held):
+                        continue            # nothing to reap
+                    if now - slot.last_seen <= timeout:
+                        continue
+                    for k in [k for k, v in self._slot_by_nonce.items()
+                              if v is slot]:
+                        del self._slot_by_nonce[k]
+                    slot.owner_nonce = None
+                    slot.lease_reaps += 1
+                    self._c_lease_reaps.inc()
+                    reaped.append(slot.actor_id)
+                chans = [c for s in self._slots.values()
+                         if s.actor_id in reaped
+                         for c in (s.ctrl, s.data) if c is not None]
+            for chan in chans:      # close outside the slot lock
+                chan.close()
+            for actor_id in reaped:
+                if self.supervisor is not None:
+                    self.supervisor.record_lease_reap(f"slot-{actor_id}")
+
     def _conn_entry(self, sock: socket.socket) -> None:
         chan = FrameChannel(sock)
         deadline = time.monotonic() + 5.0
@@ -480,6 +551,11 @@ class SocketTransport:
                 cfg = {"actor_id": slot.actor_id,
                        "data_buf": self.data_buf_bytes,
                        "wire_codec": self.wire_codec}
+                if self.heartbeat_timeout_s is not None:
+                    # ask the actor to beacon at a third of the reap
+                    # deadline: two missed beats of slack before the
+                    # lease expires
+                    cfg["heartbeat_s"] = self.heartbeat_timeout_s / 3.0
                 if self.peer_addrs is not None:
                     # the group's shard map: every learner's listen
                     # address, so the remote machine knows the whole
@@ -487,6 +563,14 @@ class SocketTransport:
                     cfg["shard_map"] = [list(a) for a in self.peer_addrs]
                 if extra is not None:
                     cfg.update(extra(slot.actor_id))
+                if slot.epoch and "seed" in cfg:
+                    # restart-epoch seed folding for a slot whose
+                    # previous owner died: the run config is shared,
+                    # so the fold happens per-slot at handshake time
+                    from repro.distributed.supervise import \
+                        fold_restart_seed
+                    cfg["seed"] = fold_restart_seed(int(cfg["seed"]),
+                                                    slot.epoch)
                 chan.send(KIND_CONFIG, 0,
                           json.dumps(cfg).encode("utf-8"),
                           stop=self._stop.is_set)
@@ -514,7 +598,9 @@ class SocketTransport:
               nonce: Optional[str] = None) -> Optional[_ActorSlot]:
         if role not in ("ctrl", "data"):
             return None
+        grew = False
         with self._lock:
+            next_before = self._next_id
             if actor_id < 0:
                 if role != "ctrl":
                     return None         # data conns must name their actor
@@ -547,9 +633,17 @@ class SocketTransport:
                             slot.owner_nonce = nonce
                             if nonce:
                                 self._slot_by_nonce[nonce] = slot
+                            # a NEW actor took over the slot: bump the
+                            # restart epoch so the CONFIG handshake can
+                            # fold it into the seed — the successor
+                            # must not replay its predecessor's stream
+                            slot.epoch += 1
                             break
-                    if slot is None:
+                    if slot is None and not self.elastic:
                         return None     # every slot has a live actor
+                    # elastic membership: every slot has a live actor,
+                    # so GROW — hand out a fresh global id past the
+                    # ceiling rather than turning a willing machine away
                 if slot is None:
                     actor_id = self._next_id
                     self._next_id += 1
@@ -583,7 +677,17 @@ class SocketTransport:
             if old is not None:
                 old.close()
             setattr(slot, role, chan)
-            return slot
+            slot.last_seen = time.monotonic()
+            grew = (self.max_actors is not None
+                    and self._next_id > next_before
+                    and slot.actor_id >=
+                    self.slot_base + self.max_actors)
+        if grew and self.on_slot_grown is not None:
+            try:
+                self.on_slot_grown(slot.actor_id)
+            except Exception:       # accounting growth must not kill accept
+                pass
+        return slot
 
     # ------------------------------------------------------------------
     # connection drains
@@ -603,6 +707,7 @@ class SocketTransport:
                 return
             with self._lock:
                 self._c_bytes_in.inc(len(payload) + serde.FRAME_HEADER_SIZE)
+                slot.last_seen = time.monotonic()
             if kind == KIND_CTRL:
                 if payload == CTRL_BYE:         # clean shutdown handshake
                     return
@@ -668,7 +773,16 @@ class SocketTransport:
             except serde.SerdeError as e:
                 self.decode_errors.append(repr(e))
                 return
-            if kind == KIND_PARAM_REQ:
+            with self._lock:
+                # any ctrl traffic proves liveness; the explicit
+                # heartbeat only matters when the actor is otherwise
+                # idle (e.g. data link stalled under backpressure)
+                slot.last_seen = time.monotonic()
+                if kind == KIND_HEARTBEAT:
+                    self._c_heartbeats.inc()
+            if kind == KIND_HEARTBEAT:
+                pass
+            elif kind == KIND_PARAM_REQ:
                 self._serve_params(chan, payload)
             elif kind == KIND_CTRL:
                 if payload == CTRL_BYE:
@@ -762,6 +876,8 @@ class SocketTransport:
         for chan in chans:
             chan.close()
         self._acceptor.join(timeout=5.0)
+        if self._reaper is not None:
+            self._reaper.join(timeout=5.0)
         for t in threads:
             t.join(timeout=5.0)
 
@@ -790,6 +906,8 @@ class SocketTransport:
                                            if s.wait_n else 0.0),
                     "connected": (s.data is not None and not s.data.dead)
                     or (s.ctrl is not None and not s.ctrl.dead),
+                    "last_seen_age_s": now - s.last_seen,
+                    "lease_reaps": s.lease_reaps,
                 }
                 for s in self._slots.values()
             }
@@ -813,6 +931,9 @@ class SocketTransport:
                 "reconnects": self.reconnects,
                 "torn_tails": self.torn_tails,
                 "discarded": self.discarded,
+                "heartbeats": self._c_heartbeats.value,
+                "lease_reaps": self._c_lease_reaps.value,
+                "elastic": self.elastic,
                 "decode_errors": len(self.decode_errors),
                 "remote_errors": len(self.errors),
                 "per_actor": per_actor,
@@ -870,7 +991,8 @@ class SocketActorClient:
     def __init__(self, address: Address, *,
                  stop_event: Optional[Any] = None,
                  backoff: Tuple[float, float] = (0.05, 1.0),
-                 dial_timeout: float = 60.0):
+                 dial_timeout: float = 60.0,
+                 heartbeat_s: Optional[float] = None):
         import uuid
         self._addr = tuple(address)
         self._tried_addrs: set = set()  # learners that refused us
@@ -881,6 +1003,11 @@ class SocketActorClient:
         # idempotent-handshake token: a severed HELLO/CONFIG exchange
         # retried with the same nonce reuses the slot it already got
         self._nonce = uuid.uuid4().hex
+        # per-client decorrelated backoff jitter: a fleet of actors
+        # reconnecting to a restarted learner must not dial in phase
+        self._rng = random.Random(self._nonce)
+        self.heartbeat_s = heartbeat_s  # None: learner's CONFIG decides
+        self._hb_thread: Optional[threading.Thread] = None
         self.dial_failed = False        # dial_timeout exhausted mid-run
         self.refused = False            # learner had no free actor slot
         self._chans: Dict[str, Optional[FrameChannel]] = {"ctrl": None,
@@ -913,6 +1040,13 @@ class SocketActorClient:
     def _stop_check(self) -> bool:
         return self.stopped
 
+    def _jittered(self, delay: float) -> float:
+        """Decorrelate a backoff sleep: uniform in [delay/2, delay],
+        capped by the backoff ceiling. Half-jitter keeps retries fast
+        while spreading a fleet's redials across the window."""
+        cap = self._backoff[1]
+        return min(self._rng.uniform(delay * 0.5, delay), cap)
+
     def connect(self) -> Optional[Dict[str, Any]]:
         """Dial ctrl (handshake: HELLO up, CONFIG down) then data.
         Returns the config dict, or None if stopped/refused."""
@@ -920,7 +1054,30 @@ class SocketActorClient:
             return None
         if self._channel("data") is None:
             return None
+        interval = self.heartbeat_s or self.config.get("heartbeat_s")
+        if interval and self._hb_thread is None:
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, args=(float(interval),),
+                name="socket-heartbeat", daemon=True)
+            self._hb_thread.start()
         return self.config
+
+    def _heartbeat_loop(self, interval: float) -> None:
+        """Liveness beacon: a KIND_HEARTBEAT on ctrl every ``interval``
+        seconds so the learner-side reaper can tell a live-but-quiet
+        actor (long episode, backpressured data link) from a dead one.
+        Best-effort: a dead ctrl link is redialed by ``_channel``; a
+        failed send is simply retried next tick."""
+        while not self.stopped:
+            if self._stopped.wait(interval):
+                break
+            try:
+                chan = self._channel("ctrl")
+                if chan is not None and not chan.dead:
+                    chan.send(KIND_HEARTBEAT, 0, b"",
+                              stop=self._stop_check)
+            except Exception:   # never let liveness kill the actor
+                pass
 
     # ------------------------------------------------------------------
     # connection management
@@ -973,8 +1130,8 @@ class SocketActorClient:
                     sock.close()
                 except OSError:
                     pass
-                time.sleep(min(delay, max(0.0,
-                                          deadline - time.monotonic())))
+                time.sleep(min(self._jittered(delay),
+                               max(0.0, deadline - time.monotonic())))
                 delay = min(delay * 2, self._backoff[1])
                 continue
             chan = FrameChannel(sock)
@@ -992,7 +1149,7 @@ class SocketActorClient:
                 kind, _stream, payload = chan.recv(stop=self._stop_check)
             except (Disconnected, serde.SerdeError):
                 chan.close()
-                time.sleep(delay)
+                time.sleep(self._jittered(delay))
                 delay = min(delay * 2, self._backoff[1])
                 continue
             if kind == KIND_CTRL and (
@@ -1187,6 +1344,8 @@ class SocketActorClient:
                               stop=self._stop_check)
                 chan.close()
         self._stopped.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=2.0)
         with self._boxes_lock:
             boxes = list(self._infer_boxes.values())
         for box in boxes:

@@ -42,6 +42,7 @@ from typing import Any, Callable, Dict, Optional
 
 from repro.distributed import serde
 from repro.distributed.serde import TrajectoryItem
+from repro.distributed.supervise import KillSafeEvent
 from repro.distributed.tqueue import POLICIES, TrajectoryQueue
 
 TRANSPORTS = ("inproc", "shm", "socket")
@@ -148,7 +149,10 @@ class ShmTransport(Transport):
         # it here; actor processes receive it in their spawn config
         self.wire_codec = serde.check_codec(wire_codec)
         self._ctx = mp.get_context("spawn")
-        self._stop = self._ctx.Event()
+        # kill-safe: actor children share this flag and may be
+        # SIGKILLed mid-check; mp.Event's internal lock would stay
+        # held by the corpse and deadlock close()
+        self._stop = KillSafeEvent(self._ctx)
         self._wire = self._ctx.Queue(maxsize=wire_capacity or max(2, capacity // 4))
         self._inner = TrajectoryQueue(capacity, policy, registry=registry)
         self.registry = self._inner.registry

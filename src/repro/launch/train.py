@@ -152,6 +152,36 @@ def main() -> int:
                         "at most log2 variants; async runtime)")
     p.add_argument("--ckpt-dir", default="")
     p.add_argument("--ckpt-every", type=int, default=200)
+    p.add_argument("--resume", action="store_true",
+                   help="let a --learners N group resume from the "
+                        "latest fleet-v1 checkpoint in --ckpt-dir "
+                        "(params + optimizer state + version, "
+                        "continuing the monotonic version stream); "
+                        "without it a group refuses to run over an "
+                        "existing checkpoint. Single-learner runs "
+                        "resume from --ckpt-dir automatically.")
+    p.add_argument("--supervise", action="store_true",
+                   help="self-healing fleet mode (async runtime): "
+                        "heartbeat liveness + lease reaping for remote "
+                        "actors, supervised respawn of dead actor "
+                        "children / threads / spoke learners (restart "
+                        "budget + backoff), hub failover (the lowest "
+                        "live learner id is promoted; survivors degrade "
+                        "to solo past the deadline), and periodic full "
+                        "checkpoints (params + opt state) to --ckpt-dir")
+    p.add_argument("--heartbeat-timeout-s", type=float, default=10.0,
+                   help="remote-actor liveness deadline (--supervise): "
+                        "a slot silent this long has its lease reaped; "
+                        "clients heartbeat at a third of it")
+    p.add_argument("--elastic", action="store_true",
+                   help="with --supervise: let late-dialing remote "
+                        "actors grow the slot range past "
+                        "--actor-threads instead of being refused")
+    p.add_argument("--failover-deadline-s", type=float, default=20.0,
+                   help="learner-group hub failover budget: a survivor "
+                        "that cannot rejoin a new hub within this many "
+                        "seconds degrades to solo training (loud "
+                        "degraded_solo telemetry flag)")
     p.add_argument("--log-every", type=int, default=25)
     p.add_argument("--seed", type=int, default=0)
     obs = p.add_argument_group("observability (async runtime)")
@@ -270,7 +300,8 @@ def _run_remote_actors(args) -> int:
         os._exit(0)
     ctx = mp.get_context("spawn")
     from repro.distributed.netserve import remote_actor_child
-    stop = ctx.Event()
+    from repro.distributed.supervise import KillSafeEvent
+    stop = KillSafeEvent(ctx)
     procs = [ctx.Process(target=remote_actor_child, args=(addr, stop),
                          name=f"remote-actor-{i}") for i in range(n)]
     for proc in procs:
@@ -389,11 +420,21 @@ def _run_async(args, env, arch, icfg) -> int:
           f"queue={args.queue_capacity}/{args.queue_policy} "
           f"max_batch_trajs={args.max_batch_trajs} "
           f"donate={not args.no_donate}")
-    initial_params, start_step = None, 0
+    initial_params, initial_opt, start_step = None, None, 0
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
-        like = common.init_params(specs, jax.random.key(args.seed))
-        initial_params, start_step = ckpt.restore(args.ckpt_dir, like)
-        print(f"restored checkpoint at step {start_step}")
+        tree, ck_step, extra = ckpt.load_with_extra(args.ckpt_dir)
+        if (extra or {}).get("format") == "fleet-v1":
+            # full resume: params + optimizer state + version — the
+            # run continues the exact monotonic version stream
+            initial_params, initial_opt = tree["params"], tree["opt"]
+            start_step = int(extra.get("version", ck_step))
+            print(f"restored fleet checkpoint at version {start_step} "
+                  f"(params + optimizer state)")
+        else:
+            like = common.init_params(specs, jax.random.key(args.seed))
+            initial_params, start_step = ckpt.restore(args.ckpt_dir,
+                                                      like)
+            print(f"restored checkpoint at step {start_step}")
 
     last_params = [None]
 
@@ -416,7 +457,10 @@ def _run_async(args, env, arch, icfg) -> int:
                   f"{q['dropped']}/{q['put_stalls']} "
                   f"learner_fps={tel['frames_per_sec']:7.0f} "
                   f"actor_fps={tel['actors']['actor_fps']:7.0f}" + extra)
-        if args.ckpt_dir and step % args.ckpt_every == 0:
+        if args.ckpt_dir and step % args.ckpt_every == 0 and \
+                not args.supervise:
+            # legacy params-only saves; --supervise switches to the
+            # runtime's combined fleet-v1 checkpoints instead
             ckpt.save(args.ckpt_dir, step, params)
 
     env_arg = (args.env if args.actor_backend in ("process", "remote")
@@ -436,9 +480,16 @@ def _run_async(args, env, arch, icfg) -> int:
         infer_flush_timeout_s=args.infer_flush_ms / 1e3,
         wire_codec=args.wire_codec, vtrace_impl=args.vtrace_impl,
         seed=args.seed, arch=arch, initial_params=initial_params,
+        initial_opt_state=initial_opt,
         start_step=start_step, on_update=on_update,
+        supervise=args.supervise,
+        heartbeat_timeout_s=args.heartbeat_timeout_s,
+        elastic=args.elastic,
+        ckpt_dir=(args.ckpt_dir if args.supervise else None),
+        ckpt_every=args.ckpt_every,
         obs=_build_obs(args))
-    if args.ckpt_dir and last_params[0] is not None:
+    if args.ckpt_dir and last_params[0] is not None and \
+            not args.supervise:
         ckpt.save(args.ckpt_dir, args.steps, last_params[0])
     print(f"final return(100) = {tracker.mean_return():.3f}")
     keys = ["learner_updates", "frames_consumed", "updates_per_sec",
@@ -455,24 +506,44 @@ def _run_async(args, env, arch, icfg) -> int:
 
 def _run_group(args, env, arch, icfg, transport) -> int:
     """N>1 learner processes: sharded actors, gradient exchange over
-    the framed channel, one designated publisher. Checkpointing saves
-    the publisher's replica (replicas are identical) every
-    ``--ckpt-every`` updates and at the end; resume is not supported
-    yet. ``transport`` arrives resolved/validated from _run_async."""
+    the framed channel, one designated publisher. With --supervise the
+    group writes fleet-v1 checkpoints (params + optimizer state +
+    version) every ``--ckpt-every`` updates and resumes from the latest
+    one, continuing the same monotonic version stream. ``transport``
+    arrives resolved/validated from _run_async."""
     from repro.checkpoint import checkpoint as ckpt
     from repro.distributed import run_group_training
     from repro.models import backbone as bb
     from repro.models import common
 
+    resume_from = None
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
-        # the group path cannot resume yet (no initial_params plumbing
-        # into the workers) — refusing beats silently restarting from
-        # scratch AND overwriting the existing checkpoint at the end
-        raise SystemExit(
-            f"--learners {args.learners} does not support checkpoint "
-            f"resume yet, and {args.ckpt_dir!r} already holds a "
-            f"checkpoint (step {ckpt.latest_step(args.ckpt_dir)}). "
-            "Move it aside or pick a fresh --ckpt-dir.")
+        step0 = ckpt.latest_step(args.ckpt_dir)
+        man = ckpt.read_manifest(args.ckpt_dir)
+        fleet = man.get("extra", {}).get("format") == "fleet-v1"
+        if not args.resume:
+            # refusing beats silently restarting from scratch AND
+            # overwriting the existing checkpoint at the end
+            hint = ("pass --resume to continue it"
+                    if fleet else "move it aside or pick a fresh "
+                                  "--ckpt-dir")
+            raise SystemExit(
+                f"{args.ckpt_dir!r} already holds a checkpoint "
+                f"(step {step0}); {hint}.")
+        if fleet:
+            resume_from = args.ckpt_dir
+            print(f"resuming learner group from fleet checkpoint "
+                  f"(step {step0})")
+        else:
+            # a params-only checkpoint has no optimizer state to hand
+            # the workers — refusing beats silently restarting from
+            # scratch AND overwriting the existing checkpoint
+            raise SystemExit(
+                f"{args.ckpt_dir!r} holds a params-only checkpoint "
+                f"(step {step0}); a learner group resumes only from "
+                f"fleet-v1 checkpoints (params + optimizer state — "
+                f"written by --supervise runs). Move it aside or pick "
+                f"a fresh --ckpt-dir.")
     listen_addr = (_parse_hostport(args.listen, default_host="0.0.0.0")
                    if args.listen else None)
     spawn_remote = not args.listen
@@ -516,10 +587,16 @@ def _run_group(args, env, arch, icfg, transport) -> int:
         seed=args.seed, arch=arch,
         telemetry_every=args.log_every, on_progress=on_progress,
         ckpt_every=args.ckpt_every if args.ckpt_dir else 0,
+        # supervised groups save fleet-v1 (params + opt state) through
+        # ckpt_dir; legacy params-only saves would mix formats
         on_checkpoint=(lambda step, p: ckpt.save(args.ckpt_dir, step, p))
-        if args.ckpt_dir else None,
+        if args.ckpt_dir and not args.supervise else None,
+        supervise=args.supervise,
+        failover_deadline_s=args.failover_deadline_s,
+        resume_from=resume_from,
+        ckpt_dir=args.ckpt_dir if args.supervise else None,
         return_final_params=True, obs=_build_obs(args))
-    if args.ckpt_dir:
+    if args.ckpt_dir and not args.supervise:
         ckpt.save(args.ckpt_dir, args.steps, params)
     print(f"final return(100) = {tracker.mean_return():.3f}")
     keys = ["group", "learner_updates", "frames_consumed",

@@ -14,9 +14,11 @@ serves three routes off one ``snapshot_fn`` (the learner's
   /healthz     ok / degraded / unhealthy derived from the snapshot:
                unhealthy (HTTP 503) on lost-learner conditions (a
                spoke's hub connection gone, dead learners in the hub's
-               view); degraded (HTTP 200, status field says so) on
+               view, a supervisor whose restart budget is exhausted);
+               degraded (HTTP 200, status field says so) on
                loss/instability counters (drops, reconnects, torn
-               tails, stale gradients, decode errors).
+               tails, stale gradients, decode errors) and while a
+               supervised restart or hub failover is in flight.
   /telemetry   the snapshot as JSON, verbatim.
 
 The server must never take down the run it observes: snapshot or
@@ -119,6 +121,11 @@ def health(snap: Dict[str, Any]) -> Tuple[int, Dict[str, Any]]:
                 bad.append(f"{here}={v}")
             elif k == "replicas_identical" and v is False:
                 bad.append(here)
+            elif k == "restarts_exhausted" and v:
+                bad.append(f"{here}={v}")
+            elif k in ("restart_in_flight", "failover_in_flight",
+                       "degraded_solo") and v:
+                deg.append(here)
             elif k in _DEGRADED_KEYS:
                 n = v if isinstance(v, (int, float)) else len(v or ())
                 if n:

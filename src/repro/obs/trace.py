@@ -42,6 +42,11 @@ from typing import Any, Dict, List, Optional
 SPAN_NAMES = ("env_unroll", "serde_encode", "transport", "queue_wait",
               "batch_collect", "train_step", "publish")
 
+# gradient-exchange rounds render on their own process row (pid 2):
+# hub_wait (round open -> last contribution in), reduce (mean + encode),
+# broadcast (fan the mean back out to every live spoke)
+EXCHANGE_SPAN_NAMES = ("hub_wait", "reduce", "broadcast")
+
 # same-box monotonic clocks agree to microseconds; a send->receive gap
 # beyond this means a different clock domain (another machine)
 CLOCK_SKEW_S = 5.0
@@ -115,6 +120,30 @@ class TraceRecorder:
             for name, pid, t0, t1 in spans:
                 self._events.append({
                     "name": name, "ph": "X", "pid": pid, "tid": 0,
+                    "ts": t0 * 1e6,
+                    "dur": max(0.0, (t1 - t0) * 1e6),
+                    "args": args,
+                })
+
+    def record_exchange_round(self, round_idx: int, *, enter: float,
+                              gathered: float, reduced: float,
+                              done: float) -> None:
+        """Fold one gradient-exchange round (hub-side CLOCK_MONOTONIC
+        stamps) into hub_wait -> reduce -> broadcast spans on the
+        ``exchange`` row. A failover round shows up as an oversized
+        hub_wait span followed by a gap in the round numbering."""
+        with self._lock:
+            if self.recorded >= self._max:
+                self.dropped += 1
+                return
+            self.recorded += 1
+            self._name_pid(2, "exchange")
+            args = {"round": int(round_idx)}
+            for name, t0, t1 in (("hub_wait", enter, gathered),
+                                 ("reduce", gathered, reduced),
+                                 ("broadcast", reduced, done)):
+                self._events.append({
+                    "name": name, "ph": "X", "pid": 2, "tid": 0,
                     "ts": t0 * 1e6,
                     "dur": max(0.0, (t1 - t0) * 1e6),
                     "args": args,

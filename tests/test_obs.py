@@ -16,7 +16,8 @@ from repro.obs import ObsConfig
 from repro.obs.http import MetricsServer, health, render_prometheus
 from repro.obs.metrics import Counter, Gauge, IntHistogram, Registry
 from repro.obs.sink import JsonlSink, parse_profile_steps
-from repro.obs.trace import SPAN_NAMES, TraceRecorder
+from repro.obs.trace import (EXCHANGE_SPAN_NAMES, SPAN_NAMES,
+                             TraceRecorder)
 
 
 # ---------------------------------------------------------------------------
@@ -123,6 +124,29 @@ def test_health_ok_degraded_unhealthy():
     assert code == 503
     code, body = health({"group": {"replicas_identical": False}})
     assert code == 503
+
+
+def test_health_supervisor_tri_state():
+    # a healthy supervised run: counters present, all quiet
+    code, body = health({"supervisor": {
+        "restarts": 0, "failovers": 0, "restart_in_flight": 0,
+        "failover_in_flight": 0, "restarts_exhausted": []}})
+    assert (code, body["status"]) == (200, "ok")
+    # mid-respawn / mid-failover / solo: degraded, still serving 200
+    for key in ("restart_in_flight", "failover_in_flight"):
+        code, body = health({"supervisor": {key: 1}})
+        assert (code, body["status"]) == (200, "degraded"), key
+        assert any(key in r for r in body["reasons"])
+    code, body = health({"exchange": {"degraded_solo": True}})
+    assert (code, body["status"]) == (200, "degraded")
+    # completed restarts are history, not a live condition
+    code, body = health({"supervisor": {"restarts": 4, "failovers": 1}})
+    assert (code, body["status"]) == (200, "ok")
+    # an exhausted restart budget means a child is down for good: 503
+    code, body = health({"supervisor": {
+        "restarts": 5, "restarts_exhausted": ["actor-3"]}})
+    assert (code, body["status"]) == (503, "unhealthy")
+    assert any("actor-3" in r for r in body["reasons"])
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +279,29 @@ def test_trace_recorder_partial_stamps_and_bound():
     rec.record_item(_Item({"u0": 12.0, "u1": 12.5}), dequeued=12.6,
                     collected=12.7, step0=12.7, step1=12.8,
                     published=12.9)
+    assert rec.recorded == 2 and rec.dropped == 1
+
+
+def test_trace_recorder_exchange_round_spans():
+    rec = TraceRecorder(max_trajectories=2)
+    t = 50.0
+    rec.record_exchange_round(3, enter=t, gathered=t + 0.2,
+                              reduced=t + 0.25, done=t + 0.3)
+    events = rec.chrome_events()
+    spans = [e for e in events if e["ph"] == "X"]
+    # three spans tiling the round, all on the exchange row
+    assert [s["name"] for s in spans] == list(EXCHANGE_SPAN_NAMES)
+    assert all(s["pid"] == 2 for s in spans)
+    assert all(s["args"] == {"round": 3} for s in spans)
+    assert spans[0]["ts"] == pytest.approx(t * 1e6)
+    assert spans[0]["dur"] == pytest.approx(0.2e6)          # hub_wait
+    assert spans[1]["ts"] == pytest.approx((t + 0.2) * 1e6)  # reduce
+    assert spans[2]["dur"] == pytest.approx(0.05e6)         # broadcast
+    rows = [e for e in events if e["ph"] == "M"]
+    assert any(e["args"]["name"] == "exchange" for e in rows)
+    # rounds share the trajectory budget: bounded, drops counted
+    rec.record_exchange_round(4, enter=t, gathered=t, reduced=t, done=t)
+    rec.record_exchange_round(5, enter=t, gathered=t, reduced=t, done=t)
     assert rec.recorded == 2 and rec.dropped == 1
 
 

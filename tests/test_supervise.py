@@ -1,0 +1,665 @@
+"""The self-healing fleet, bottom to top: the supervisor's restart
+ledger (budget window, backoff, seed folding), heartbeat liveness and
+lease reaping on the socket transport, elastic slot growth, the
+ResilientExchange's hub-failover state machine (promote / redial /
+degrade-to-solo), supervised respawn of killed actor children, and the
+group-level chaos acceptance: SIGKILL a spoke learner (respawned,
+replicas bit-identical) and the hub learner (failover, version stream
+uninterrupted), then resume a group run from its fleet checkpoint."""
+import multiprocessing as mp
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed import serde
+from repro.distributed.supervise import (KillSafeEvent, RestartPolicy,
+                                         RestartDecision, Supervisor,
+                                         fold_restart_seed)
+
+
+def _wait_for(pred, timeout=30.0, msg="condition"):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        assert time.monotonic() < deadline, f"timed out waiting: {msg}"
+        time.sleep(0.01)
+
+
+def _assert_no_orphans(t0):
+    deadline = time.monotonic() + 30
+    while mp.active_children() and time.monotonic() < deadline:
+        time.sleep(0.2)
+    assert mp.active_children() == [], (
+        f"orphans after {time.monotonic() - t0:.0f}s")
+
+
+# ---------------------------------------------------------------------------
+# seed folding + restart policy (pure stdlib)
+
+
+def test_fold_restart_seed_identity_and_determinism():
+    # epoch 0 is the first spawn: bit-compatible with unsupervised runs
+    assert fold_restart_seed(1234, 0) == 1234
+    assert fold_restart_seed(0, 0) == 0
+    # deterministic, and distinct across epochs (no replayed RNG stream)
+    seeds = [fold_restart_seed(1234, e) for e in range(6)]
+    assert seeds == [fold_restart_seed(1234, e) for e in range(6)]
+    assert len(set(seeds)) == 6
+    # stays in int32 range for every epoch (jax PRNGKey compatibility)
+    for e in range(100):
+        assert 0 <= fold_restart_seed(2 ** 31 - 2, e) < 2 ** 31 - 1
+
+
+def test_restart_policy_backoff_grows_caps_and_jitters():
+    pol = RestartPolicy(backoff_base_s=0.1, backoff_cap_s=0.8,
+                        jitter=0.5)
+    d = [pol.delay_s("actor-0", e) for e in range(1, 8)]
+    # base * 2**(e-1), widened by at most +50%
+    for i, (lo) in enumerate([0.1, 0.2, 0.4, 0.8]):
+        assert lo <= d[i] <= lo * 1.5, (i, d[i])
+    # capped: epochs past the cap stop growing
+    assert d[5] <= 0.8 * 1.5 and d[6] <= 0.8 * 1.5
+    # deterministic per (child, epoch); different children out of phase
+    assert pol.delay_s("actor-0", 1) == d[0]
+    assert pol.delay_s("actor-1", 1) != d[0]
+
+
+def test_supervisor_budget_window_and_exhaustion():
+    sup = Supervisor(RestartPolicy(max_restarts=2, window_s=60.0,
+                                   backoff_base_s=0.0, jitter=0.0))
+    for expected_epoch in (1, 2):
+        d = sup.record_death("actor-0")
+        assert isinstance(d, RestartDecision)
+        assert d.epoch == expected_epoch
+        sup.note_restarted("actor-0")
+    # third death inside the window: budget exhausted => None (caller
+    # falls back to raising) and the child is named in the ledger
+    assert sup.record_death("actor-0") is None
+    assert sup.exhausted == ["actor-0"]
+    snap = sup.snapshot()
+    assert snap["restarts"] == 2
+    assert snap["restarts_exhausted"] == ["actor-0"]
+    # other children are unaffected by actor-0's exhaustion
+    assert sup.record_death("actor-1") is not None
+
+
+def test_supervisor_pending_dedup_and_epoch_ledger():
+    sup = Supervisor(RestartPolicy(backoff_base_s=0.0, jitter=0.0))
+    d1 = sup.record_death("proc-3")
+    # the same death reported twice (sentinel poll races) is one grant
+    assert sup.record_death("proc-3") is d1
+    assert sup.snapshot()["restart_in_flight"] == 1
+    sup.note_restarted("proc-3")
+    snap = sup.snapshot()
+    assert snap["restart_in_flight"] == 0
+    assert snap["epochs"] == {"proc-3": 1}
+    assert sup.child_epoch("proc-3") == 1
+    assert sup.restart_epochs() == {"proc-3": 1}
+    assert sup.child_epoch("never-died") == 0
+
+
+def test_supervisor_failover_and_lease_ledger():
+    sup = Supervisor()
+    sup.record_failover()
+    snap = sup.snapshot()
+    # in flight: counted as pending, not as a completed failover
+    assert snap["failover_in_flight"] == 1 and snap["failovers"] == 0
+    sup.note_failover_done()
+    snap = sup.snapshot()
+    assert snap["failover_in_flight"] == 0 and snap["failovers"] == 1
+    sup.note_failover_done()                    # no double counting
+    assert sup.snapshot()["failovers"] == 1
+    sup.record_lease_reap("slot-2")
+    sup.record_lease_reap("slot-2")
+    assert sup.snapshot()["lease_reaps"] == 2
+
+
+def _spin_on_stop_flag(ev, ack):
+    ack.set()
+    while not ev.is_set():      # hammer is_set: the poisoning window
+        pass
+    os._exit(0)
+
+
+@pytest.mark.timeout_s(120)
+def test_kill_safe_event_survives_sigkilled_sharer():
+    # mp.Event would deadlock here: a child SIGKILLed inside is_set()
+    # dies holding the event's internal lock, and the parent's own
+    # stop.set() at teardown blocks forever (the bug the chaos CLI
+    # run found). KillSafeEvent has nothing a corpse can hold.
+    ctx = mp.get_context("spawn")
+    ev, ack = KillSafeEvent(ctx), KillSafeEvent(ctx)
+    p = ctx.Process(target=_spin_on_stop_flag, args=(ev, ack))
+    p.start()
+    try:
+        assert ack.wait(60), "child never came up"
+        os.kill(p.pid, signal.SIGKILL)
+        p.join(10)
+        t0 = time.monotonic()
+        ev.set()                            # must not block
+        assert time.monotonic() - t0 < 1.0
+        assert ev.is_set() and ev.wait(0.1)
+        ev.clear()
+        assert not ev.wait(0.15)            # timeout path returns False
+        ev.set()
+        # a pre-set flag releases a fresh sharer immediately
+        p2 = ctx.Process(target=_spin_on_stop_flag,
+                         args=(ev, KillSafeEvent(ctx)))
+        p2.start()
+        p2.join(60)
+        assert p2.exitcode == 0
+    finally:
+        for proc in (p, locals().get("p2")):
+            if proc is not None and proc.is_alive():
+                proc.terminate()
+                proc.join(5)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat liveness on the socket transport (no jax)
+
+
+@pytest.mark.timeout_s(120)
+def test_silent_actor_lease_is_reaped_and_counted():
+    from repro.distributed.socket_transport import (SocketActorClient,
+                                                    SocketTransport)
+    sup = Supervisor()
+    t = SocketTransport(capacity=4, policy="block", max_actors=1,
+                        heartbeat_timeout_s=0.6)
+    t.supervisor = sup
+    t.config_extra = lambda aid: {}
+    stop = threading.Event()
+    client = None
+    try:
+        # a client whose heartbeat never fires within the test window:
+        # connected, then silent — exactly what a wedged/dead actor
+        # looks like from the learner's side
+        client = SocketActorClient(t.address, stop_event=stop,
+                                   backoff=(0.01, 0.1),
+                                   heartbeat_s=3600.0)
+        cfg = client.connect()
+        assert cfg is not None
+        # the handshake asks for beacons at a third of the deadline
+        assert cfg["heartbeat_s"] == pytest.approx(0.2)
+        _wait_for(lambda: t.snapshot()["lease_reaps"] >= 1,
+                  msg="silent lease reaped")
+        assert sup.snapshot()["lease_reaps"] >= 1
+        # take the zombie fully down (a reaped client would otherwise
+        # redial and reclaim its own slot) ...
+        stop.set()
+        client.close()
+        client = None
+        _wait_for(lambda: not t.snapshot()["per_actor"][0]["connected"],
+                  msg="zombie disconnected")
+        # ... then a relaunched actor (fresh nonce) reclaims the dead
+        # slot instead of being refused — max_actors=1 leaves no other
+        relaunch = SocketActorClient(t.address, backoff=(0.01, 0.1),
+                                     heartbeat_s=3600.0)
+        cfg2 = relaunch.connect()
+        assert cfg2 is not None and cfg2["actor_id"] == 0
+        assert not relaunch.refused
+        relaunch.close()
+    finally:
+        if client is not None:
+            client.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_heartbeats_keep_a_quiet_actor_alive():
+    from repro.distributed.socket_transport import (SocketActorClient,
+                                                    SocketTransport)
+    t = SocketTransport(capacity=4, policy="block", max_actors=2,
+                        heartbeat_timeout_s=0.6)
+    t.config_extra = lambda aid: {}
+    client = None
+    try:
+        # default heartbeat_s: the CONFIG's cadence (timeout / 3)
+        client = SocketActorClient(t.address, backoff=(0.01, 0.1))
+        assert client.connect() is not None
+        # quiet for several reap deadlines: beacons alone keep the lease
+        _wait_for(lambda: t.snapshot()["heartbeats"] >= 3,
+                  msg="heartbeats arriving")
+        assert t.snapshot()["lease_reaps"] == 0
+    finally:
+        if client is not None:
+            client.close()
+        t.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_elastic_membership_grows_slots_past_the_ceiling():
+    from repro.distributed.socket_transport import (SocketActorClient,
+                                                    SocketTransport)
+    grown = []
+    t = SocketTransport(capacity=4, policy="block", max_actors=1,
+                        elastic=True)
+    t.on_slot_grown = grown.append
+    t.config_extra = lambda aid: {}
+    clients = []
+    try:
+        a = SocketActorClient(t.address, backoff=(0.01, 0.1))
+        assert a.connect() is not None and a.actor_id == 0
+        clients.append(a)
+        # every slot has a LIVE actor: elastic grows instead of refusing
+        b = SocketActorClient(t.address, backoff=(0.01, 0.1))
+        cfg = b.connect()
+        clients.append(b)
+        assert cfg is not None and cfg["actor_id"] == 1
+        assert not b.refused
+        assert grown == [1]
+        snap = t.snapshot()
+        assert snap["elastic"] is True
+        assert len(snap["per_actor"]) == 2
+    finally:
+        for c in clients:
+            c.close()
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# ResilientExchange: the hub-failover state machine (numpy + TCP only)
+
+
+def _leaves(scale):
+    return [np.full((3,), scale, np.float32),
+            np.full((2, 2), 10.0 * scale, np.float32)]
+
+
+@pytest.mark.timeout_s(120)
+def test_resilient_exchange_promotes_survivor_to_hub():
+    from repro.distributed import GradHub, ResilientExchange, \
+        SpokeExchange
+    hub = GradHub(2, stale_after_s=30.0)
+    spoke = SpokeExchange(hub.address, 1, 2, dial_timeout_s=20.0)
+    promoted = []
+    rex = ResilientExchange(spoke, 1, 2, failover_deadline_s=20.0,
+                            on_promoted=promoted.append)
+    try:
+        hub.close()                             # the hub "dies"
+        # the parent's verdict arrives through the control plane: this
+        # survivor is the new hub, learner 0 is dead
+        rex.begin_failover(1, dead_id=0)
+        out = rex.allreduce(_leaves(2.0), round_idx=0)
+        assert out is not None
+        mean, version = out
+        # a group of 2 with the dead hub pre-marked reduces alone, and
+        # the version stream continues exactly where it was
+        assert version == 1
+        np.testing.assert_array_equal(mean[0], _leaves(2.0)[0])
+        assert promoted and len(promoted[0]) == 2   # (host, port) shipped
+        snap = rex.snapshot()
+        assert snap["resilient"] is True
+        assert snap["failovers"] == 1
+        assert snap["hub_id"] == 1
+        assert not snap["degraded_solo"]
+    finally:
+        rex.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_resilient_exchange_redials_promoted_hub_and_reduces():
+    """3-learner failover, both sides: learner 1 is promoted, learner 2
+    redials the relayed address, and the in-flight round completes as a
+    2-way mean on the new hub — round numbering never skips."""
+    from repro.distributed import GradHub, ResilientExchange, \
+        SpokeExchange
+    dead_hub = GradHub(3, stale_after_s=30.0)
+    s1 = SpokeExchange(dead_hub.address, 1, 3, dial_timeout_s=20.0)
+    s2 = SpokeExchange(dead_hub.address, 2, 3, dial_timeout_s=20.0)
+    promoted = []
+    r1 = ResilientExchange(s1, 1, 3, failover_deadline_s=20.0,
+                           on_promoted=promoted.append)
+    r2 = ResilientExchange(s2, 2, 3, failover_deadline_s=20.0)
+    try:
+        dead_hub.close()
+        results = {}
+
+        def run(key, rex, scale):
+            results[key] = rex.allreduce(_leaves(scale), round_idx=0)
+
+        t1 = threading.Thread(target=run, args=(1, r1, 1.0), daemon=True)
+        t2 = threading.Thread(target=run, args=(2, r2, 3.0), daemon=True)
+        t1.start(), t2.start()
+        # the parent names learner 1 the new hub; once it reports its
+        # address, the parent relays it to learner 2
+        r1.begin_failover(1, dead_id=0)
+        r2.begin_failover(1, dead_id=0)
+        _wait_for(lambda: bool(promoted), msg="promoted hub address")
+        r2.set_hub(promoted[0])
+        t1.join(timeout=30), t2.join(timeout=30)
+        assert not t1.is_alive() and not t2.is_alive()
+        for key in (1, 2):
+            assert results[key] is not None, key
+            mean, version = results[key]
+            assert version == 1
+            # mean of scales 1.0 and 3.0 = 2.0 on BOTH replicas
+            np.testing.assert_allclose(mean[0], np.full((3,), 2.0))
+        assert r1.snapshot()["failovers"] == 1
+        assert r2.snapshot()["failovers"] == 1
+    finally:
+        r1.close()
+        r2.close()
+
+
+@pytest.mark.timeout_s(120)
+def test_resilient_exchange_degrades_to_solo_past_deadline():
+    from repro.distributed import GradHub, ResilientExchange, \
+        SpokeExchange
+    hub = GradHub(2, stale_after_s=30.0)
+    spoke = SpokeExchange(hub.address, 1, 2, dial_timeout_s=20.0)
+    rex = ResilientExchange(spoke, 1, 2, failover_deadline_s=0.3)
+    try:
+        hub.close()
+        # no verdict ever arrives: past the deadline the survivor keeps
+        # training alone — identity mean, version stream continuity,
+        # and the loud flag /healthz keys off
+        t0 = time.monotonic()
+        out = rex.allreduce(_leaves(5.0), round_idx=7)
+        assert time.monotonic() - t0 < 20.0
+        assert out is not None
+        mean, version = out
+        assert version == 8
+        np.testing.assert_array_equal(mean[0], _leaves(5.0)[0])
+        out2 = rex.allreduce(_leaves(6.0), round_idx=8)
+        assert out2 is not None and out2[1] == 9
+        snap = rex.snapshot()
+        assert snap["degraded_solo"] is True
+        assert snap["solo_rounds"] == 2
+    finally:
+        rex.close()
+
+
+# ---------------------------------------------------------------------------
+# supervised respawn of actor workers (jax from here on)
+
+
+def _icfg(**kw):
+    from repro.configs.base import ImpalaConfig
+    base = dict(num_actions=3, unroll_length=8, learning_rate=1e-3,
+                entropy_cost=0.003, rmsprop_eps=0.01)
+    base.update(kw)
+    return ImpalaConfig(**base)
+
+
+@pytest.mark.timeout_s(300)
+def test_actor_pool_respawns_dead_thread_until_budget_exhausted():
+    import jax
+
+    from repro.core.driver import small_arch
+    from repro.data.envs import make_bandit
+    from repro.distributed import (ActorPool, ParameterStore,
+                                   make_transport)
+    from repro.models import backbone as bb
+    from repro.models import common
+
+    env = make_bandit()
+    arch = small_arch(env)
+    icfg = _icfg()
+    specs = bb.backbone_specs(arch, env.num_actions)
+    params = common.init_params(specs, jax.random.key(0))
+    store = ParameterStore(jax.tree.map(np.asarray, params))
+    queue = make_transport("inproc", 4, "block")
+    pool = ActorPool(env, arch, icfg, num_envs=2, num_actors=1,
+                     store=store, queue=queue, seed=0)
+    sup = Supervisor(RestartPolicy(max_restarts=2, backoff_base_s=0.0,
+                                   jitter=0.0))
+    pool.attach_supervisor(sup)
+    try:
+        # a worker thread dies (as if its unroll raised past the loop):
+        # supervised, that parks the death instead of failing the run
+        pool._note_death(0, RuntimeError("chaos: worker shot"))
+        assert pool.errors == [] and not queue.closed
+        pool.raise_errors()         # heals: respawn granted and launched
+        assert sup.snapshot()["restarts"] == 1
+        assert sup.child_epoch("actor-0") == 1
+        # ... its replacement produces real trajectories (epoch-folded
+        # seed, same global slot)
+        _wait_for(lambda: queue.get(timeout=0.2) is not None,
+                  timeout=120.0, msg="respawned actor producing")
+        # budget is 2 per window: the third death exhausts it and
+        # raise_errors fails exactly like the unsupervised pool
+        pool._note_death(0, RuntimeError("chaos: again"))
+        pool.raise_errors()
+        assert sup.snapshot()["restarts"] == 2
+        pool._note_death(0, RuntimeError("chaos: third"))
+        with pytest.raises(RuntimeError, match="actor thread died"):
+            pool.raise_errors()
+        assert sup.snapshot()["restarts_exhausted"] == ["actor-0"]
+    finally:
+        pool.stop()
+        pool.join(timeout=30.0)
+        queue.close()
+
+
+def _kill_one_child_then_stall(state, step, snapshot_fn, kill_at,
+                               steps):
+    """on_update hook for the chaos runs: SIGKILL one actor child at
+    ``kill_at``, then pace the remaining updates so the learner loop
+    (which runs the healer between updates) outlives the backoff."""
+    if step == kill_at and not state["killed"]:
+        victims = [p for p in mp.active_children() if p.pid]
+        assert victims, "no actor children to kill"
+        os.kill(victims[0].pid, signal.SIGKILL)
+        state["killed"] = victims[0].pid
+    elif state["killed"] and step < steps:
+        time.sleep(0.05)
+
+
+@pytest.mark.timeout_s(300)
+def test_process_actor_child_sigkilled_is_respawned():
+    from repro.distributed import run_async_training
+    t0 = time.monotonic()
+    steps = 20
+    state = {"killed": None}
+    tracker, metrics, tel = run_async_training(
+        "bandit", _icfg(), num_envs=4, steps=steps, num_actors=2,
+        actor_backend="process", transport="shm", queue_capacity=4,
+        queue_policy="block", max_batch_trajs=2, seed=0, supervise=True,
+        on_update=lambda step, params, m, snap:
+            _kill_one_child_then_stall(state, step, snap, 5, steps))
+    assert state["killed"] is not None
+    assert tel["learner_updates"] == steps
+    assert np.isfinite(float(metrics["loss/total"]))
+    # the death was absorbed: counted, respawned, run completed
+    assert tel["supervisor"]["restarts"] >= 1
+    assert tel["supervisor"]["restarts_exhausted"] == []
+    _assert_no_orphans(t0)
+
+
+@pytest.mark.timeout_s(300)
+def test_remote_socket_actor_sigkilled_is_respawned():
+    from repro.distributed import run_async_training
+    t0 = time.monotonic()
+    steps = 20
+    state = {"killed": None}
+    tracker, metrics, tel = run_async_training(
+        "bandit", _icfg(), num_envs=4, steps=steps, num_actors=2,
+        actor_backend="remote", transport="socket", queue_capacity=4,
+        queue_policy="block", max_batch_trajs=2, seed=0, supervise=True,
+        heartbeat_timeout_s=2.0,
+        on_update=lambda step, params, m, snap:
+            _kill_one_child_then_stall(state, step, snap, 5, steps))
+    assert state["killed"] is not None
+    assert tel["learner_updates"] == steps
+    assert np.isfinite(float(metrics["loss/total"]))
+    assert tel["supervisor"]["restarts"] >= 1
+    assert tel["queue"]["decode_errors"] == 0
+    _assert_no_orphans(t0)
+
+
+# ---------------------------------------------------------------------------
+# group chaos: SIGKILL learner workers mid-run
+
+
+def _kill_worker(name):
+    """SIGKILL the learner worker process spawned under ``name``."""
+    for p in mp.active_children():
+        if p.name == name and p.pid:
+            os.kill(p.pid, signal.SIGKILL)
+            return p.pid
+    return None
+
+
+@pytest.mark.timeout_s(420)
+def test_spoke_learner_sigkilled_is_respawned_with_identical_replica():
+    from repro.distributed import run_group_training
+    t0 = time.monotonic()
+    steps = 8
+    state = {"killed": None}
+
+    def on_progress(k, snap):
+        # the spoke is mid-run (past compile, really training): shoot it
+        if k == 1 and snap["learner_updates"] >= 2 and \
+                not state["killed"]:
+            state["killed"] = _kill_worker("learner-1")
+
+    tracker, metrics, tel = run_group_training(
+        "bandit", _icfg(), 4, steps, num_learners=2, num_actors=2,
+        actor_backend="thread", queue_capacity=4, queue_policy="block",
+        max_batch_trajs=2, seed=0, supervise=True, telemetry_every=1,
+        on_progress=on_progress)
+    assert state["killed"], "spoke was never killed"
+    sup = tel["supervisor"]
+    assert sup["restarts"] == 1
+    assert sup["epochs"] == {"learner-1": 1}
+    assert sup["failovers"] == 0
+    # the reborn spoke (same seed, hub mean-replay catch-up) converged
+    # to a BIT-identical replica, and the version stream never forked
+    assert tel["group"]["replicas_identical"], tel["group"]
+    assert tel["group"]["param_versions"] == [steps, steps]
+    assert tel["param_version"] == steps
+    assert "abandoned_learners" not in tel["group"]
+    _assert_no_orphans(t0)
+
+
+@pytest.mark.timeout_s(420)
+def test_hub_learner_sigkilled_fails_over_to_survivor():
+    from repro.distributed import run_group_training
+    t0 = time.monotonic()
+    steps = 8
+    state = {"killed": None}
+
+    def on_progress(k, snap):
+        # the survivor is mid-run before the hub dies: failover, not
+        # a startup race
+        if k == 1 and snap["learner_updates"] >= 2 and \
+                not state["killed"]:
+            state["killed"] = _kill_worker("learner-0")
+
+    tracker, metrics, tel = run_group_training(
+        "bandit", _icfg(), 4, steps, num_learners=2, num_actors=2,
+        actor_backend="thread", queue_capacity=4, queue_policy="block",
+        max_batch_trajs=2, seed=0, supervise=True, telemetry_every=1,
+        on_progress=on_progress)
+    assert state["killed"], "hub was never killed"
+    sup = tel["supervisor"]
+    assert sup["failovers"] == 1
+    assert sup["failover_in_flight"] == 0
+    assert sup["restarts"] == 0             # the hub is NOT respawned
+    # graceful degradation: the dead hub's shard is abandoned, the
+    # promoted survivor finishes the run and the version stream holds
+    assert tel["group"]["abandoned_learners"] == [0]
+    assert tel["group"]["publisher"] == 1
+    assert tel["param_version"] == steps
+    ex = tel["learners"]["learner_1"]["exchange"]
+    assert ex["resilient"] is True and ex["failovers"] == 1
+    assert ex["hub_id"] == 1
+    assert np.isfinite(float(metrics["loss/total"]))
+    _assert_no_orphans(t0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint-resume: fleet-v1 full state, single and group
+
+
+@pytest.mark.timeout_s(420)
+def test_single_run_resume_restores_optimizer_state_and_versions(
+        tmp_path):
+    """Satellite: resume through the Learner async path carries params
+    AND optimizer state, continues the monotonic version stream, and
+    reports exactly the telemetry key set a fresh run reports."""
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.distributed import run_async_training
+
+    d = str(tmp_path / "ckpt")
+    tracker, metrics, tel_fresh = run_async_training(
+        "bandit", _icfg(), num_envs=4, steps=6, num_actors=2,
+        actor_backend="thread", queue_capacity=4, queue_policy="block",
+        max_batch_trajs=2, seed=0, ckpt_dir=d, ckpt_every=3)
+    # the runtime saved combined fleet-v1 state (params + opt + version)
+    man = ckpt.read_manifest(d)
+    assert man["extra"]["format"] == "fleet-v1"
+    assert man["extra"]["version"] == 6
+    tree, step, extra = ckpt.load_with_extra(d)
+    assert step == 6 and set(tree) == {"params", "opt"}
+    # rmsprop accumulators after 6 updates are real state, not zeros
+    opt_leaves = []
+
+    def _collect(node):
+        if isinstance(node, dict):
+            for v in node.values():
+                _collect(v)
+        else:
+            opt_leaves.append(np.asarray(node))
+
+    _collect(tree["opt"])
+    assert any(np.any(leaf != 0) for leaf in opt_leaves
+               if leaf.dtype.kind == "f")
+
+    seen = []
+    tracker2, metrics2, tel_resumed = run_async_training(
+        "bandit", _icfg(), num_envs=4, steps=10, num_actors=2,
+        actor_backend="thread", queue_capacity=4, queue_policy="block",
+        max_batch_trajs=2, seed=0,
+        initial_params=tree["params"], initial_opt_state=tree["opt"],
+        start_step=6,
+        on_update=lambda step, p, m, snap: seen.append(step))
+    # one monotonic version stream across the restart: 7..10, no reset
+    assert seen == [7, 8, 9, 10]
+    assert tel_resumed["param_version"] == 10
+    assert tel_resumed["learner_updates"] == 10
+    # the resumed learner is the same telemetry surface as a fresh one
+    assert sorted(tel_resumed.keys()) == sorted(tel_fresh.keys())
+
+
+@pytest.mark.timeout_s(600)
+def test_group_checkpoint_resume_continues_version_stream(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.distributed import run_group_training
+
+    d = str(tmp_path / "fleet")
+    run_group_training(
+        "bandit", _icfg(), 4, 4, num_learners=2, num_actors=2,
+        actor_backend="thread", queue_capacity=4, queue_policy="block",
+        max_batch_trajs=2, seed=0, supervise=True, ckpt_dir=d,
+        ckpt_every=2)
+    man = ckpt.read_manifest(d)
+    assert man["extra"]["format"] == "fleet-v1"
+    assert man["extra"]["version"] == 4
+
+    tracker, metrics, tel = run_group_training(
+        "bandit", _icfg(), 4, 8, num_learners=2, num_actors=2,
+        actor_backend="thread", queue_capacity=4, queue_policy="block",
+        max_batch_trajs=2, seed=0, supervise=True, ckpt_dir=d,
+        ckpt_every=2, resume_from=d)
+    # the resumed group continued the SAME monotonic version stream:
+    # rounds 4..7, versions 5..8, on every replica
+    assert tel["param_version"] == 8
+    assert tel["group"]["param_versions"] == [8, 8]
+    assert tel["group"]["replicas_identical"], tel["group"]
+    # and kept checkpointing forward from where it resumed
+    man2 = ckpt.read_manifest(d)
+    assert man2["extra"]["version"] == 8
+    # a params-only tree is refused distinctly (no optimizer state)
+    solo = str(tmp_path / "solo")
+    ckpt.save(solo, 3, {"w": np.zeros(2, np.float32)})
+    with pytest.raises(ValueError, match="fleet-v1"):
+        run_group_training(
+            "bandit", _icfg(), 4, 4, num_learners=2, num_actors=2,
+            actor_backend="thread", queue_capacity=4,
+            queue_policy="block", max_batch_trajs=2, seed=0,
+            resume_from=solo)
