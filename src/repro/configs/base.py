@@ -120,6 +120,9 @@ class ImpalaConfig:
     # replay (paper 5.2.2)
     replay_capacity: int = 10_000
     replay_fraction: float = 0.0         # 0.5 in the replay experiments
+    replay_reuse: int = 2                # K: max total consumptions/traj
+    replay_priority: str = "pertd"       # pertd | uniform (Ape-X prop.)
+    replay_target_period: int = 16       # updates between target syncs
     # learner batch (trajectories per update)
     batch_size: int = 32
     # simulated policy lag (actor params k updates behind learner)

@@ -22,6 +22,23 @@ from repro.configs.base import ImpalaConfig
 from repro.core import vtrace as vtrace_lib
 
 
+def replay_baseline_mix(values, target_values, replay_mask):
+    """IMPACT-style mixed correction baseline for a batch holding both
+    online and replayed trajectories: rows flagged by ``replay_mask``
+    (B,) take the *target network's* values as the V-trace recursion's
+    V(x_s) — a periodic copy of the learner params, so K replays of one
+    trajectory chase a fixed target instead of their own moving output —
+    while online rows keep the learner's own values. The result feeds
+    ``compute_correction`` as its ``values`` argument; it is
+    stop-gradient because correction outputs are targets either way
+    (the baseline loss still trains the *online* values toward vs)."""
+    m = replay_mask.astype(jnp.float32)
+    m = m.reshape(m.shape + (1,) * (values.ndim - 1))
+    mixed = (m * target_values.astype(jnp.float32) +
+             (1.0 - m) * values.astype(jnp.float32))
+    return jax.lax.stop_gradient(mixed)
+
+
 def nstep_returns(discounts, rewards, values, bootstrap_value):
     """On-policy n-step Bellman targets (Eq. 2): reverse scan of
     G_s = r_s + gamma_s G_{s+1}, G_n = bootstrap."""

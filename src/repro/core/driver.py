@@ -40,7 +40,9 @@ def run_training(env_name: str, icfg: ImpalaConfig, num_envs: int,
     opt_state = opt.init(params)
     carry = init_fn(jax.random.key(seed + 1))
     lag = LagController(icfg.policy_lag, params)
-    buf = ReplayBuffer(icfg.replay_capacity, np.random.default_rng(seed))
+    buf = ReplayBuffer(icfg.replay_capacity, seed=seed,
+                       reuse_limit=icfg.replay_reuse,
+                       priority=icfg.replay_priority)
     tracker = EpisodeTracker(num_envs)
     metrics: Dict = {}
     for step in range(steps):
@@ -51,7 +53,8 @@ def run_training(env_name: str, icfg: ImpalaConfig, num_envs: int,
         if icfg.replay_fraction > 0:
             buf.add_batch(traj)
             rep = buf.sample(num_envs)
-            batch = mix_batches(traj, rep, icfg.replay_fraction)
+            batch = mix_batches(traj, rep, icfg.replay_fraction,
+                                buffer=buf)
         params, opt_state, metrics = train_step(params, opt_state,
                                                 jnp.int32(step), batch)
         lag.on_update(params)

@@ -124,6 +124,117 @@ def build_train_step(arch_cfg: ArchConfig, cfg: ImpalaConfig,
     return train_step, optimizer
 
 
+def build_replay_loss_fn(arch_cfg: ArchConfig, cfg: ImpalaConfig,
+                         num_actions: int, vtrace_impl: str = "auto",
+                         aux_coef: float = 0.01):
+    """Replay-aware loss: ``loss_fn(params, target_params, batch)``.
+
+    ``batch['replay_mask']`` (B,) flags replayed rows. The IMPACT
+    recipe: replayed rows take the *target network's* values as the
+    V-trace correction baseline (``corrections.replay_baseline_mix``),
+    so K repeated consumptions chase a fixed target; online rows are
+    the exact standard loss. The per-trajectory |pg advantage| metric
+    (``vtrace/traj_adv_mag``) doubles as the replay priority signal.
+    """
+    from repro.core import corrections
+
+    def loss_fn(params, target_params, batch):
+        logits, values, aux = forward_trajectory(params, batch, arch_cfg,
+                                                 num_actions)
+        _, tvalues, _ = forward_trajectory(target_params, batch, arch_cfg,
+                                           num_actions)
+        mask = batch["replay_mask"]
+        corr_values = corrections.replay_baseline_mix(
+            values[:, :-1], tvalues[:, :-1], mask)
+        corr_bootstrap = corrections.replay_baseline_mix(
+            values[:, -1], tvalues[:, -1], mask)
+        loss_batch = {
+            "actions": batch["actions"],
+            "rewards": batch["rewards"],
+            "discounts": batch["discounts"],
+            "behaviour_logprob": batch["behaviour_logprob"],
+            "bootstrap_value": values[:, -1],
+        }
+        total, metrics = losses_lib.impala_loss(
+            cfg, logits[:, :-1], values[:, :-1], loss_batch,
+            impl=vtrace_impl, corr_values=corr_values,
+            corr_bootstrap=corr_bootstrap, per_traj=True)
+        if arch_cfg.moe is not None:
+            total = total + aux_coef * aux * (
+                batch["actions"].shape[0] * batch["actions"].shape[1])
+            metrics["loss/moe_aux"] = aux
+        return total, metrics
+
+    return loss_fn
+
+
+def build_replay_train_step(arch_cfg: ArchConfig, cfg: ImpalaConfig,
+                            num_actions: int,
+                            optimizer: opt_lib.Optimizer = None,
+                            vtrace_impl: str = "auto",
+                            ) -> Callable[..., Tuple[PyTree, PyTree, Dict]]:
+    """``train_step(params, target_params, opt_state, step, batch)`` —
+    the fused update for the replay path. Gradients flow only through
+    ``params`` (argnum 0); ``target_params`` is a read-only periodic
+    snapshot, so callers jit with ``donate_argnums=(0, 2)`` and keep
+    the target buffer alive across steps."""
+    if optimizer is None:
+        optimizer = opt_lib.rmsprop(decay=cfg.rmsprop_decay,
+                                    eps=cfg.rmsprop_eps,
+                                    momentum=cfg.rmsprop_momentum)
+    lr_fn = opt_lib.linear_schedule(cfg.learning_rate, 0.0,
+                                    cfg.lr_anneal_steps)
+    loss_fn = build_replay_loss_fn(arch_cfg, cfg, num_actions, vtrace_impl)
+
+    def train_step(params, target_params, opt_state, step, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, target_params, batch)
+        grads, grad_norm = opt_lib.clip_by_global_norm(
+            grads, cfg.grad_clip_norm)
+        lr = lr_fn(step)
+        updates, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = opt_lib.apply_updates(params, updates)
+        metrics["opt/grad_norm"] = grad_norm
+        metrics["opt/lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step, optimizer
+
+
+def build_replay_grad_apply_steps(arch_cfg: ArchConfig, cfg: ImpalaConfig,
+                                  num_actions: int,
+                                  optimizer: opt_lib.Optimizer = None,
+                                  vtrace_impl: str = "auto"):
+    """Replay-aware split of ``build_grad_apply_steps``:
+    ``grad_step(params, target_params, batch)`` plus the unchanged
+    ``apply_step`` (clipping on the exchanged mean, identical update
+    math so group replicas stay digest-identical)."""
+    if optimizer is None:
+        optimizer = opt_lib.rmsprop(decay=cfg.rmsprop_decay,
+                                    eps=cfg.rmsprop_eps,
+                                    momentum=cfg.rmsprop_momentum)
+    lr_fn = opt_lib.linear_schedule(cfg.learning_rate, 0.0,
+                                    cfg.lr_anneal_steps)
+    loss_fn = build_replay_loss_fn(arch_cfg, cfg, num_actions, vtrace_impl)
+
+    def grad_step(params, target_params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, target_params, batch)
+        return grads, metrics
+
+    def apply_step(params, opt_state, step, grads):
+        grads, grad_norm = opt_lib.clip_by_global_norm(
+            grads, cfg.grad_clip_norm)
+        lr = lr_fn(step)
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              lr)
+        params = opt_lib.apply_updates(params, updates)
+        return params, opt_state, {"opt/grad_norm": grad_norm,
+                                   "opt/lr": lr}
+
+    return grad_step, apply_step, optimizer
+
+
 def build_grad_apply_steps(arch_cfg: ArchConfig, cfg: ImpalaConfig,
                            num_actions: int,
                            optimizer: opt_lib.Optimizer = None,

@@ -66,7 +66,9 @@ def entropy_loss(logits):
 
 
 def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
-                impl: str = "auto") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+                impl: str = "auto", corr_values=None,
+                corr_bootstrap=None, per_traj: bool = False
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """The full IMPALA learner loss on a batch of trajectories.
 
     batch: actions (B,T) int32, rewards (B,T) f32, discounts (B,T) f32,
@@ -75,20 +77,34 @@ def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
     values cover steps 0..T-1 and the *bootstrap* V(x_T) must be provided
     as batch['bootstrap_value'] (B,), produced by evaluating the learner
     network on x_T (we evaluate on T+1 steps and split outside).
+
+    ``corr_values``/``corr_bootstrap`` (replay path) substitute the
+    V(x_s) the V-trace recursion reads — e.g. ``corrections.
+    replay_baseline_mix``'s target-network baseline on replayed rows —
+    while the baseline loss keeps training the online ``values`` toward
+    the resulting vs. The fused kernel assumes the correction baseline
+    IS the trained values, so this path pins the scan/pallas impl.
+    ``per_traj=True`` adds ``vtrace/traj_adv_mag`` (B,), the
+    per-trajectory |pg advantage| mean — the replay priority signal.
     """
     impl = resolve_vtrace_impl(impl)
     rewards = reward_clip(batch["rewards"], cfg.reward_clip)
-    if impl == "fused":
+    if impl == "fused" and corr_values is None and not per_traj:
         if (cfg.correction == "vtrace" and
                 getattr(cfg, "pg_q_estimate", "vtrace") != "baseline_v"):
             return _impala_loss_fused(cfg, target_logits, values, batch,
                                       rewards)
-        # ablation variants keep their dedicated math; drop to the
-        # plain V-trace kernel for whatever scan they do use
+    if impl == "fused":
+        # ablation variants (and the replay baseline/per-traj paths)
+        # keep their dedicated math; drop to the plain V-trace kernel
+        # for whatever scan they do use
         impl = "pallas" if jax.default_backend() == "tpu" else "scan"
     vs, pg_adv = corrections.compute_correction(
         cfg, batch["behaviour_logprob"], target_logits, batch["actions"],
-        batch["discounts"], rewards, values, batch["bootstrap_value"],
+        batch["discounts"], rewards,
+        values if corr_values is None else corr_values,
+        (batch["bootstrap_value"] if corr_bootstrap is None
+         else corr_bootstrap),
         impl=impl)
     eps = cfg.eps_correction if cfg.correction == "eps" else 0.0
     pg = policy_gradient_loss(target_logits, batch["actions"], pg_adv, eps)
@@ -103,6 +119,8 @@ def impala_loss(cfg: ImpalaConfig, target_logits, values, batch: Dict,
         "vtrace/mean_vs": jnp.mean(vs),
         "vtrace/mean_pg_adv": jnp.mean(pg_adv),
     }
+    if per_traj:
+        metrics["vtrace/traj_adv_mag"] = jnp.mean(jnp.abs(pg_adv), axis=1)
     return total, metrics
 
 

@@ -873,6 +873,7 @@ def merge_telemetry(per_learner: Dict[int, Dict[str, Any]], *,
         actors["per_learner_trajectories"][f"learner_{k}"] = \
             a.get("trajectories", 0)
     n_lags = sum(lag_hist.values())
+    replay = _merge_replay(per_learner)
     out = {
         "group": {
             "num_learners": len(per_learner),
@@ -898,8 +899,53 @@ def merge_telemetry(per_learner: Dict[int, Dict[str, Any]], *,
         "actor_mode": pub.get("actor_mode", "unroll"),
         "donate": pub.get("donate", True),
     }
+    if replay is not None:
+        out["replay"] = replay
     if group_extra:
         out["group"].update(group_extra)
+    return out
+
+
+def _merge_replay(per_learner: Dict[int, Dict[str, Any]]
+                  ) -> Optional[Dict[str, Any]]:
+    """Aggregate the per-learner ``replay`` sections (present only when
+    replay is enabled): counters and histograms sum across replicas,
+    the reuse ratio is recomputed from the summed frame counts, and
+    config echoes (capacity, reuse_limit, ...) come from the first
+    reporting learner — every replica runs the same config."""
+    snaps = [s["replay"] for _k, s in sorted(per_learner.items())
+             if isinstance(s.get("replay"), dict)]
+    if not snaps:
+        return None
+    first = snaps[0]
+    out = {k: first.get(k) for k in
+           ("capacity", "reuse_limit", "priority_mode", "fraction",
+            "fresh_max", "target_period")}
+    for k in ("occupancy", "added", "sampled", "displaced",
+              "evicted_fifo", "evicted_exhausted", "starved",
+              "frames_trained", "trained_frames_per_sec",
+              "target_syncs"):
+        out[k] = sum(s.get(k, 0) for s in snaps)
+    for hk in ("priority_hist",):
+        h: collections.Counter = collections.Counter()
+        for s in snaps:
+            for b, n in s.get(hk, {}).items():
+                h[int(b)] += n
+        out[hk] = dict(sorted(h.items()))
+    stale: collections.Counter = collections.Counter()
+    for s in snaps:
+        for b, n in s.get("staleness", {}).get("hist", {}).items():
+            stale[int(b)] += n
+    n_stale = sum(stale.values())
+    out["staleness"] = {
+        "hist": dict(sorted(stale.items())),
+        "mean": (sum(k * v for k, v in stale.items()) / n_stale
+                 if n_stale else 0.0),
+        "max": max(stale) if stale else 0,
+        "measured": n_stale,
+    }
+    frames = sum(s.get("frames_consumed", 0) for s in per_learner.values())
+    out["reuse_ratio"] = (out["frames_trained"] / frames if frames else 0.0)
     return out
 
 

@@ -45,6 +45,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.metrics import EpisodeTracker
+from repro.core import replay as replay_lib
 from repro.distributed.paramstore import ParameterStore
 from repro.distributed.serde import TrajectoryItem
 from repro.obs.metrics import Registry
@@ -107,7 +108,8 @@ def _buckets(max_batch_trajs: int) -> List[int]:
 
 
 def _collect_batch(queue, buckets: List[int], first: TrajectoryItem,
-                   linger_s: float = 0.0) -> List[TrajectoryItem]:
+                   linger_s: float = 0.0,
+                   max_items: Optional[int] = None) -> List[TrajectoryItem]:
     """Starting from ``first`` (already popped), drain the queue up to
     the largest bucket, then trim to the largest power-of-two that
     fits — requeueing the overflow *at the front, newest first*, so the
@@ -120,10 +122,15 @@ def _collect_batch(queue, buckets: List[int], first: TrajectoryItem,
     learner taking singleton batches pays the update's fixed cost per
     trajectory — and on a shared host, those extra updates steal the
     very cores the actors need to refill the queue. The deadline bounds
-    the staleness this adds; a full bucket never waits."""
+    the staleness this adds; a full bucket never waits.
+
+    ``max_items`` (replay path) caps fresh collection below the top
+    bucket — the learner tops the batch up with replayed trajectories,
+    so it deliberately drains fewer online ones per update."""
     items = [first]
+    cap = buckets[0] if max_items is None else min(max_items, buckets[0])
     deadline = (time.monotonic() + linger_s) if linger_s > 0 else None
-    while len(items) < buckets[0]:
+    while len(items) < cap:
         nxt = queue.get_nowait()
         if nxt is None:
             if deadline is None:
@@ -328,19 +335,38 @@ class Learner:
             # data-parallel replicas must start identical, and
             # --learners 1 must bit-match the single-learner run
             params = pcommon.init_params(specs, jax.random.key(seed))
+        replay_on = icfg.replay_fraction > 0.0
         if exchange is None:
-            train_step, opt = learner_lib.build_train_step(
-                arch, icfg, num_actions, vtrace_impl=vtrace_impl)
-            if donate:
-                train_step = jax.jit(train_step, donate_argnums=(0, 1))
+            if replay_on:
+                # replay path: train_step(params, target_params,
+                # opt_state, step, batch) — the target (argnum 1) is a
+                # long-lived read-only snapshot, so only params and
+                # opt_state are donated
+                train_step, opt = learner_lib.build_replay_train_step(
+                    arch, icfg, num_actions, vtrace_impl=vtrace_impl)
+                if donate:
+                    train_step = jax.jit(train_step, donate_argnums=(0, 2))
+                else:
+                    train_step = jax.jit(train_step)
             else:
-                train_step = jax.jit(train_step)
+                train_step, opt = learner_lib.build_train_step(
+                    arch, icfg, num_actions, vtrace_impl=vtrace_impl)
+                if donate:
+                    train_step = jax.jit(train_step, donate_argnums=(0, 1))
+                else:
+                    train_step = jax.jit(train_step)
             self._train_step = train_step
             self._grad_step = None
             self._apply_step = None
         else:
-            grad_step, apply_step, opt = learner_lib.build_grad_apply_steps(
-                arch, icfg, num_actions, vtrace_impl=vtrace_impl)
+            if replay_on:
+                grad_step, apply_step, opt = \
+                    learner_lib.build_replay_grad_apply_steps(
+                        arch, icfg, num_actions, vtrace_impl=vtrace_impl)
+            else:
+                grad_step, apply_step, opt = \
+                    learner_lib.build_grad_apply_steps(
+                        arch, icfg, num_actions, vtrace_impl=vtrace_impl)
             self._train_step = None
             self._grad_step = jax.jit(grad_step)
             if donate:
@@ -371,6 +397,31 @@ class Learner:
         self._buckets = _buckets(max_batch_trajs)
         self._stager = _HostStager()
         self._frames_per_traj = num_envs * icfg.unroll_length
+        self._num_envs = num_envs
+        if replay_on:
+            # replay RNG identity is (seed, learner_id) — the
+            # fold_replay_seed discipline keeps group replicas on
+            # deterministic per-replica streams (and since every replica
+            # trains the same exchanged mean, giving them the SAME
+            # stream isn't needed for digest-identity; what matters is
+            # that each is deterministic across a restart)
+            self._replay = replay_lib.ReplayBuffer(
+                icfg.replay_capacity, seed=seed, learner_id=learner_id,
+                reuse_limit=icfg.replay_reuse,
+                priority=icfg.replay_priority)
+            self._fresh_max = max(1, int(round(
+                self._buckets[0] * (1.0 - icfg.replay_fraction))))
+            # IMPACT target: a periodic copy of the learner params
+            # supplies the V-trace baseline for replayed rows; synced
+            # every icfg.replay_target_period updates (a pure function
+            # of the update count, so group replicas sync in lockstep)
+            self._target_params = self._snapshot(params)
+        else:
+            self._replay = None
+            self._fresh_max = None
+            self._target_params = None
+        self._target_syncs = 0
+        self.frames_trained = 0
         self.pool = None
         self.service = None
 
@@ -390,9 +441,11 @@ class Learner:
         self._steady_t0: Optional[float] = None
         self._steady_updates0 = 0
         self._steady_frames0 = 0
+        self._steady_trained0 = 0
         self._first_t0: Optional[float] = None
         self._first_updates0 = 0
         self._first_frames0 = 0
+        self._first_trained0 = 0
         self.metrics: Dict = {}
         # flight recorder hooks (all optional, see repro.obs)
         self.trace = trace                  # TraceRecorder or None
@@ -415,6 +468,7 @@ class Learner:
         reg.register_producer(
             "exchange", lambda: (self._exchange.snapshot()
                                  if self._exchange is not None else None))
+        reg.register_producer("replay", self._replay_telemetry)
 
     # ------------------------------------------------------------------
 
@@ -451,6 +505,33 @@ class Learner:
             "param_raw_bytes": self.store.serialized_raw_bytes,
         }
 
+    def _replay_telemetry(self) -> Optional[Dict]:
+        """The ``replay`` registry producer — None (and therefore
+        omitted from /metrics and the snapshot) when replay is off, so
+        the pinned single-learner key set is untouched."""
+        if self._replay is None:
+            return None
+        now = time.monotonic()
+        if self._steady_t0 is not None:
+            dt, t0 = now - self._steady_t0, self._steady_trained0
+        elif self._first_t0 is not None:
+            dt, t0 = now - self._first_t0, self._first_trained0
+        else:
+            dt, t0 = 0.0, 0
+        snap = self._replay.snapshot()
+        snap["fraction"] = self.icfg.replay_fraction
+        snap["fresh_max"] = self._fresh_max
+        snap["frames_trained"] = self.frames_trained
+        # reuse ratio: frames the optimizer saw per env frame consumed
+        # (1.0 = one-pass IMPALA; ~1/(1-fraction) in steady state)
+        snap["reuse_ratio"] = (self.frames_trained / self.frames_consumed
+                               if self.frames_consumed else 0.0)
+        snap["trained_frames_per_sec"] = ((self.frames_trained - t0) / dt
+                                          if dt > 0 else 0.0)
+        snap["target_syncs"] = self._target_syncs
+        snap["target_period"] = self.icfg.replay_target_period
+        return snap
+
     def telemetry_snapshot(self) -> Dict:
         """The pinned snapshot key set, assembled from one registry
         pull — the same storage the live /metrics endpoint reads."""
@@ -481,6 +562,10 @@ class Learner:
         }
         if "inference" in col:
             snap["inference"] = col["inference"]
+        if "replay" in col:
+            # replay runs only: reuse ratio, priority/staleness hists,
+            # occupancy — the producer returns None (omitted) otherwise
+            snap["replay"] = col["replay"]
         if self._exchange is not None:
             # grouped only: the single-learner snapshot keys must stay
             # exactly what run_async_training always reported
@@ -527,13 +612,30 @@ class Learner:
             first = self.queue.get(timeout=0.5)
         for b in self._buckets:
             warm = _stack([first] * b) if b > 1 else first.data
+            if self._replay is not None:
+                # the replay mask is batch DATA (not a static shape), so
+                # an all-zero warm mask compiles the one program each
+                # bucket ever needs
+                warm = dict(warm)
+                warm["replay_mask"] = np.zeros(b * self._num_envs,
+                                               np.float32)
             if self._exchange is None:
-                out = self._train_step(self._snapshot(params),
-                                       self._snapshot(opt_state),
-                                       jnp.int32(0), warm)
+                if self._replay is not None:
+                    out = self._train_step(self._snapshot(params),
+                                           self._target_params,
+                                           self._snapshot(opt_state),
+                                           jnp.int32(0), warm)
+                else:
+                    out = self._train_step(self._snapshot(params),
+                                           self._snapshot(opt_state),
+                                           jnp.int32(0), warm)
                 jax.block_until_ready(out[0])   # compile only; discard
             else:
-                grads, _ = self._grad_step(params, warm)
+                if self._replay is not None:
+                    grads, _ = self._grad_step(params, self._target_params,
+                                               warm)
+                else:
+                    grads, _ = self._grad_step(params, warm)
                 out = self._apply_step(self._snapshot(params),
                                        self._snapshot(opt_state),
                                        jnp.int32(0), grads)
@@ -554,9 +656,14 @@ class Learner:
         if self._exchange is None:
             if timings is not None:
                 timings["step0"] = time.monotonic()
-            self._params, self._opt_state, metrics = self._train_step(
-                self._params, self._opt_state, jnp.int32(self.updates),
-                batch)
+            if self._replay is not None:
+                self._params, self._opt_state, metrics = self._train_step(
+                    self._params, self._target_params, self._opt_state,
+                    jnp.int32(self.updates), batch)
+            else:
+                self._params, self._opt_state, metrics = self._train_step(
+                    self._params, self._opt_state, jnp.int32(self.updates),
+                    batch)
             published = (self._snapshot(self._params) if self.donate
                          else self._params)
             if timings is not None:
@@ -567,7 +674,11 @@ class Learner:
             return published, metrics
         if timings is not None:
             timings["step0"] = time.monotonic()
-        grads, metrics = self._grad_step(self._params, batch)
+        if self._replay is not None:
+            grads, metrics = self._grad_step(self._params,
+                                             self._target_params, batch)
+        else:
+            grads, metrics = self._grad_step(self._params, batch)
         leaves, treedef = jax.tree.flatten(grads)
         # np.asarray forces the backward pass and lands the gradient
         # leaves host-side (views on the CPU backend, copies elsewhere)
@@ -594,6 +705,47 @@ class Learner:
         if timings is not None:
             timings["published"] = time.monotonic()
         return published, metrics
+
+    def _sample_replay(self, num_fresh: int, version_now: int):
+        """Plan and draw the replayed top-up for a batch of
+        ``num_fresh`` online trajectories; None = train pure online
+        this round (fraction 0, buffer still filling, or starved)."""
+        if self._replay is None:
+            return None
+        n_rep = replay_lib.plan_mix(
+            num_fresh, self._buckets[0], self.icfg.replay_fraction,
+            self._replay.num_sampleable())
+        if n_rep < 1:
+            return None
+        return self._replay.sample_items(n_rep, version_now=version_now)
+
+    def _replay_bookkeeping(self, metrics, samples, fresh_items):
+        """Post-step replay accounting: pop the per-trajectory
+        advantage-magnitude metric (it is (B,)-shaped and must not
+        reach scalar metric consumers), re-score the replayed slots
+        with it, and insert the freshly trained trajectories with their
+        measured priority and their online pass pre-counted
+        (``uses=1``), so ``--replay-reuse K`` caps *total*
+        consumptions."""
+        metrics = dict(metrics)
+        mags = metrics.pop("vtrace/traj_adv_mag", None)
+        n_rep = len(samples) if samples else 0
+        per = None
+        if mags is not None:
+            # row r of the stacked batch belongs to trajectory r //
+            # num_envs (the stager lays item i at rows [i*b, (i+1)*b))
+            per = np.asarray(mags, np.float64).reshape(
+                n_rep + len(fresh_items), self._num_envs).mean(axis=1)
+        if n_rep and per is not None:
+            self._replay.update_priorities(
+                [s.uid for s in samples], per[:n_rep])
+        for j, it in enumerate(fresh_items):
+            self._replay.add_item(
+                it,
+                priority=(float(per[n_rep + j]) if per is not None
+                          else None),
+                uses=1)
+        return metrics
 
     def _record_obs(self, items, version_now: int, t_deq: float,
                     t_col: float, t_stk: float,
@@ -656,8 +808,12 @@ class Learner:
                 if item is None:
                     continue
                 t_deq = time.monotonic() if want_t else 0.0
+                # replay caps fresh collection below the top bucket —
+                # the batch is topped back up with replayed rows, which
+                # is exactly where the env-frame saving comes from
                 items = _collect_batch(self.queue, self._buckets, item,
-                                       self.batch_linger_s)
+                                       self.batch_linger_s,
+                                       max_items=self._fresh_max)
                 k = len(items)
                 t_col = time.monotonic() if want_t else 0.0
 
@@ -666,9 +822,22 @@ class Learner:
                     self.lag_hist[version_now - it.param_version] += 1
                     self.tracker.update(it.actor_id, it.data["rewards"],
                                         it.data["done"])
+                samples = self._sample_replay(k, version_now)
+                train_items = ([s.item for s in samples] + items
+                               if samples else items)
                 if want_t:
                     self._stager.last_device_put_s = 0.0
-                batch = _stack(items, self._stager)
+                batch = _stack(train_items, self._stager)
+                if self._replay is not None:
+                    # replayed rows sit FIRST in the stacked batch; the
+                    # mask rides as data so every bucket keeps a single
+                    # compiled program
+                    n_rep = len(samples) if samples else 0
+                    mask = np.zeros(len(train_items) * self._num_envs,
+                                    np.float32)
+                    mask[:n_rep * self._num_envs] = 1.0
+                    batch = dict(batch)
+                    batch["replay_mask"] = mask
                 t_stk = time.monotonic() if want_t else 0.0
                 if self._profile is not None:
                     self._profile.on_step(self.updates)
@@ -677,10 +846,25 @@ class Learner:
                                             timings=timings)
                 if stepped is None:
                     break                   # exchange shut down under us
-                published, self.metrics = stepped
+                published, metrics = stepped
+                if self._replay is not None:
+                    metrics = self._replay_bookkeeping(metrics, samples,
+                                                       items)
+                self.metrics = metrics
                 self.updates += 1
+                if self._replay is not None and \
+                        self.updates % self.icfg.replay_target_period == 0:
+                    # IMPACT target sync: a pure function of the update
+                    # count, so group replicas flip targets in lockstep.
+                    # `published` is already a decoupled snapshot (or
+                    # the functionally-replaced live tree), never a
+                    # donated buffer
+                    self._target_params = published
+                    self._target_syncs += 1
                 self.frames_consumed += k * self._frames_per_traj
-                self.batch_hist[k] += 1
+                self.frames_trained += (len(train_items) *
+                                        self._frames_per_traj)
+                self.batch_hist[len(train_items)] += 1
                 if want_t:
                     self._record_obs(items, version_now, t_deq, t_col,
                                      t_stk, timings)
@@ -691,12 +875,14 @@ class Learner:
                         self._first_t0 = time.monotonic()
                         self._first_updates0 = self.updates
                         self._first_frames0 = self.frames_consumed
+                        self._first_trained0 = self.frames_trained
                     if all(f > 0 for f in self.pool.frames):
                         # every worker is past import/compile and
                         # producing
                         self._steady_t0 = time.monotonic()
                         self._steady_updates0 = self.updates
                         self._steady_frames0 = self.frames_consumed
+                        self._steady_trained0 = self.frames_trained
                 if on_update is not None:
                     on_update(self.updates, published, self.metrics,
                               self.telemetry_snapshot)

@@ -76,9 +76,25 @@ ACTOR_MODES = ("unroll", "inference")
 
 def _validate(icfg, max_batch_trajs, actor_backend, actor_mode,
               transport, env_name) -> None:
+    if not (0.0 <= icfg.replay_fraction < 1.0):
+        raise ValueError(f"replay_fraction must be in [0, 1), got "
+                         f"{icfg.replay_fraction}")
     if icfg.replay_fraction > 0:
-        raise ValueError("experience replay is only wired into the sync "
-                         "runtime; run with --runtime sync")
+        from repro.core.replay import PRIORITY_MODES
+
+        if icfg.replay_capacity < 1:
+            raise ValueError(f"replay_capacity must be >= 1, got "
+                             f"{icfg.replay_capacity}")
+        if icfg.replay_reuse < 0:
+            raise ValueError(f"replay_reuse must be >= 0 (0 = unlimited),"
+                             f" got {icfg.replay_reuse}")
+        if icfg.replay_priority not in PRIORITY_MODES:
+            raise ValueError(f"replay_priority must be one of "
+                             f"{PRIORITY_MODES}, got "
+                             f"{icfg.replay_priority!r}")
+        if icfg.replay_target_period < 1:
+            raise ValueError(f"replay_target_period must be >= 1, got "
+                             f"{icfg.replay_target_period}")
     if max_batch_trajs < 1:
         raise ValueError(f"max_batch_trajs must be >= 1, got "
                          f"{max_batch_trajs}")

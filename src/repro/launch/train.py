@@ -52,7 +52,31 @@ def main() -> int:
                    help="simulated lag (sync runtime only; async measures)")
     p.add_argument("--correction", default="vtrace",
                    choices=["vtrace", "onestep_is", "eps", "none"])
-    p.add_argument("--replay-fraction", type=float, default=0.0)
+    p.add_argument("--replay-fraction", type=float, default=0.0,
+                   help="share of each trained batch drawn from the "
+                        "trajectory replay buffer (0 disables replay; "
+                        "the paper's replay experiments use 0.5). The "
+                        "async learner caps fresh collection at "
+                        "(1-fraction) of the batch and tops it up with "
+                        "replayed rows, so env-frame consumption per "
+                        "update drops by the same share")
+    p.add_argument("--replay-capacity", type=int, default=10_000,
+                   help="replay buffer size in trajectories (FIFO ring)")
+    p.add_argument("--replay-reuse", type=int, default=2,
+                   help="K: max TOTAL consumptions per trajectory "
+                        "(online pass included); 0 = unlimited. The "
+                        "IMPACT-style reuse cap")
+    p.add_argument("--replay-priority", default="pertd",
+                   choices=["pertd", "uniform"],
+                   help="replay sampling: 'pertd' draws proportional to "
+                        "the last-seen V-trace advantage magnitude "
+                        "(Ape-X prioritization), 'uniform' is the "
+                        "paper's uniform mix")
+    p.add_argument("--replay-target-period", type=int, default=16,
+                   help="updates between target-network syncs: replayed "
+                        "rows take the target's values as the V-trace "
+                        "baseline (IMPACT), so K reuses chase a fixed "
+                        "target")
     p.add_argument("--reward-clip", default="abs_one")
     p.add_argument("--smoke", action="store_true",
                    help="use the reduced smoke config of --arch")
@@ -240,6 +264,10 @@ def main() -> int:
         learning_rate=args.lr, entropy_cost=args.entropy_cost,
         rmsprop_eps=args.rmsprop_eps, policy_lag=args.policy_lag,
         correction=args.correction, replay_fraction=args.replay_fraction,
+        replay_capacity=args.replay_capacity,
+        replay_reuse=args.replay_reuse,
+        replay_priority=args.replay_priority,
+        replay_target_period=args.replay_target_period,
         reward_clip=args.reward_clip, seed=args.seed)
 
     if args.runtime == "async":
@@ -348,7 +376,9 @@ def _run_sync(args, env, arch, icfg) -> int:
 
     carry = init_fn(jax.random.key(args.seed + 1))
     lag = LagController(icfg.policy_lag, params)
-    buf = ReplayBuffer(icfg.replay_capacity)
+    buf = ReplayBuffer(icfg.replay_capacity, seed=args.seed,
+                       reuse_limit=icfg.replay_reuse,
+                       priority=icfg.replay_priority)
     tracker = EpisodeTracker(args.num_envs)
     frames = 0
     # steady-state fps window opens after the first jitted update lands —
@@ -365,7 +395,8 @@ def _run_sync(args, env, arch, icfg) -> int:
         if icfg.replay_fraction > 0:
             buf.add_batch(batch)
             rep = buf.sample(args.num_envs)
-            batch = mix_batches(batch, rep, icfg.replay_fraction)
+            batch = mix_batches(batch, rep, icfg.replay_fraction,
+                                buffer=buf)
         params, opt_state, metrics = train_step(params, opt_state,
                                                 jnp.int32(step), batch)
         lag.on_update(params)
@@ -395,8 +426,6 @@ def _run_async(args, env, arch, icfg) -> int:
     from repro.models import backbone as bb
     from repro.models import common
 
-    if icfg.replay_fraction > 0:
-        raise SystemExit("--replay-fraction requires --runtime sync")
     transport = args.transport or {
         "process": "shm", "remote": "socket"}.get(args.actor_backend,
                                                   "inproc")
@@ -497,6 +526,8 @@ def _run_async(args, env, arch, icfg) -> int:
             "actors", "param_version"]
     if "inference" in tel:
         keys.append("inference")
+    if "replay" in tel:
+        keys.append("replay")
     print("telemetry:", json.dumps({k: tel[k] for k in keys},
                                    default=float))
     if args.telemetry_json:
@@ -602,6 +633,8 @@ def _run_group(args, env, arch, icfg, transport) -> int:
     keys = ["group", "learner_updates", "frames_consumed",
             "updates_per_sec", "frames_per_sec", "lag", "actors",
             "param_version"]
+    if "replay" in tel:
+        keys.append("replay")
     print("telemetry:", json.dumps({k: tel[k] for k in keys},
                                    default=float))
     per = tel["actors"]["per_learner_trajectories"]

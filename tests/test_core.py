@@ -94,7 +94,9 @@ def test_policy_gradient_direction():
 
 
 def test_replay_fifo_and_sample():
-    buf = ReplayBuffer(capacity=8)
+    # the sample-stream identity is now an explicit (seed, learner_id) —
+    # the old no-arg default_rng(0) fallback is deliberately gone
+    buf = ReplayBuffer(capacity=8, seed=0)
     for i in range(6):
         buf.add_batch({"x": jnp.full((2, 3), i)})
     assert len(buf) == 8

@@ -31,7 +31,7 @@ def _train(env, arch, icfg, num_envs, steps, seed=0, replay=False):
     carry = init_fn(jax.random.key(seed + 1))
     lag = LagController(icfg.policy_lag, params)
     queue = TrajectoryQueue(capacity=4)
-    buf = ReplayBuffer(icfg.replay_capacity)
+    buf = ReplayBuffer(icfg.replay_capacity, seed=seed)
     tracker = EpisodeTracker(num_envs)
     metrics = {}
     for step in range(steps):
