@@ -283,6 +283,123 @@ def build_grad_apply_steps(arch_cfg: ArchConfig, cfg: ImpalaConfig,
     return grad_step, apply_step, optimizer
 
 
+def build_spmd_train_step(arch_cfg: ArchConfig, cfg: ImpalaConfig,
+                          num_actions: int, mesh,
+                          optimizer: opt_lib.Optimizer = None,
+                          vtrace_impl: str = "auto",
+                          batch_replicated: bool = False,
+                          ) -> Callable[..., Tuple[PyTree, PyTree, Dict]]:
+    """Single-process data-parallel ``train_step`` over a ``('data',)``
+    mesh: ``shard_map`` shards the batch on the leading trajectory axis,
+    every device runs the backward pass on its shard, and the gradients
+    are mean-reduced in-XLA (``lax.pmean`` — one fused collective, no
+    host round-trip) before the replicated clip/update.
+
+    Clip-after-average matches ``build_grad_apply_steps``: with N
+    devices and per-shard sum-losses, the applied update is exactly
+    what an N-learner hub/spoke group computes from the same shards —
+    bit-identical on CPU, pinned by the digest-triangle test. Scalar
+    metrics are pmean'd (each shard's loss is a local sum, so the
+    reported loss is the per-shard mean, like a group member's).
+
+    ``batch_replicated=True`` builds the divisibility-fallback variant
+    (``sharding/rules.py`` replicates a leading dim the mesh cannot
+    split): every device sees the full batch, the pmean is an identity
+    over identical gradients, and the update equals the single-device
+    fused step. Callers jit the result with ``donate_argnums=(0, 1)``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if optimizer is None:
+        optimizer = opt_lib.rmsprop(decay=cfg.rmsprop_decay,
+                                    eps=cfg.rmsprop_eps,
+                                    momentum=cfg.rmsprop_momentum)
+    lr_fn = opt_lib.linear_schedule(cfg.learning_rate, 0.0,
+                                    cfg.lr_anneal_steps)
+    loss_fn = build_loss_fn(arch_cfg, cfg, num_actions, vtrace_impl)
+
+    def local_step(params, opt_state, step, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads = jax.lax.pmean(grads, "data")
+        metrics = jax.lax.pmean(metrics, "data")
+        grads, grad_norm = opt_lib.clip_by_global_norm(
+            grads, cfg.grad_clip_norm)
+        lr = lr_fn(step)
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              lr)
+        params = opt_lib.apply_updates(params, updates)
+        metrics["opt/grad_norm"] = grad_norm
+        metrics["opt/lr"] = lr
+        return params, opt_state, metrics
+
+    bspec = P() if batch_replicated else P("data")
+    train_step = shard_map(local_step, mesh=mesh,
+                           in_specs=(P(), P(), P(), bspec),
+                           out_specs=(P(), P(), P()))
+    return train_step, optimizer
+
+
+def build_spmd_replay_train_step(arch_cfg: ArchConfig, cfg: ImpalaConfig,
+                                 num_actions: int, mesh,
+                                 optimizer: opt_lib.Optimizer = None,
+                                 vtrace_impl: str = "auto",
+                                 batch_replicated: bool = False,
+                                 ) -> Callable[..., Tuple[PyTree, PyTree,
+                                                          Dict]]:
+    """SPMD variant of ``build_replay_train_step``:
+    ``train_step(params, target_params, opt_state, step, batch)`` with
+    the batch (``replay_mask`` included — it is per-row data, so it
+    shards with the rows) split over the ``('data',)`` mesh and the
+    gradients pmean'd in-XLA. The per-trajectory ``vtrace/traj_adv_mag``
+    metric is (B,)-shaped: each shard emits its local rows and the
+    shard_map output spec reassembles the global vector, so replay
+    re-prioritization sees every trajectory. Callers jit with
+    ``donate_argnums=(0, 2)`` (the target is a long-lived snapshot)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if optimizer is None:
+        optimizer = opt_lib.rmsprop(decay=cfg.rmsprop_decay,
+                                    eps=cfg.rmsprop_eps,
+                                    momentum=cfg.rmsprop_momentum)
+    lr_fn = opt_lib.linear_schedule(cfg.learning_rate, 0.0,
+                                    cfg.lr_anneal_steps)
+    loss_fn = build_replay_loss_fn(arch_cfg, cfg, num_actions, vtrace_impl)
+
+    def local_step(params, target_params, opt_state, step, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, target_params, batch)
+        metrics = dict(metrics)
+        traj_adv = metrics.pop("vtrace/traj_adv_mag")
+        grads = jax.lax.pmean(grads, "data")
+        metrics = jax.lax.pmean(metrics, "data")
+        grads, grad_norm = opt_lib.clip_by_global_norm(
+            grads, cfg.grad_clip_norm)
+        lr = lr_fn(step)
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              lr)
+        params = opt_lib.apply_updates(params, updates)
+        metrics["opt/grad_norm"] = grad_norm
+        metrics["opt/lr"] = lr
+        return params, opt_state, metrics, traj_adv
+
+    bspec = P() if batch_replicated else P("data")
+    smapped = shard_map(local_step, mesh=mesh,
+                        in_specs=(P(), P(), P(), P(), bspec),
+                        out_specs=(P(), P(), P(), bspec))
+
+    def train_step(params, target_params, opt_state, step, batch):
+        params, opt_state, metrics, traj_adv = smapped(
+            params, target_params, opt_state, step, batch)
+        metrics = dict(metrics)
+        metrics["vtrace/traj_adv_mag"] = traj_adv
+        return params, opt_state, metrics
+
+    return train_step, optimizer
+
+
 def opt_state_specs(param_specs: PyTree, cfg: ImpalaConfig,
                     mixed_precision: bool = False) -> PyTree:
     """Spec tree for the optimizer state (mirrors param specs)."""

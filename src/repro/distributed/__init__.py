@@ -56,6 +56,7 @@ _EXPORTS = {
     "run_async_training": "repro.distributed.runtime",
     "GradientExchange": "repro.distributed.group",
     "NullExchange": "repro.distributed.group",
+    "CollectiveExchange": "repro.distributed.group",
     "GradHub": "repro.distributed.group",
     "SpokeExchange": "repro.distributed.group",
     "ResilientExchange": "repro.distributed.group",
@@ -103,7 +104,8 @@ def __dir__():
 
 if TYPE_CHECKING:  # pragma: no cover — static imports for type checkers
     from repro.distributed.actor_pool import ActorPool
-    from repro.distributed.group import (GradHub, GradientExchange,
+    from repro.distributed.group import (CollectiveExchange, GradHub,
+                                         GradientExchange,
                                          GroupTracker, NullExchange,
                                          ResilientExchange, SpokeExchange,
                                          merge_telemetry,

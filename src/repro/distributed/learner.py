@@ -10,11 +10,17 @@ A ``Learner`` owns exactly the four things the old loop hard-coded:
                      overflow, optional linger deadline) into per-bucket
                      ping-ponged host staging buffers;
   train step         the donated fused ``train_step`` when it trains
-                     alone, or a split ``grad_step`` / ``apply_step``
+                     alone; a split ``grad_step`` / ``apply_step``
                      pair when a ``GradientExchange`` sits between the
                      backward pass and the optimizer (data-parallel
                      learners apply the *exchanged mean*, so replicas
-                     stay bit-identical);
+                     stay bit-identical); or the donated ``shard_map``
+                     SPMD step when the exchange is in-XLA
+                     (``CollectiveExchange``): batch sharded over a
+                     ``('data',)`` mesh, params/opt replicated, the
+                     gradient mean a fused ``lax.pmean`` — the
+                     N-learner-group update without N processes or a
+                     single TCP frame;
   publish            every update lands in the learner's own
                      ``ParameterStore`` — self-versioned when alone,
                      at the exchange-delegated version when grouped
@@ -189,12 +195,23 @@ class _HostStager:
           consumers — so buffers are freshly allocated per stack and
           never reused (same copy count as the concatenate path, still
           a single device_put for the whole tree).
+
+    ``mesh`` (SPMD learner mode) switches to *sharded* staging: one
+    host buffer set per mesh device, each leaf's rows written straight
+    into its shard's buffer, one ``device_put`` per shard, and the
+    pieces assembled into global arrays under an explicit
+    ``NamedSharding`` — the batch lands pre-sharded on the ``('data',)``
+    axis with no dispatch-time re-slicing. A row count the mesh cannot
+    split falls back to a single buffer replicated explicitly
+    (mirroring ``sharding/rules.py``'s divisibility fallback).
     """
 
-    def __init__(self):
+    def __init__(self, mesh=None):
         self._slots: Dict[Any, list] = {}
         self._reuse = _device_put_copies()
         self.last_device_put_s = 0.0    # phase-timing probe, per stack
+        self._mesh = mesh
+        self._n = int(mesh.devices.size) if mesh is not None else 1
 
     def stack(self, items: List[TrajectoryItem]) -> Optional[PyTree]:
         """Staged stack of >=2 same-shaped numpy trajectories; None if
@@ -212,6 +229,12 @@ class _HostStager:
                     tuple((x.shape, x.dtype.name) for x in ls) != shapes:
                 return None                 # ragged: not the hot path
         k = len(items)
+
+        if self._mesh is not None:
+            b = leaves0[0].shape[0]
+            if (k * b) % self._n == 0 and \
+                    all(x.shape[0] == b for x in leaves0):
+                return self._stack_sharded(datas, leaves0, treedef, k)
 
         def alloc():
             return [np.empty((x.shape[0] * k,) + x.shape[1:], x.dtype)
@@ -236,11 +259,82 @@ class _HostStager:
                 b = leaf.shape[0]
                 buf[i * b:(i + 1) * b] = leaf
         t0 = time.monotonic()
-        out = jax.device_put(jax.tree.unflatten(treedef, bufs))
+        tree = jax.tree.unflatten(treedef, bufs)
+        if self._mesh is not None:
+            # Rules divisibility fallback, staging edition: rows the
+            # mesh can't split land replicated so the P(None) compiled
+            # variant sees its expected sharding.
+            from jax.sharding import NamedSharding, PartitionSpec
+            out = jax.device_put(
+                tree, NamedSharding(self._mesh, PartitionSpec()))
+        else:
+            out = jax.device_put(tree)
         self.last_device_put_s = time.monotonic() - t0
         if self._reuse:
             slot[2][idx] = out
         return out
+
+    def _stack_sharded(self, datas, leaves0, treedef, k) -> PyTree:
+        """SPMD staging: write each item's rows into the per-device
+        shard buffer(s) they land on, ship one ``device_put`` per mesh
+        device, and assemble global arrays with an explicit
+        ``NamedSharding(mesh, P('data'))`` via
+        ``make_array_from_single_device_arrays`` — the jitted shard_map
+        step sees exactly the sharding it was compiled for.
+
+        Buffers are freshly allocated per stack: sharded staging is
+        only reachable in SPMD mode, which forces multi-device CPU (or
+        real accelerators where per-shard transfers copy anyway), and
+        the alias-vs-copy ping-pong discipline of the single-device
+        path would need one event per shard for no measured win."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh, n = self._mesh, self._n
+        b = leaves0[0].shape[0]
+        rows = k * b
+        r = rows // n
+        shard_bufs = [[np.empty((r,) + x.shape[1:], x.dtype)
+                       for x in leaves0] for _ in range(n)]
+        for i, d in enumerate(datas):
+            for j, leaf in enumerate(jax.tree.leaves(d)):
+                lo = i * b                      # item rows [lo, lo+b)
+                for s in range(lo // r, (lo + b - 1) // r + 1):
+                    a = max(lo, s * r)          # overlap with shard s
+                    z = min(lo + b, (s + 1) * r)
+                    shard_bufs[s][j][a - s * r:z - s * r] = \
+                        leaf[a - lo:z - lo]
+        devices = mesh.devices.flatten()
+        t0 = time.monotonic()
+        per_dev = [jax.device_put(shard_bufs[s], devices[s])
+                   for s in range(n)]
+        global_leaves = []
+        for j, x in enumerate(leaves0):
+            sharding = NamedSharding(mesh, P("data"))
+            global_leaves.append(jax.make_array_from_single_device_arrays(
+                (rows,) + x.shape[1:], sharding,
+                [per_dev[s][j] for s in range(n)]))
+        self.last_device_put_s = time.monotonic() - t0
+        return jax.tree.unflatten(treedef, global_leaves)
+
+    def reshard(self, tree: PyTree) -> PyTree:
+        """SPMD fallback for batches that bypassed sharded host staging
+        (device-array leaves from inproc thread actors, ragged trees):
+        one resharding ``device_put`` onto the mesh, sharded on the
+        leading axis when the rows divide, replicated otherwise — a
+        batch left committed to one device would collide with the
+        mesh-wide params at dispatch."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        leaves = jax.tree.leaves(tree)
+        rows = leaves[0].shape[0]
+        if rows % self._n == 0 and \
+                all(x.shape[0] == rows for x in leaves):
+            sharding = NamedSharding(self._mesh, P("data"))
+        else:
+            sharding = NamedSharding(self._mesh, P())
+        return jax.device_put(tree, sharding)
 
 
 def _stack(items: List[TrajectoryItem],
@@ -248,7 +342,9 @@ def _stack(items: List[TrajectoryItem],
     import jax
     import jax.numpy as jnp
 
-    if len(items) == 1:
+    if len(items) == 1 and (stager is None or stager._mesh is None):
+        # SPMD staging must see even single items so the batch lands
+        # pre-sharded (or explicitly replicated) on the mesh.
         return items[0].data
 
     if stager is not None:
@@ -263,7 +359,10 @@ def _stack(items: List[TrajectoryItem],
             return np.concatenate(xs, axis=0)
         return jnp.concatenate(xs, axis=0)
 
-    return jax.tree.map(cat, *[it.data for it in items])
+    out = jax.tree.map(cat, *[it.data for it in items])
+    if stager is not None and stager._mesh is not None:
+        out = stager.reshard(out)
+    return out
 
 
 class Learner:
@@ -285,6 +384,17 @@ class Learner:
     the exchange-delegated version. Every learner applies the same
     broadcast mean with the same optimizer state, so the replicas stay
     bit-identical without ever shipping parameters between learners.
+
+    An *in-XLA* exchange (``group.CollectiveExchange``) selects SPMD
+    mode instead: one process, one donated ``shard_map`` train step
+    over a ``('data',)`` device mesh. The batch is staged pre-sharded
+    on the leading trajectory axis, params/opt state stay replicated,
+    and the gradient mean is a fused ``lax.pmean`` — the same
+    mathematical update as an N-learner group at equal global batch,
+    with zero host round-trips (and zero TCP frames) in the gradient
+    path. The exchange object only delegates version numbers and
+    records per-round latency; stale-drop never fires because nothing
+    can be stale.
     """
 
     def __init__(self, *, arch, icfg, num_actions: int, num_envs: int,
@@ -336,7 +446,53 @@ class Learner:
             # --learners 1 must bit-match the single-learner run
             params = pcommon.init_params(specs, jax.random.key(seed))
         replay_on = icfg.replay_fraction > 0.0
-        if exchange is None:
+        spmd_on = exchange is not None and getattr(exchange, "in_xla",
+                                                   False)
+        self._spmd_mesh = None
+        self._train_step_repl = None
+        if spmd_on:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.launch.mesh import make_data_mesh
+            from repro.sharding.rules import Rules
+
+            mesh = make_data_mesh(exchange.num_devices)
+            self._spmd_mesh = mesh
+            self._spmd_rules = Rules(mesh)
+            # the published snapshot is re-homed on one device so the
+            # inference service's forward doesn't run replicated over
+            # the whole mesh
+            self._spmd_publish_dev = jax.devices()[0]
+            # params (and below, opt state) live replicated over the
+            # mesh from the start: a donated shard_map step whose
+            # arguments already carry the compiled sharding never
+            # reshards on entry
+            params = jax.device_put(params, NamedSharding(mesh, P()))
+            if replay_on:
+                sharded, opt = learner_lib.build_spmd_replay_train_step(
+                    arch, icfg, num_actions, mesh,
+                    vtrace_impl=vtrace_impl)
+                repl, _ = learner_lib.build_spmd_replay_train_step(
+                    arch, icfg, num_actions, mesh, optimizer=opt,
+                    vtrace_impl=vtrace_impl, batch_replicated=True)
+                don = (0, 2)
+            else:
+                sharded, opt = learner_lib.build_spmd_train_step(
+                    arch, icfg, num_actions, mesh,
+                    vtrace_impl=vtrace_impl)
+                repl, _ = learner_lib.build_spmd_train_step(
+                    arch, icfg, num_actions, mesh, optimizer=opt,
+                    vtrace_impl=vtrace_impl, batch_replicated=True)
+                don = (0, 1)
+            if donate:
+                self._train_step = jax.jit(sharded, donate_argnums=don)
+                self._train_step_repl = jax.jit(repl, donate_argnums=don)
+            else:
+                self._train_step = jax.jit(sharded)
+                self._train_step_repl = jax.jit(repl)
+            self._grad_step = None
+            self._apply_step = None
+        elif exchange is None:
             if replay_on:
                 # replay path: train_step(params, target_params,
                 # opt_state, step, batch) — the target (argnum 1) is a
@@ -388,14 +544,19 @@ class Learner:
             self._opt_state = jax.device_put(initial_opt_state)
         else:
             self._opt_state = opt.init(params)
+        if spmd_on:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self._opt_state = jax.device_put(
+                self._opt_state, NamedSharding(self._spmd_mesh, P()))
         self.store = ParameterStore(
-            self._snapshot(params) if donate else params,
+            self._spmd_publish(params) if spmd_on
+            else (self._snapshot(params) if donate else params),
             version=start_step, wire_codec=wire_codec)
         self.start_step = start_step
         self.tracker = MultiTracker(num_actors, num_envs,
                                     slot_base=slot_base)
         self._buckets = _buckets(max_batch_trajs)
-        self._stager = _HostStager()
+        self._stager = _HostStager(mesh=self._spmd_mesh)
         self._frames_per_traj = num_envs * icfg.unroll_length
         self._num_envs = num_envs
         if replay_on:
@@ -573,6 +734,20 @@ class Learner:
             snap["slot_base"] = self.slot_base
             snap["exchange"] = col.get("exchange",
                                        self._exchange.snapshot())
+            if self._spmd_mesh is not None:
+                # SPMD runs surface the same ``group`` section the
+                # multi-process topologies emit, so dashboards key on
+                # one shape; backend label tells them apart
+                ex = snap["exchange"] or {}
+                snap["group"] = {
+                    "num_learners": 1,
+                    "publisher": self.learner_id,
+                    "exchange_backend": ex.get("exchange_backend",
+                                               "collective"),
+                    "spmd_devices": ex.get(
+                        "devices", int(self._spmd_mesh.devices.size)),
+                    "rounds": ex.get("rounds", 0),
+                }
         if "supervisor" in col:
             # supervised only: restart/failover/lease-reap counts ride
             # the snapshot so a final telemetry dump (and the group
@@ -599,6 +774,34 @@ class Learner:
         if self.service is not None:
             self.service.raise_errors()
 
+    # ------------------------------------------------------------------
+    # SPMD mode helpers
+
+    def _spmd_publish(self, params):
+        """Snapshot + re-home on one device: the store (and through it
+        the inference service's jit and every actor pull) sees a plain
+        single-device tree, not an array replicated over the mesh —
+        a replicated forward would run on every mesh device."""
+        import jax
+        return jax.device_put(self._snapshot(params),
+                              self._spmd_publish_dev)
+
+    def _spmd_step_for(self, batch):
+        """Pick the compiled variant for this batch's leading row count
+        via the sharding rules: rows the ``('data',)`` mesh divides run
+        the batch-sharded step; anything else (the Rules divisibility
+        fallback, ``P(None)``) runs the batch-replicated variant —
+        every device computes the full-batch gradient and the pmean is
+        an identity, so semantics match the fused single step exactly."""
+        import jax
+
+        leaves = jax.tree.leaves(batch)
+        rows = leaves[0].shape[0]
+        if all(x.shape[0] == rows for x in leaves) and \
+                self._spmd_rules.spec(("batch",), (rows,))[0] is not None:
+            return self._train_step
+        return self._train_step_repl
+
     def _warm(self, params, opt_state) -> None:
         """Pre-compile the train step for every batch bucket on
         throwaway copies (donation would otherwise consume the real
@@ -611,7 +814,12 @@ class Learner:
             self._raise_worker_errors()
             first = self.queue.get(timeout=0.5)
         for b in self._buckets:
-            warm = _stack([first] * b) if b > 1 else first.data
+            if self._spmd_mesh is not None:
+                # stage through the sharded stager so each bucket's
+                # compile sees the exact input sharding of steady state
+                warm = _stack([first] * b, self._stager)
+            else:
+                warm = _stack([first] * b) if b > 1 else first.data
             if self._replay is not None:
                 # the replay mask is batch DATA (not a static shape), so
                 # an all-zero warm mask compiles the one program each
@@ -619,7 +827,19 @@ class Learner:
                 warm = dict(warm)
                 warm["replay_mask"] = np.zeros(b * self._num_envs,
                                                np.float32)
-            if self._exchange is None:
+            if self._spmd_mesh is not None:
+                step_fn = self._spmd_step_for(warm)
+                if self._replay is not None:
+                    out = step_fn(self._snapshot(params),
+                                  self._target_params,
+                                  self._snapshot(opt_state),
+                                  jnp.int32(0), warm)
+                else:
+                    out = step_fn(self._snapshot(params),
+                                  self._snapshot(opt_state),
+                                  jnp.int32(0), warm)
+                jax.block_until_ready(out[0])
+            elif self._exchange is None:
                 if self._replay is not None:
                     out = self._train_step(self._snapshot(params),
                                            self._target_params,
@@ -653,6 +873,43 @@ class Learner:
         pipeline the recorder exists to observe; the split path's
         ``np.asarray`` already forces the backward pass, so its stamps
         are real."""
+        if self._spmd_mesh is not None:
+            # SPMD: the whole group update is ONE donated shard_map
+            # dispatch — backward, in-XLA pmean, optimizer. Nothing
+            # crosses the host, so the exchange only delegates the
+            # version number and books the round.
+            if timings is not None:
+                timings["step0"] = time.monotonic()
+            t0 = time.monotonic()
+            step_fn = self._spmd_step_for(batch)
+            if self._replay is not None:
+                self._params, self._opt_state, metrics = step_fn(
+                    self._params, self._target_params, self._opt_state,
+                    jnp.int32(self.updates), batch)
+            else:
+                self._params, self._opt_state, metrics = step_fn(
+                    self._params, self._opt_state,
+                    jnp.int32(self.updates), batch)
+            reduced = self._exchange.allreduce((),
+                                               round_idx=self.updates)
+            if reduced is None:
+                return None                 # exchange shutting down
+            _, version = reduced
+            published = (self._spmd_publish(self._params) if self.donate
+                         else jax.device_put(self._params,
+                                             self._spmd_publish_dev))
+            # grad_norm is computed from the pmean'd mean: waiting on it
+            # waits on the collective completing on every shard, so the
+            # observed round latency is the real all-reduce+apply time
+            jax.block_until_ready(metrics["opt/grad_norm"])
+            self._exchange.observe_round_s(time.monotonic() - t0,
+                                           round_idx=self.updates)
+            if timings is not None:
+                timings["step1"] = time.monotonic()
+            self.store.publish_at(published, version)
+            if timings is not None:
+                timings["published"] = time.monotonic()
+            return published, metrics
         if self._exchange is None:
             if timings is not None:
                 timings["step0"] = time.monotonic()
@@ -858,8 +1115,18 @@ class Learner:
                     # count, so group replicas flip targets in lockstep.
                     # `published` is already a decoupled snapshot (or
                     # the functionally-replaced live tree), never a
-                    # donated buffer
-                    self._target_params = published
+                    # donated buffer. SPMD re-replicates it over the
+                    # mesh: the shard_map step was compiled for a
+                    # P()-sharded target, and feeding it the
+                    # single-device publish copy would recompile.
+                    if self._spmd_mesh is not None:
+                        from jax.sharding import (NamedSharding,
+                                                  PartitionSpec)
+                        self._target_params = jax.device_put(
+                            published, NamedSharding(self._spmd_mesh,
+                                                     PartitionSpec()))
+                    else:
+                        self._target_params = published
                     self._target_syncs += 1
                 self.frames_consumed += k * self._frames_per_traj
                 self.frames_trained += (len(train_items) *

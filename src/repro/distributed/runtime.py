@@ -75,7 +75,8 @@ ACTOR_MODES = ("unroll", "inference")
 
 
 def _validate(icfg, max_batch_trajs, actor_backend, actor_mode,
-              transport, env_name) -> None:
+              transport, env_name, spmd_devices: int = 0,
+              exchange=None) -> None:
     if not (0.0 <= icfg.replay_fraction < 1.0):
         raise ValueError(f"replay_fraction must be in [0, 1), got "
                          f"{icfg.replay_fraction}")
@@ -116,6 +117,15 @@ def _validate(icfg, max_batch_trajs, actor_backend, actor_mode,
     if actor_backend == "remote" and not isinstance(env_name, str):
         raise ValueError("remote actors rebuild the env by name; pass "
                          "an env name, not an Env object")
+    if spmd_devices:
+        if spmd_devices < 1:
+            raise ValueError(f"spmd_devices must be >= 1, got "
+                             f"{spmd_devices}")
+        if exchange is not None:
+            raise ValueError("spmd_devices builds its own in-XLA "
+                             "CollectiveExchange; it cannot combine "
+                             "with a hub/spoke exchange (use a learner "
+                             "group OR spmd, not both)")
 
 
 def _setup(
@@ -146,6 +156,7 @@ def _setup(
     learner_id: int = 0,
     num_learners: int = 1,
     exchange=None,
+    spmd_devices: int = 0,
     peer_addrs=None,
     wire_codec: str = "none",
     vtrace_impl: str = "auto",
@@ -175,7 +186,8 @@ def _setup(
     hot-path counters and the telemetry snapshot read one storage.
     """
     _validate(icfg, max_batch_trajs, actor_backend, actor_mode,
-              transport, env_name)
+              transport, env_name, spmd_devices=spmd_devices,
+              exchange=exchange)
     env = make_env(env_name) if isinstance(env_name, str) else env_name
     if arch is None:
         from repro.core.driver import small_arch
@@ -191,6 +203,16 @@ def _setup(
         if obs.profile_steps:
             from repro.obs.sink import ProfileHook
             profile = ProfileHook(obs.profile_steps, obs.profile_dir)
+
+    if spmd_devices:
+        # SPMD learner mode: the Learner sees an *in-XLA* exchange and
+        # builds the shard_map train step over a ('data',) mesh of this
+        # many local devices (mesh construction — and the
+        # device-availability error with its XLA_FLAGS hint — lives in
+        # launch/mesh.make_data_mesh). The exchange itself never moves
+        # a byte: it delegates version numbers and books round latency.
+        from repro.distributed.group import CollectiveExchange
+        exchange = CollectiveExchange(spmd_devices, trace=trace)
 
     learner = Learner(
         arch=arch, icfg=icfg, num_actions=env.num_actions,
@@ -324,6 +346,7 @@ def run_async_training(
     infer_streams: int = 1,
     wire_codec: str = "none",
     vtrace_impl: str = "auto",
+    spmd_devices: int = 0,
     on_update: Optional[Callable[[int, PyTree, Dict, Dict], None]] = None,
     obs=None,
     supervise: bool = False,
@@ -417,6 +440,15 @@ def run_async_training(
     TPU and the scan path elsewhere; 'fused' / 'pallas' / 'scan' /
     'reference' force one.
 
+    ``spmd_devices`` (N > 0) runs the learner in SPMD mode: one process
+    whose train step is a ``shard_map`` over a 1-D ``('data',)`` mesh of
+    N local devices — batch sharded on the trajectory axis, params and
+    optimizer state replicated, gradients mean-reduced by an in-XLA
+    ``psum``. Mathematically the N-learner group update at equal global
+    batch, with zero TCP frames in the gradient path. On CPU, grow the
+    device pool with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before the first jax import.
+
     ``obs`` (an ``repro.obs.ObsConfig``) runs the whole flight recorder
     around the training loop: a ``/metrics`` + ``/healthz`` +
     ``/telemetry`` HTTP endpoint (``metrics_port``; the bound address —
@@ -442,7 +474,8 @@ def run_async_training(
         infer_flush_timeout_s=infer_flush_timeout_s,
         infer_max_batch_requests=infer_max_batch_requests,
         infer_streams=infer_streams, wire_codec=wire_codec,
-        vtrace_impl=vtrace_impl, obs=obs, supervise=supervise,
+        vtrace_impl=vtrace_impl, spmd_devices=spmd_devices,
+        obs=obs, supervise=supervise,
         heartbeat_timeout_s=heartbeat_timeout_s, elastic=elastic)
     server = sink = None
     prev_trace_env = None

@@ -35,6 +35,22 @@ def make_mesh(cfg: MeshConfig) -> jax.sharding.Mesh:
     return jax.make_mesh(cfg.shape, cfg.axis_names)
 
 
+def make_data_mesh(num_devices: int) -> jax.sharding.Mesh:
+    """1-D ``('data',)`` mesh over the first ``num_devices`` local
+    devices — the SPMD data-parallel learner topology (batch sharded on
+    the trajectory axis, params/opt replicated, gradients psum'd).
+    On CPU the device pool is grown with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before
+    the first jax import (the ``launch/dryrun.py`` precedent)."""
+    avail = len(jax.devices())
+    if num_devices < 1 or num_devices > avail:
+        raise ValueError(
+            f"spmd mesh needs 1..{avail} devices, got {num_devices} "
+            f"(on CPU, set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={num_devices} before the first jax import)")
+    return jax.make_mesh((num_devices,), ("data",))
+
+
 def make_rules(mesh: jax.sharding.Mesh, overrides=None) -> Rules:
     return Rules(mesh, overrides)
 

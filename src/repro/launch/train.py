@@ -98,6 +98,34 @@ def main() -> int:
                         "learner k binds PORT+k and external actors may "
                         "dial any of them (a full learner refuses with "
                         "the shard map; the actor spills)")
+    p.add_argument("--learner-mode", default="process",
+                   choices=["process", "spmd"],
+                   help="how data-parallel learning scales (async "
+                        "runtime): 'process' is the hub/spoke learner "
+                        "group (--learners N spawns N processes "
+                        "exchanging gradients over TCP); 'spmd' keeps "
+                        "ONE learner process and runs the train step as "
+                        "a shard_map over --spmd-devices local devices "
+                        "— batch sharded on the trajectory axis, params "
+                        "replicated, gradients mean-reduced by an "
+                        "in-XLA psum (zero TCP frames). Same update "
+                        "math as a --learners N group at equal global "
+                        "batch")
+    p.add_argument("--spmd-devices", type=int, default=0,
+                   help="device count for --learner-mode spmd (0 = all "
+                        "local devices). On CPU, grow the pool with "
+                        "XLA_FLAGS=--xla_force_host_platform_device_"
+                        "count=N before launch")
+    p.add_argument("--coord-addr", default="",
+                   help="multi-host SPMD stub: HOST:PORT of the "
+                        "jax.distributed coordinator (process 0). "
+                        "Calls jax.distributed.initialize before any "
+                        "device use so the ('data',) mesh can span "
+                        "hosts; single-host runs leave it empty")
+    p.add_argument("--num-hosts", type=int, default=1,
+                   help="total participating hosts for --coord-addr")
+    p.add_argument("--host-id", type=int, default=0,
+                   help="this host's process index for --coord-addr")
     p.add_argument("--grad-stale-s", type=float, default=180.0,
                    help="learner-group stale-grad deadline: the hub "
                         "reduces a round without a learner that missed "
@@ -248,6 +276,32 @@ def main() -> int:
         # learner elsewhere — every run parameter arrives in the
         # connection handshake, so none of the learner flags apply here
         return _run_remote_actors(args)
+
+    if args.coord_addr:
+        # multi-host SPMD stub: initialize the jax.distributed runtime
+        # BEFORE anything touches the backend, so jax.devices() spans
+        # every host and the ('data',) mesh (and its psum) is global.
+        # Single-host SPMD never comes through here.
+        if args.num_hosts < 1 or not (0 <= args.host_id < args.num_hosts):
+            raise SystemExit(f"--coord-addr needs --num-hosts >= 1 and "
+                             f"0 <= --host-id < num_hosts, got "
+                             f"{args.num_hosts}/{args.host_id}")
+        jax.distributed.initialize(coordinator_address=args.coord_addr,
+                                   num_processes=args.num_hosts,
+                                   process_id=args.host_id)
+        print(f"jax.distributed up: host {args.host_id}/{args.num_hosts} "
+              f"coordinator={args.coord_addr} "
+              f"devices={jax.device_count()} "
+              f"(local {jax.local_device_count()})")
+
+    if args.learner_mode == "spmd":
+        if args.runtime != "async":
+            raise SystemExit("--learner-mode spmd requires "
+                             "--runtime async")
+        if args.learners > 1:
+            raise SystemExit("--learner-mode spmd keeps ONE learner "
+                             "process; drop --learners (device "
+                             "parallelism comes from --spmd-devices)")
 
     from repro.configs.base import ImpalaConfig
     from repro.configs.registry import get_config, get_smoke_config
@@ -441,6 +495,9 @@ def _run_async(args, env, arch, icfg) -> int:
     # an explicit --listen means real remote machines dial in; without
     # it the learner spawns loopback actor children itself
     spawn_remote = not args.listen
+    spmd_devices = 0
+    if args.learner_mode == "spmd":
+        spmd_devices = args.spmd_devices or jax.device_count()
     specs = bb.backbone_specs(arch, env.num_actions)
     print(f"arch={arch.name} params={common.param_count(specs):,} "
           f"env={env.name} actions={env.num_actions} runtime=async "
@@ -448,7 +505,9 @@ def _run_async(args, env, arch, icfg) -> int:
           f"{args.actor_mode}) transport={transport} "
           f"queue={args.queue_capacity}/{args.queue_policy} "
           f"max_batch_trajs={args.max_batch_trajs} "
-          f"donate={not args.no_donate}")
+          f"donate={not args.no_donate}"
+          + (f" learner_mode=spmd spmd_devices={spmd_devices}"
+             if spmd_devices else ""))
     initial_params, initial_opt, start_step = None, None, 0
     if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
         tree, ck_step, extra = ckpt.load_with_extra(args.ckpt_dir)
@@ -508,6 +567,7 @@ def _run_async(args, env, arch, icfg) -> int:
         donate=not args.no_donate,
         infer_flush_timeout_s=args.infer_flush_ms / 1e3,
         wire_codec=args.wire_codec, vtrace_impl=args.vtrace_impl,
+        spmd_devices=spmd_devices,
         seed=args.seed, arch=arch, initial_params=initial_params,
         initial_opt_state=initial_opt,
         start_step=start_step, on_update=on_update,
@@ -528,6 +588,9 @@ def _run_async(args, env, arch, icfg) -> int:
         keys.append("inference")
     if "replay" in tel:
         keys.append("replay")
+    if "group" in tel:
+        # spmd runs surface the group section (collective backend)
+        keys += ["group", "exchange"]
     print("telemetry:", json.dumps({k: tel[k] for k in keys},
                                    default=float))
     if args.telemetry_json:

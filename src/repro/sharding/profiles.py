@@ -1,8 +1,29 @@
 """Named sharding-rule profiles, per (arch, shape) overridable.
 
-'baseline' is the paper-faithful starting point (batch->data, params->model
-tensor/expert parallel). The other profiles are §Perf hillclimb variants —
-each documents its hypothesis in EXPERIMENTS.md.
+Two families live here, deliberately separated:
+
+IMPALA profiles (used by this repo's training paths)
+    'baseline' — the only profile the IMPALA conv-LSTM net trains
+    with. It resolves to ``DEFAULT_RULES``: the batch axis maps to
+    ``("pod", "data")`` and every param dim falls through the
+    divisibility rule. The SPMD learner (``--learner-mode spmd``)
+    builds its 1-D ``('data',)`` mesh and uses exactly these rules —
+    batch sharded on the leading trajectory axis when the row count
+    divides the mesh (``Rules.spec``'s fallback replicates otherwise),
+    params replicated because a ~129k-param conv-LSTM has nothing
+    worth sharding. ``launch/dryrun.py`` compiles the same profile on
+    the big production meshes.
+
+Legacy LLM dryrun profiles (kept compiling, not used by IMPALA)
+    Everything below 'baseline' targets the transformer/MoE/SSM dryrun
+    shapes from the production-mesh exercise (``launch/dryrun.py``'s
+    assigned-architecture sweep); none of their logical axes (heads,
+    kv_seq, experts, vocab, ...) appear in the IMPALA param tree, so
+    selecting them for IMPALA is a no-op beyond the batch rule. They
+    are retained because the sharding tests pin their specs
+    (``tests/test_sharding.py`` exercises baseline/seq_data/tp2d/
+    fsdp_pure) and the dryrun tooling still selects them by name; each
+    one's comment records the hypothesis it was hillclimbing.
 """
 from __future__ import annotations
 
@@ -13,8 +34,11 @@ from repro.configs.base import ArchConfig, InputShape
 
 def get_profile(name: str, arch: ArchConfig,
                 shape: InputShape) -> Optional[Dict]:
+    # ---- IMPALA profile ------------------------------------------------
     if name == "baseline":
-        return None  # DEFAULT_RULES
+        return None  # DEFAULT_RULES — the profile IMPALA trains with
+
+    # ---- legacy LLM dryrun profiles (see module docstring) -------------
     if name == "seq_data":
         # shard sequence (not batch) over data — context parallelism for
         # small-batch long-context shapes (long_500k B=1)

@@ -6,7 +6,11 @@ the group trajectory), sharding leaves per-actor randomness untouched,
 merged telemetry aggregates without key collisions, and a 2-learner
 group learns catch to the same bar as the thread/process backends with
 bit-identical replicas and one monotonic version stream."""
+import json
 import os
+import subprocess
+import sys
+import textwrap
 import threading
 import time
 
@@ -531,3 +535,215 @@ def test_two_learner_group_learns_catch():
     # random play on catch is ~-0.6; require a decisive climb
     assert late > early + 0.15, (early, late)
     assert late > -0.3, (early, late)
+
+
+# ---------------------------------------------------------------------------
+# SPMD collective exchange
+
+
+def test_collective_exchange_delegates_versions_and_snapshot():
+    """CollectiveExchange keeps the GradientExchange version contract
+    (version = round_idx + 1, same as hub/spoke) while doing no wire
+    work, and its snapshot reports the collective backend with latency
+    telemetry but NO byte counters — the gradient path is in-XLA."""
+    from repro.distributed import CollectiveExchange
+
+    ex = CollectiveExchange(4)
+    assert ex.in_xla
+    leaves, version = ex.allreduce([], round_idx=7)
+    assert leaves == [] and version == 8
+    ex.observe_round_s(0.004, round_idx=7)
+    snap = ex.snapshot()
+    assert snap["exchange_backend"] == "collective"
+    assert snap["devices"] == 4
+    assert snap["rounds"] == 1
+    assert "bytes_in" not in snap and "bytes_out" not in snap
+    # 4000 us has bit_length 12 -> the [2048, 4096) us bucket
+    assert snap["round_us_hist"] == {12: 1}
+    assert snap["round_ms_mean"] == pytest.approx(4.0)
+
+
+SUBPROCESS_TRIANGLE = textwrap.dedent("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import json
+import threading
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ImpalaConfig
+from repro.core import learner as learner_lib
+from repro.core.driver import small_arch
+from repro.data.envs import make_bandit
+from repro.distributed import GradHub, SpokeExchange
+from repro.launch.mesh import make_data_mesh
+from repro.models import backbone as bb
+from repro.models import common as pcommon
+
+env = make_bandit()
+arch = small_arch(env)
+icfg = ImpalaConfig(num_actions=env.num_actions, unroll_length=4,
+                    learning_rate=1e-3, rmsprop_eps=0.01)
+A = env.num_actions
+params = pcommon.init_params(bb.backbone_specs(arch, A), jax.random.key(0))
+
+K = 3
+b, t, hw = 2, 4, env.image_hw
+rng = np.random.default_rng(0)
+
+
+def mk_batch():
+    return {
+        "obs_image": rng.integers(0, 255, (b, t + 1) + hw).astype(np.uint8),
+        "last_action": np.zeros((b, t + 1), np.int32),
+        "last_reward": np.zeros((b, t + 1), np.float32),
+        "done_in": np.zeros((b, t + 1), bool),
+        "lstm_state": tuple(np.zeros((b, arch.lstm_width), np.float32)
+                            for _ in range(2)),
+        "actions": rng.integers(0, A, (b, t)).astype(np.int32),
+        "rewards": rng.standard_normal((b, t)).astype(np.float32),
+        "discounts": np.full((b, t), 0.99, np.float32),
+        "behaviour_logprob": np.full((b, t), -1.0, np.float32),
+        "done": np.zeros((b, t), bool),
+    }
+
+
+rounds = [(mk_batch(), mk_batch()) for _ in range(K)]
+
+
+def digest(tree):
+    crc = 0
+    for leaf in jax.tree.leaves(tree):
+        crc = zlib.crc32(np.asarray(leaf).tobytes(), crc)
+    return crc
+
+
+# ---- leg A: single fused learner, one half-batch per round
+train_step, opt = learner_lib.build_train_step(arch, icfg, A,
+                                               vtrace_impl="scan")
+fused = jax.jit(train_step)
+pA, oA = params, opt.init(params)
+for i, (h0, _h1) in enumerate(rounds):
+    pA, oA, _ = fused(pA, oA, jnp.int32(i), h0)
+jax.block_until_ready(pA)
+
+# ---- leg B: real hub/spoke group over the framed TCP channel
+grad_step, apply_step, opt2 = learner_lib.build_grad_apply_steps(
+    arch, icfg, A, vtrace_impl="scan")
+gs = jax.jit(grad_step)
+ap = jax.jit(apply_step)
+
+
+def run_group(feeds):
+    # the hub IS learner 0's exchange; the spoke dials in as learner 1
+    hub = GradHub(2, stale_after_s=60.0)
+    spoke = SpokeExchange(hub.address, 1, 2, dial_timeout_s=30.0)
+    out, versions = {}, {}
+
+    def worker(k, exchange):
+        p, o = params, opt2.init(params)
+        for i in range(K):
+            g, _ = gs(p, feeds[k][i])
+            leaves, td = jax.tree.flatten(g)
+            mean, version = exchange.allreduce(
+                [np.asarray(x) for x in leaves], round_idx=i)
+            versions.setdefault(k, []).append(version)
+            p, o, _ = ap(p, o, jnp.int32(i),
+                         jax.tree.unflatten(td, list(mean)))
+        jax.block_until_ready(p)
+        out[k] = p
+
+    threads = [threading.Thread(target=worker, args=(k, ex), daemon=True)
+               for k, ex in ((0, hub), (1, spoke))]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=180)
+    spoke.close()
+    hub.close()
+    assert set(out) == {0, 1}, "group leg did not finish"
+    return out, versions
+
+
+dup, vdup = run_group({0: [r[0] for r in rounds],
+                       1: [r[0] for r in rounds]})
+dist, _ = run_group({0: [r[0] for r in rounds],
+                     1: [r[1] for r in rounds]})
+
+# ---- leg C: spmd shard_map step on the real ('data',) mesh
+mesh = make_data_mesh(2)
+spmd_step, opt3 = learner_lib.build_spmd_train_step(arch, icfg, A, mesh,
+                                                    vtrace_impl="scan")
+spmd = jax.jit(spmd_step)
+rep = NamedSharding(mesh, P())
+devs = list(mesh.devices.flatten())
+
+
+def shard_concat(h0, h1):
+    def leaf(x0, x1):
+        x0, x1 = np.asarray(x0), np.asarray(x1)
+        pieces = [jax.device_put(x0, devs[0]), jax.device_put(x1, devs[1])]
+        return jax.make_array_from_single_device_arrays(
+            (x0.shape[0] + x1.shape[0],) + x0.shape[1:],
+            NamedSharding(mesh, P("data")), pieces)
+    return jax.tree.map(leaf, h0, h1)
+
+
+def run_spmd(pick):
+    p = jax.device_put(params, rep)
+    o = jax.device_put(opt3.init(params), rep)
+    for i, (h0, h1) in enumerate(rounds):
+        p, o, _ = spmd(p, o, jnp.int32(i), shard_concat(*pick(h0, h1)))
+    jax.block_until_ready(p)
+    return p
+
+
+pC_dup = run_spmd(lambda h0, h1: (h0, h0))
+pC_dist = run_spmd(lambda h0, h1: (h0, h1))
+
+print(json.dumps({
+    "A": digest(pA),
+    "B_dup": [digest(dup[0]), digest(dup[1])],
+    "B_dist": [digest(dist[0]), digest(dist[1])],
+    "C_dup": digest(pC_dup),
+    "C_dist": digest(pC_dist),
+    "versions": vdup.get(0, []),
+}))
+""")
+
+
+@pytest.mark.timeout_s(420)
+def test_spmd_group_single_digest_triangle_subprocess():
+    """Digest-equivalence triangle at equal global batch (forced 2
+    devices): after K=3 update rounds,
+
+    * dup halves (both shards carry the same trajectories): the spmd
+      shard_map step == both replicas of a real hub/spoke 2-learner
+      group == the single fused learner, bit-identical — the in-XLA
+      pmean over identical shards is the identity, like the group's
+      wire mean of identical gradients;
+    * distinct halves: spmd on concat(h0, h1) == the hub/spoke group
+      training one learner per half — pmean of per-shard sum-gradients
+      is exactly the hub's mean, so swapping the TCP exchange for the
+      collective changes no bit of the trained params.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SUBPROCESS_TRIANGLE],
+                       capture_output=True, text=True, env=env, timeout=400)
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    # dup: all three legs collapse to one digest
+    assert out["B_dup"][0] == out["B_dup"][1], out
+    assert out["A"] == out["B_dup"][0] == out["C_dup"], out
+    # distinct: group replicas identical, and spmd matches them
+    assert out["B_dist"][0] == out["B_dist"][1], out
+    assert out["C_dist"] == out["B_dist"][0], out
+    # distinct halves genuinely differ from the dup run
+    assert out["C_dist"] != out["C_dup"], out
+    # hub versions delegate round_idx + 1, matching CollectiveExchange
+    assert out["versions"] == [1, 2, 3], out
